@@ -1,0 +1,58 @@
+//! Quickstart: build a workload DAG, run it on three engines, compare.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use wukong::baselines::{run_dask, run_numpywren};
+use wukong::config::{Config, DaskConfig};
+use wukong::coordinator::run_wukong;
+use wukong::util::stats::{human_bytes, human_secs};
+use wukong::util::table::Table;
+use wukong::workloads::{svd, tr};
+
+fn main() {
+    let cfg = Config::default();
+
+    // 1. A DAG from the paper: tree reduction with 250 ms tasks (Fig. 9's
+    //    crossover point, where Wukong overtakes Dask-1000).
+    let tr_dag = tr::dag(tr::TrParams {
+        n: 1024,
+        chunk: 1,
+        delay: Some(wukong::sim::secs(0.25)),
+    });
+    // 2. And a heavier one: SVD2 on a 50k x 50k matrix.
+    let mut svd_cfg = cfg.clone();
+    svd_cfg.wukong.clustering_threshold = 1 << 20; // the `t` knob
+    let svd_dag = svd::svd2(svd::Svd2Params::paper(50));
+
+    let mut t = Table::new(vec![
+        "workload",
+        "engine",
+        "makespan",
+        "executors",
+        "KVS written",
+        "cost",
+    ]);
+    for (name, dag, c) in [("TR-1024 (250ms)", &tr_dag, &cfg), ("SVD2 50k", &svd_dag, &svd_cfg)]
+    {
+        let wk = run_wukong(dag, c, c.seed).metrics;
+        let np = run_numpywren(dag, c, c.seed);
+        let dk = run_dask(dag, c, &DaskConfig::workers_1000(), c.seed);
+        for (engine, m) in [("wukong", wk), ("numpywren", np), ("dask-1000", dk)] {
+            t.row(vec![
+                name.to_string(),
+                engine.to_string(),
+                human_secs(m.makespan_s),
+                m.executors_used.to_string(),
+                human_bytes(m.kvs.bytes_written as f64),
+                format!("${:.4}", m.dollars()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(decentralized scheduling + clustering + delayed I/O; see \
+         `wukong figure all` for the full paper reproduction)"
+    );
+}

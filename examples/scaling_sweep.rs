@@ -1,0 +1,67 @@
+//! Elastic-scaling sweep (Fig. 21 at full paper scale): strong, weak, and
+//! serverless scaling of Wukong vs (Num)PyWren on the simulator, printed
+//! as the same series the paper plots.
+//!
+//! ```bash
+//! cargo run --release --example scaling_sweep
+//! ```
+
+use wukong::baselines::run_pywren;
+use wukong::config::Config;
+use wukong::coordinator::run_wukong;
+use wukong::sim::secs;
+use wukong::util::table::Table;
+use wukong::workloads::micro;
+
+fn main() {
+    let base = Config::default();
+    let mut t = Table::new(vec![
+        "mode",
+        "delay (ms)",
+        "lambdas",
+        "wukong (s)",
+        "pywren (s)",
+        "speedup",
+    ]);
+    for &delay_ms in &[0u64, 100, 250, 500] {
+        let dur = secs(delay_ms as f64 / 1000.0);
+        // strong: 10k tasks over N executors
+        for &n in &[500usize, 1_000, 2_000, 5_000] {
+            let dag = micro::strong(10_000, n, dur);
+            row(&mut t, &base, "strong", delay_ms, n, &dag);
+        }
+        // weak: 10 tasks per executor
+        for &n in &[250usize, 500, 750, 1_000] {
+            let dag = micro::weak(n, 10, dur);
+            row(&mut t, &base, "weak", delay_ms, n, &dag);
+        }
+        // serverless: N tasks on N executors
+        for &n in &[1_000usize, 2_500, 5_000, 10_000] {
+            let dag = micro::serverless(n, dur);
+            row(&mut t, &base, "serverless", delay_ms, n, &dag);
+        }
+    }
+    println!("{}", t.render());
+}
+
+fn row(
+    t: &mut Table,
+    base: &Config,
+    mode: &str,
+    delay_ms: u64,
+    n: usize,
+    dag: &wukong::dag::Dag,
+) {
+    let mut cfg = base.clone();
+    cfg.lambda.concurrency_limit = cfg.lambda.concurrency_limit.max(n);
+    let wk = run_wukong(dag, &cfg, cfg.seed).metrics.makespan_s;
+    let pw = run_pywren(dag, &cfg, n, cfg.seed).makespan_s;
+    t.row(vec![
+        mode.to_string(),
+        delay_ms.to_string(),
+        n.to_string(),
+        format!("{wk:.2}"),
+        format!("{pw:.2}"),
+        format!("{:.1}x", pw / wk.max(1e-9)),
+    ]);
+}

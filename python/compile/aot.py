@@ -1,0 +1,157 @@
+"""AOT pipeline: lower every Layer-2 task op to an HLO-text artifact.
+
+Interchange format is HLO *text*, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<op>.hlo.txt`` per entry in ``ARTIFACTS`` plus ``manifest.json``
+describing shapes/dtypes/flops for the Rust runtime's artifact registry.
+Python runs ONLY here (build time); the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Each artifact: op name -> (callable, example input specs, flops estimate).
+# Shapes are the block shapes used by the Rust real engine's workloads
+# (examples/ and integration tests); the sim engine uses the analytic cost
+# model and is shape-independent.
+ARTIFACTS = {
+    # -- Tree reduction --------------------------------------------------
+    "tr_add_f32_8192": (model.tr_add, [spec(8192), spec(8192)], 8192),
+    "tr_root_f32_8192": (model.tr_root, [spec(8192)], 8192),
+    # -- Blocked GEMM ----------------------------------------------------
+    "gemm_block_f32_256": (
+        model.gemm_block,
+        [spec(256, 256), spec(256, 256)],
+        2 * 256**3,
+    ),
+    "gemm_acc_f32_256": (
+        model.gemm_acc,
+        [spec(256, 256), spec(256, 256), spec(256, 256)],
+        2 * 256**3 + 256**2,
+    ),
+    "block_add_f32_256": (
+        model.block_add,
+        [spec(256, 256), spec(256, 256)],
+        256**2,
+    ),
+    # -- TSQR ---------------------------------------------------------------
+    "qr_factor_f32_1024x128": (
+        model.qr_factor,
+        [spec(1024, 128)],
+        4 * 1024 * 1024 * 128,  # O(m^2 n) for the P-accumulating variant
+    ),
+    "qr_merge_f32_128": (
+        model.qr_merge,
+        [spec(128, 128), spec(128, 128)],
+        4 * 256 * 256 * 128,
+    ),
+    "q_apply_leaf_f32_1024x128": (
+        model.q_apply,
+        [spec(128, 128), spec(1024, 128)],
+        2 * 1024 * 128 * 128,
+    ),
+    "q_apply_half_f32_128": (
+        model.q_apply,
+        [spec(128, 128), spec(128, 128)],
+        2 * 128**3,
+    ),
+    # -- SVD1 substrate ----------------------------------------------------
+    "gram_f32_1024x128": (model.gram, [spec(1024, 128)], 2 * 1024 * 128 * 128),
+    "svd1_finish_f32_128": (
+        model.svd1_finish,
+        [spec(128, 128)],
+        12 * (128 * 127 // 2) * 12 * 128,  # sweeps * pairs * O(n) updates
+    ),
+    # -- SVC -----------------------------------------------------------------
+    "svc_grad_f32_1024x64": (
+        model.svc_partial_grad,
+        [spec(1024, 64), spec(1024), spec(64)],
+        4 * 1024 * 64,
+    ),
+    "svc_update_f32_64": (
+        model.svc_update,
+        [spec(64), spec(64), spec(1)],
+        2 * 64,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d) -> str:
+    return jnp.dtype(d).name
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "ops": {}}
+    for name, (fn, in_specs, flops) in sorted(ARTIFACTS.items()):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        outs = jax.tree_util.tree_leaves(out_avals)
+        manifest["ops"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                for s in in_specs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+                for o in outs
+            ],
+            "flops": int(flops),
+        }
+        print(f"  {name}: {len(text)} chars -> {fname}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated op subset (debug)"
+    )
+    args = ap.parse_args()
+    global ARTIFACTS
+    if args.only:
+        keep = set(args.only.split(","))
+        ARTIFACTS = {k: v for k, v in ARTIFACTS.items() if k in keep}
+    manifest = lower_all(args.out)
+    print(f"wrote {len(manifest['ops'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

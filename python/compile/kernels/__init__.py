@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for Wukong task compute hot-spots.
+
+Every kernel here is authored TPU-style (VMEM-tiled BlockSpecs, MXU-shaped
+128x128 blocks) but lowered with ``interpret=True`` so the resulting HLO
+runs on the CPU PJRT client used by the Rust runtime. See
+DESIGN.md "Hardware adaptation".
+"""
+
+from .matmul import matmul, matmul_acc
+from .add import add, scale_add
+from .reduce import row_sum, total_sum
+
+__all__ = [
+    "matmul",
+    "matmul_acc",
+    "add",
+    "scale_add",
+    "row_sum",
+    "total_sum",
+]

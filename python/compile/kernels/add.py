@@ -1,0 +1,70 @@
+"""Elementwise add / axpy Pallas kernels — the tree-reduction task body.
+
+The paper's TR microbenchmark sums adjacent array chunks pass-by-pass; in
+Wukong each pass is one Lambda task whose body is ``x + y`` over a chunk.
+On TPU this is a pure VPU (vector unit) kernel: stream (block,) tiles of
+both operands through VMEM and write the sum. Bandwidth-bound, so the only
+tunable is the tile size: large enough to amortize the HBM->VMEM DMA,
+small enough to fit (3 tiles resident).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _scale_add_kernel(a_ref, x_ref, y_ref, o_ref):
+    # o = a * x + y with a broadcast scalar held in SMEM-like (1,) block.
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+def _block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def add(x, y, *, block: int = 4096):
+    """o = x + y over 1-D chunks (the TR pairwise-add task)."""
+    (n,) = x.shape
+    assert x.shape == y.shape
+    b = _block(n, block)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def scale_add(a, x, y, *, block: int = 4096):
+    """o = a*x + y (axpy) — used by the SVC gradient-step task."""
+    (n,) = x.shape
+    assert x.shape == y.shape and a.shape == (1,)
+    b = _block(n, block)
+    return pl.pallas_call(
+        _scale_add_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(a, x, y)

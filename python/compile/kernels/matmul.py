@@ -1,0 +1,106 @@
+"""Tiled matmul Pallas kernel — the GEMM-task hot spot (Layer 1).
+
+The paper's GEMM / TSQR / SVD tasks bottom out in dense block matmuls that
+numpywren ran through BLAS on Lambda vCPUs. On TPU the same insight
+(cache-block the operands) becomes: keep one (bm, bk) tile of A, one
+(bk, bn) tile of B and the (bm, bn) accumulator resident in VMEM, sweep the
+K dimension in the innermost grid axis so the accumulator is revisited
+before eviction, and shape the tiles 128x128 to feed the MXU systolic
+array. The ``BlockSpec`` index maps below express exactly the HBM->VMEM
+schedule a CUDA kernel would express with threadblock tiling.
+
+VMEM footprint per grid step (f32, 128-tiles):
+    A tile + B tile + C tile = 3 * 128*128*4 B = 192 KiB
+which leaves ample headroom in a 16 MiB VMEM for double buffering.
+MXU work per step: bm*bn*bk = 2^21 MACs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid point (i, j, k): o[i,j] += x[i,k] @ y[k,j], zero-init at k==0."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _matmul_acc_kernel(c_ref, x_ref, y_ref, o_ref):
+    """Grid point (i, j, k): o[i,j] = c[i,j] + sum_k x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest tile <= ``want`` that divides ``dim`` (tiles must tile evenly)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x, y, *, bm: int = 128, bk: int = 128, bn: int = 128):
+    """C = X @ Y via the tiled Pallas kernel.
+
+    Shapes must be 2-D with an inner-dimension match; tile sizes are clipped
+    to divisors of the problem so arbitrary (small) test shapes work.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm, bk, bn = _block(m, bm), _block(k, bk), _block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_acc(c, x, y, *, bm: int = 128, bk: int = 128, bn: int = 128):
+    """O = C + X @ Y — the GEMM inner-product accumulation task.
+
+    The paper's blocked GEMM DAG chains `gemm_acc` tasks over the K block
+    index; fusing the addition into the kernel saves one full C round trip
+    through HBM per task.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and c.shape == (m, n), f"{c.shape} + {x.shape}@{y.shape}"
+    bm, bk, bn = _block(m, bm), _block(k, bk), _block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c, x, y)

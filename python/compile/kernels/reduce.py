@@ -1,0 +1,62 @@
+"""Reduction Pallas kernels — final TR sum and SVC loss terms.
+
+``total_sum`` streams (block,) tiles and accumulates into a (1,) VMEM
+scalar across the grid (sequential grid => the accumulator survives between
+steps, the Pallas idiom for cross-step reductions). ``row_sum`` reduces a
+(bm, n) panel per grid row.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _total_sum_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], keepdims=True)
+
+
+def _row_sum_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], axis=1)
+
+
+def _block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def total_sum(x, *, block: int = 4096):
+    """Scalar sum of a 1-D chunk (TR root task). Returns shape (1,)."""
+    (n,) = x.shape
+    b = _block(n, block)
+    return pl.pallas_call(
+        _total_sum_kernel,
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def row_sum(x, *, bm: int = 128):
+    """Per-row sum of a 2-D block — SVC per-sample loss aggregation."""
+    m, n = x.shape
+    b = _block(m, bm)
+    return pl.pallas_call(
+        _row_sum_kernel,
+        grid=(m // b,),
+        in_specs=[pl.BlockSpec((b, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x)

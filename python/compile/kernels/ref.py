@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel and L2 op (the ground truth).
+
+pytest asserts ``kernels.* == ref.*`` (allclose) across a hypothesis sweep
+of shapes/dtypes; the Rust integration tests re-check the same identities
+through the AOT artifacts, closing the loop python->HLO->PJRT->rust.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def matmul_acc(c, x, y):
+    return c + jnp.dot(x, y, preferred_element_type=c.dtype)
+
+
+def add(x, y):
+    return x + y
+
+
+def scale_add(a, x, y):
+    return a[0] * x + y
+
+
+def total_sum(x):
+    return jnp.sum(x, keepdims=True)
+
+
+def row_sum(x):
+    return jnp.sum(x, axis=1)
+
+
+def qr(a):
+    """Reference thin QR via numpy (NOT lowered — oracle only)."""
+    import numpy as np
+
+    q, r = np.linalg.qr(np.asarray(a))
+    return jnp.asarray(q), jnp.asarray(r)

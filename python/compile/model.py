@@ -1,0 +1,205 @@
+"""Layer-2 task compute graphs (JAX), calling the Layer-1 Pallas kernels.
+
+Each public function here is one *task body* in the paper's DAG workloads
+(TR, GEMM, TSQR, SVD, SVC). `aot.py` lowers each to an HLO-text artifact
+that the Rust coordinator executes through PJRT on the request path —
+Python never runs at serve time.
+
+Linear-algebra primitives that jaxlib implements as LAPACK custom-calls
+(`jnp.linalg.qr`, `cholesky`, `svd`, `eigh`) CANNOT appear here: the
+standalone xla_extension runtime has no jaxlib custom-call registry. QR is
+therefore a blocked Householder factorization in pure jnp ops (fori_loop +
+dot + where), and the SVD small-matrix step is a cyclic Jacobi eigensolver
+— both lower to plain HLO (while / dot / select).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+# --------------------------------------------------------------------------
+# TR — tree reduction task bodies
+# --------------------------------------------------------------------------
+
+def tr_add(x, y):
+    """One TR pass step: elementwise sum of two sibling chunks."""
+    return kernels.add(x, y)
+
+
+def tr_root(x):
+    """TR root: collapse the last chunk to a (1,) scalar."""
+    return kernels.total_sum(x)
+
+
+# --------------------------------------------------------------------------
+# GEMM — blocked matrix-multiply task bodies
+# --------------------------------------------------------------------------
+
+def gemm_block(a, b):
+    """C_ij partial product for one (i, k, j) block triple."""
+    return kernels.matmul(a, b)
+
+
+def gemm_acc(c, a, b):
+    """C_ij += A_ik @ B_kj — the K-chain accumulation task."""
+    return kernels.matmul_acc(c, a, b)
+
+
+def block_add(x, y):
+    """Pairwise reduction of partial products (tree-sum over K)."""
+    m, n = x.shape
+    return kernels.add(x.reshape(m * n), y.reshape(m * n)).reshape(m, n)
+
+
+# --------------------------------------------------------------------------
+# QR — blocked Householder factorization (TSQR / SVD substrate)
+# --------------------------------------------------------------------------
+
+def householder_qr(a):
+    """Thin QR of a tall-skinny block via Householder reflections.
+
+    Returns (Q: (m, n), R: (n, n)) with A = Q @ R, Q^T Q = I. Pure jnp ops
+    only: two `fori_loop`s of rank-1 updates (outer products -> HLO dot),
+    so the whole factorization lowers to plain HLO while-loops.
+
+    Two-pass thin-Q formulation (EXPERIMENTS.md §Perf L2): the R pass
+    stores the unit reflectors V (m, n) instead of accumulating the full
+    m×m product, and the Q pass applies them in reverse to the thin
+    identity — O(m·n²) total instead of O(m²·n), a ~4× flop cut at the
+    paper's (1024, 128) block shape.
+    """
+    m, n = a.shape
+    idx = jnp.arange(m)
+
+    def r_pass(j, carry):
+        r, vs = carry
+        col = r[:, j]
+        mask = idx >= j
+        x = jnp.where(mask, col, 0.0)
+        normx = jnp.sqrt(jnp.sum(x * x))
+        sign = jnp.where(x[j] >= 0.0, 1.0, -1.0)
+        alpha = -sign * normx
+        v = x - alpha * (idx == j).astype(a.dtype)
+        vnorm = jnp.sqrt(jnp.sum(v * v))
+        # Guard the (already upper-triangular) zero-column case.
+        v = jnp.where(vnorm > 0.0, v / jnp.maximum(vnorm, 1e-30), v)
+        r = r - jnp.outer(2.0 * v, v @ r)
+        vs = vs.at[:, j].set(v)
+        return r, vs
+
+    r, vs = jax.lax.fori_loop(
+        0, n, r_pass, (a, jnp.zeros((m, n), a.dtype))
+    )
+
+    def q_pass(i, q):
+        j = n - 1 - i  # reflectors applied in reverse: Q = H_1 … H_n I
+        v = vs[:, j]
+        return q - jnp.outer(2.0 * v, v @ q)
+
+    q = jax.lax.fori_loop(0, n, q_pass, jnp.eye(m, n, dtype=a.dtype))
+    r = jnp.triu(r[:n, :])              # clamp numerical noise below diag
+    return q, r
+
+
+def qr_factor(a):
+    """TSQR leaf task: factor one (m, n) input block."""
+    return householder_qr(a)
+
+
+def qr_merge(r_top, r_bot):
+    """TSQR merge task: QR of two stacked (n, n) R factors.
+
+    Returns (Q: (2n, n), R: (n, n)). The Q is needed to reconstruct the
+    global Q factor down the tree.
+    """
+    stacked = jnp.concatenate([r_top, r_bot], axis=0)
+    return householder_qr(stacked)
+
+
+def q_apply(q_parent_half, q_child):
+    """Back-propagate Q down the TSQR tree: Q_global_block = Q_child @ Q_half."""
+    return kernels.matmul(q_child, q_parent_half)
+
+
+# --------------------------------------------------------------------------
+# SVD substrate — Gram + Jacobi eigensolver (pure HLO)
+# --------------------------------------------------------------------------
+
+def gram(a):
+    """A^T A for the tall-skinny SVD (SVD1) normal-equations path."""
+    return kernels.matmul(a.T, a)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def jacobi_eigh(s, sweeps: int = 12):
+    """Eigendecomposition of a small symmetric matrix by cyclic Jacobi.
+
+    Returns (eigenvalues desc-sorted, eigenvectors as columns). Lowers to
+    an HLO while-loop of Givens row/column rotations (dynamic-update-slice
+    + vector math, O(n) per rotation) — plain HLO, no custom calls.
+    """
+    n = s.shape[0]
+
+    def rotate(carry, pq):
+        a, v = carry
+        p, q = pq[0], pq[1]
+        app, aqq, apq = a[p, p], a[q, q], a[p, q]
+        # Stable rotation angle (Golub & Van Loan §8.5).
+        tau = (aqq - app) / (2.0 * jnp.where(apq == 0.0, 1e-30, apq))
+        t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        t = jnp.where(apq == 0.0, 0.0, t)
+        c = 1.0 / jnp.sqrt(1.0 + t * t)
+        sn = t * c
+        # A <- J^T A J applied as two rank-limited row/col updates.
+        rowp, rowq = a[p, :], a[q, :]
+        a = a.at[p, :].set(c * rowp - sn * rowq)
+        a = a.at[q, :].set(sn * rowp + c * rowq)
+        colp, colq = a[:, p], a[:, q]
+        a = a.at[:, p].set(c * colp - sn * colq)
+        a = a.at[:, q].set(sn * colp + c * colq)
+        vp, vq = v[:, p], v[:, q]
+        v = v.at[:, p].set(c * vp - sn * vq)
+        v = v.at[:, q].set(sn * vp + c * vq)
+        return (a, v), None
+
+    pairs = jnp.array(
+        [(p, q) for p in range(n) for q in range(p + 1, n)], dtype=jnp.int32
+    )
+
+    def sweep(_, carry):
+        carry, _ = jax.lax.scan(rotate, carry, pairs)
+        return carry
+
+    a, v = jax.lax.fori_loop(
+        0, sweeps, sweep, (s, jnp.eye(n, dtype=s.dtype))
+    )
+    w = jnp.diagonal(a)
+    order = jnp.argsort(-w)
+    return w[order], v[:, order]
+
+
+def svd1_finish(g):
+    """SVD1 final task: eig of the (n, n) Gram matrix -> singular values."""
+    w, v = jacobi_eigh(g)
+    return jnp.sqrt(jnp.maximum(w, 0.0)), v
+
+
+# --------------------------------------------------------------------------
+# SVC — logistic/hinge gradient-step task bodies (Dask-ML style)
+# --------------------------------------------------------------------------
+
+def svc_partial_grad(xb, yb, w):
+    """Per-partition gradient of the logistic loss: X^T (sigmoid(Xw) - y)."""
+    m, n = xb.shape
+    z = kernels.matmul(xb, w.reshape(n, 1)).reshape(m)
+    p = jax.nn.sigmoid(z)
+    return kernels.matmul(xb.T, (p - yb).reshape(m, 1)).reshape(n)
+
+
+def svc_update(w, g, lr):
+    """w' = w - lr * g via the axpy kernel."""
+    return kernels.scale_add(-lr, g, w)

@@ -1,0 +1,7 @@
+"""Make `compile.*` importable whether pytest runs from repo root or
+python/ (the Makefile uses python/, the release test command uses root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

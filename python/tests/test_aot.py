@@ -1,0 +1,61 @@
+"""AOT pipeline checks: lowering emits parseable HLO text + sane manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    lowered = jax.jit(model.tr_add).lower(
+        jax.ShapeDtypeStruct((64,), jnp.float32),
+        jax.ShapeDtypeStruct((64,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_hlo_text_has_no_custom_calls():
+    # The Rust-side xla_extension runtime has no jaxlib custom-call registry;
+    # every artifact op must lower to plain HLO.
+    for name, (fn, specs, _) in aot.ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert "custom-call" not in text, f"{name} lowers to a custom call"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+class TestManifest:
+    def setup_method(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            self.manifest = json.load(f)
+
+    def test_all_ops_present(self):
+        assert set(self.manifest["ops"]) == set(aot.ARTIFACTS)
+
+    def test_files_exist_and_nonempty(self):
+        for name, entry in self.manifest["ops"].items():
+            path = os.path.join(ART_DIR, entry["file"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 100, name
+
+    def test_shapes_match_specs(self):
+        for name, entry in self.manifest["ops"].items():
+            _, specs, _ = aot.ARTIFACTS[name]
+            got = [tuple(i["shape"]) for i in entry["inputs"]]
+            want = [tuple(s.shape) for s in specs]
+            assert got == want, name
+
+    def test_flops_positive(self):
+        for name, entry in self.manifest["ops"].items():
+            assert entry["flops"] > 0, name

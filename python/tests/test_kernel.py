@@ -1,0 +1,130 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes (including non-128-multiples, exercising the
+divisor-clipping tile logic) and checks allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def arr(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+dims = st.integers(min_value=1, max_value=160)
+small_dims = st.integers(min_value=1, max_value=96)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=small_dims, k=small_dims, n=small_dims)
+    def test_matches_ref(self, m, k, n):
+        x, y = arr(m, k), arr(k, n)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    def test_mxu_shaped_blocks(self):
+        x, y = arr(256, 384), arr(384, 128)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    def test_k_sweep_accumulates_in_order(self):
+        # grid K axis must accumulate, not overwrite
+        x, y = arr(64, 512), arr(512, 64)
+        out = kernels.matmul(x, y, bm=64, bk=128, bn=64)
+        np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_identity(self):
+        x = arr(128, 128)
+        eye = jnp.eye(128, dtype=jnp.float32)
+        np.testing.assert_allclose(kernels.matmul(x, eye), x, rtol=1e-6)
+
+    def test_rectangular_tiles(self):
+        x, y = arr(96, 64), arr(64, 160)
+        np.testing.assert_allclose(
+            kernels.matmul(x, y, bm=32, bk=32, bn=32),
+            ref.matmul(x, y),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_mismatched_inner_dims_raises(self):
+        with pytest.raises(AssertionError):
+            kernels.matmul(arr(4, 5), arr(6, 4))
+
+
+class TestMatmulAcc:
+    @settings(max_examples=15, deadline=None)
+    @given(m=small_dims, k=small_dims, n=small_dims)
+    def test_matches_ref(self, m, k, n):
+        c, x, y = arr(m, n), arr(m, k), arr(k, n)
+        np.testing.assert_allclose(
+            kernels.matmul_acc(c, x, y),
+            ref.matmul_acc(c, x, y),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_zero_c_equals_matmul(self):
+        x, y = arr(64, 64), arr(64, 64)
+        z = jnp.zeros((64, 64), jnp.float32)
+        np.testing.assert_allclose(
+            kernels.matmul_acc(z, x, y), kernels.matmul(x, y), rtol=1e-5
+        )
+
+
+class TestAdd:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=10_000))
+    def test_matches_ref(self, n):
+        x, y = arr(n), arr(n)
+        np.testing.assert_allclose(kernels.add(x, y), ref.add(x, y), rtol=1e-6)
+
+    def test_exact_for_integers_in_float(self):
+        x = jnp.arange(4096, dtype=jnp.float32)
+        y = jnp.ones(4096, jnp.float32)
+        np.testing.assert_array_equal(kernels.add(x, y), x + 1.0)
+
+
+class TestScaleAdd:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=5_000))
+    def test_matches_ref(self, n):
+        a, x, y = arr(1), arr(n), arr(n)
+        np.testing.assert_allclose(
+            kernels.scale_add(a, x, y), ref.scale_add(a, x, y),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+class TestReduce:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=20_000))
+    def test_total_sum(self, n):
+        x = arr(n)
+        np.testing.assert_allclose(
+            kernels.total_sum(x), ref.total_sum(x), rtol=1e-3, atol=1e-3
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=small_dims, n=small_dims)
+    def test_row_sum(self, m, n):
+        x = arr(m, n)
+        np.testing.assert_allclose(
+            kernels.row_sum(x), ref.row_sum(x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_total_sum_cross_block_accumulation(self):
+        # multiple grid steps must accumulate into the same (1,) output
+        x = jnp.ones(8192, jnp.float32)
+        assert float(kernels.total_sum(x, block=1024)[0]) == 8192.0

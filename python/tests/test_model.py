@@ -1,0 +1,139 @@
+"""Layer-2 task-op correctness: QR, Jacobi eig, SVD/SVC steps vs numpy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+RNG = np.random.default_rng(7)
+
+
+def arr(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+class TestHouseholderQR:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.integers(min_value=8, max_value=300),
+        n=st.integers(min_value=1, max_value=48),
+    )
+    def test_reconstruction_and_orthogonality(self, m, n):
+        if m < n:
+            m = n
+        a = arr(m, n)
+        q, r = model.householder_qr(a)
+        np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=5e-4)
+        np.testing.assert_allclose(
+            np.asarray(q.T @ q), np.eye(n), atol=5e-4
+        )
+
+    def test_r_upper_triangular(self):
+        a = arr(64, 16)
+        _, r = model.householder_qr(a)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.tril(r, -1)), np.zeros((16, 16))
+        )
+
+    def test_matches_numpy_abs(self):
+        # QR is unique up to column signs; compare |R| and |Q|.
+        a = arr(128, 32)
+        q, r = model.householder_qr(a)
+        qn, rn = np.linalg.qr(np.asarray(a))
+        np.testing.assert_allclose(np.abs(r), np.abs(rn), atol=5e-4)
+        np.testing.assert_allclose(np.abs(q), np.abs(qn), atol=5e-4)
+
+    def test_rank_deficient_does_not_nan(self):
+        a = jnp.zeros((32, 8), jnp.float32)
+        q, r = model.householder_qr(a)
+        assert not bool(jnp.any(jnp.isnan(q))) and not bool(jnp.any(jnp.isnan(r)))
+
+    def test_paper_block_shape(self):
+        a = arr(1024, 128)
+        q, r = model.qr_factor(a)
+        assert q.shape == (1024, 128) and r.shape == (128, 128)
+        np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=2e-3)
+
+
+class TestQRMerge:
+    def test_merge_reconstructs_stack(self):
+        r1, r2 = jnp.triu(arr(32, 32)), jnp.triu(arr(32, 32))
+        q, r = model.qr_merge(r1, r2)
+        stacked = jnp.concatenate([r1, r2], axis=0)
+        np.testing.assert_allclose(np.asarray(q @ r), np.asarray(stacked), atol=5e-4)
+
+    def test_tsqr_two_level_identity(self):
+        # Full TSQR over 2 blocks == QR of the concatenated matrix.
+        a1, a2 = arr(128, 16), arr(128, 16)
+        q1, r1 = model.qr_factor(a1)
+        q2, r2 = model.qr_factor(a2)
+        qm, r = model.qr_merge(r1, r2)
+        gq1 = model.q_apply(qm[:16, :], q1)
+        gq2 = model.q_apply(qm[16:, :], q2)
+        a = np.concatenate([np.asarray(a1), np.asarray(a2)], axis=0)
+        gq = np.concatenate([np.asarray(gq1), np.asarray(gq2)], axis=0)
+        np.testing.assert_allclose(gq @ np.asarray(r), a, atol=5e-4)
+        np.testing.assert_allclose(gq.T @ gq, np.eye(16), atol=5e-4)
+
+
+class TestJacobiEigh:
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(min_value=2, max_value=24))
+    def test_eigendecomposition(self, n):
+        s = np.asarray(RNG.standard_normal((n, n)), np.float32)
+        s = jnp.asarray(s + s.T)
+        w, v = model.jacobi_eigh(s)
+        np.testing.assert_allclose(
+            np.asarray(v @ jnp.diag(w) @ v.T), np.asarray(s), atol=2e-3
+        )
+
+    def test_matches_numpy_eigvals(self):
+        s = np.asarray(RNG.standard_normal((32, 32)), np.float32)
+        s = s + s.T
+        w, _ = model.jacobi_eigh(jnp.asarray(s))
+        wn = np.sort(np.linalg.eigvalsh(s))[::-1]
+        np.testing.assert_allclose(np.asarray(w), wn, atol=2e-3)
+
+    def test_sorted_descending(self):
+        s = np.asarray(RNG.standard_normal((16, 16)), np.float32)
+        w, _ = model.jacobi_eigh(jnp.asarray(s + s.T))
+        w = np.asarray(w)
+        assert np.all(np.diff(w) <= 1e-6)
+
+
+class TestSVD1:
+    def test_singular_values_match_numpy(self):
+        a = arr(512, 32)
+        g = model.gram(a)
+        sv, _ = model.svd1_finish(g)
+        sn = np.linalg.svd(np.asarray(a), compute_uv=False)
+        np.testing.assert_allclose(np.asarray(sv), sn, rtol=1e-2, atol=1e-2)
+
+
+class TestSVC:
+    def test_partial_grad_matches_autodiff(self):
+        xb, yb, w = arr(64, 8), arr(64), arr(8)
+
+        def loss(w):
+            z = xb @ w
+            return jnp.sum(
+                jnp.logaddexp(0.0, z) - yb * z
+            )
+
+        g_auto = jax.grad(loss)(w)
+        g_ours = model.svc_partial_grad(xb, yb, w)
+        np.testing.assert_allclose(
+            np.asarray(g_ours), np.asarray(g_auto), rtol=1e-3, atol=1e-3
+        )
+
+    def test_update_step(self):
+        w, g = arr(16), arr(16)
+        lr = jnp.asarray([0.1], jnp.float32)
+        out = model.svc_update(w, g, lr)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(w) - 0.1 * np.asarray(g),
+            rtol=1e-5, atol=1e-6,
+        )

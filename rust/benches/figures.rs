@@ -1,0 +1,25 @@
+//! `cargo bench --bench figures` — regenerates every paper figure at full
+//! problem sizes and reports wall time per figure. (criterion is not in
+//! the offline crate set; this is a plain `harness = false` driver.)
+//!
+//! The rendered tables are the reproduction artifact: paste into
+//! EXPERIMENTS.md and compare shapes against the paper.
+
+use std::time::Instant;
+
+use wukong::config::Config;
+use wukong::figures;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = Config::default();
+    let total = Instant::now();
+    for id in figures::all_ids() {
+        let t0 = Instant::now();
+        let fig = figures::run(id, &cfg, quick).expect("registered figure");
+        let dt = t0.elapsed();
+        println!("== {} — {} [generated in {:.2?}]", fig.id, fig.caption, dt);
+        println!("{}", fig.table.render());
+    }
+    println!("total: {:.2?}", total.elapsed());
+}

@@ -1,0 +1,127 @@
+//! `cargo bench --bench hotpath` — microbenchmarks of the L3 hot paths
+//! plus real PJRT kernel latencies (L1/L2), with before/after numbers
+//! recorded in EXPERIMENTS.md §Perf. Plain `harness = false` driver
+//! (criterion is not in the offline crate set).
+//!
+//! Targets (DESIGN.md §Perf):
+//!  * DES engine:     ≥ 1M events/s
+//!  * Wukong sim:     10k-Lambda serverless scaling sweep ≪ 1 s
+//!  * real executor:  coordinator overhead per task ≪ the 50 ms invoke
+//!  * PJRT kernels:   per-op latency (informational; interpret=True CPU)
+
+use std::time::{Duration, Instant};
+
+use wukong::config::Config;
+use wukong::coordinator::run_wukong;
+use wukong::sim::{secs, Sim};
+use wukong::util::Rng;
+use wukong::workloads::{micro, svd, tsqr};
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> Duration {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed() / iters;
+    println!("{name:<44} {per:>12.2?}/iter  ({iters} iters)");
+    per
+}
+
+fn main() {
+    println!("== L3: DES engine ==");
+    let per = bench("des: 1M empty events", 5, || {
+        struct W;
+        let mut sim: Sim<W> = Sim::new();
+        for i in 0..1_000_000u64 {
+            sim.at(i, |_, _| {});
+        }
+        sim.run(&mut W);
+    });
+    let evps = 1_000_000.0 / per.as_secs_f64();
+    println!("  -> {:.1}M events/s (target >= 1M/s)", evps / 1e6);
+
+    let cfg = Config::default();
+    bench("wukong sim: serverless 10k lambdas", 3, || {
+        let mut c = cfg.clone();
+        c.lambda.concurrency_limit = 10_000;
+        let dag = micro::serverless(10_000, 0);
+        let r = run_wukong(&dag, &c, 1);
+        assert_eq!(r.metrics.tasks_executed, 10_000);
+    });
+    bench("wukong sim: strong 10k tasks / 1k chains", 3, || {
+        let dag = micro::strong(10_000, 1_000, secs(0.1));
+        run_wukong(&dag, &cfg, 1);
+    });
+    bench("wukong sim: TSQR 16.7M (~4096 leaves)", 1, || {
+        let dag = tsqr::dag(tsqr::TsqrParams::paper(16.7));
+        run_wukong(&dag, &cfg, 1);
+    });
+    bench("wukong sim: SVD2 50k full", 3, || {
+        let mut c = cfg.clone();
+        c.wukong.clustering_threshold = 1 << 20;
+        let dag = svd::svd2(svd::Svd2Params::paper(50));
+        run_wukong(&dag, &c, 1);
+    });
+
+    println!("\n== L3 substrates ==");
+    bench("rng: 10M u64", 10, || {
+        let mut r = Rng::new(1);
+        let mut acc = 0u64;
+        for _ in 0..10_000_000 {
+            acc ^= r.next_u64();
+        }
+        std::hint::black_box(acc);
+    });
+    bench("json: parse manifest 1000x", 5, || {
+        let text = std::fs::read_to_string("artifacts/manifest.json")
+            .unwrap_or_else(|_| r#"{"ops":{}}"#.into());
+        for _ in 0..1000 {
+            std::hint::black_box(
+                wukong::util::json::Json::parse(&text).unwrap(),
+            );
+        }
+    });
+
+    println!("\n== L1/L2: PJRT kernel latency (interpret-mode CPU) ==");
+    match wukong::runtime::SharedRuntime::load(
+        &wukong::runtime::default_artifact_dir(),
+    ) {
+        Ok(rt) => {
+            rt.warmup().expect("warmup");
+            let mut rng = Rng::new(7);
+            let t8192 = wukong::runtime::Tensor::new(
+                vec![8192],
+                rng.f32_vec(8192),
+            );
+            bench("pjrt: tr_add 8192", 50, || {
+                rt.execute("tr_add_f32_8192", &[t8192.clone(), t8192.clone()])
+                    .unwrap();
+            });
+            let m256 = wukong::runtime::Tensor::new(
+                vec![256, 256],
+                rng.f32_vec(256 * 256),
+            );
+            let per = bench("pjrt: gemm_block 256 (33.6 MFLOP)", 30, || {
+                rt.execute("gemm_block_f32_256", &[m256.clone(), m256.clone()])
+                    .unwrap();
+            });
+            println!(
+                "  -> {:.2} GFLOP/s effective",
+                2.0 * 256f64.powi(3) / per.as_secs_f64() / 1e9
+            );
+            let tall = wukong::runtime::Tensor::new(
+                vec![1024, 128],
+                rng.f32_vec(1024 * 128),
+            );
+            bench("pjrt: qr_factor 1024x128", 5, || {
+                rt.execute("qr_factor_f32_1024x128", &[tall.clone()]).unwrap();
+            });
+            bench("pjrt: gram 1024x128", 20, || {
+                rt.execute("gram_f32_1024x128", &[tall.clone()]).unwrap();
+            });
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+}

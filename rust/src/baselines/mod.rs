@@ -1,0 +1,19 @@
+//! Baseline engines the paper compares against (§4.1).
+//!
+//! * [`numpywren`] — central task queue + *stateless* Lambda executors:
+//!   every task's inputs and outputs round-trip through the KVS (the
+//!   locality anti-pattern Figs. 3–4 and 13–16 quantify).
+//! * [`pywren`] — numpywren's substrate: the centralized scheduler with a
+//!   fixed invoker-thread pool; used for the scaling comparisons
+//!   (Figs. 2 and 21).
+//! * [`dask`] — serverful Dask distributed: central scheduler over a VM
+//!   worker pool with data-local assignment (the paper's Dask-125 /
+//!   Dask-1000 configurations).
+
+pub mod dask;
+pub mod numpywren;
+pub mod pywren;
+
+pub use dask::run_dask;
+pub use numpywren::run_numpywren;
+pub use pywren::{pywren_launch_time, run_pywren};

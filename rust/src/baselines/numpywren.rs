@@ -1,0 +1,298 @@
+//! numpywren model: centralized queue scheduling with stateless executors
+//! (§1 method #3, §2.2).
+//!
+//! The provisioner launches `n_workers` Lambda executors through PyWren's
+//! invoker threads. Each executor loops: poll the central queue → read
+//! *all* task inputs from the KVS → compute → write the output to the KVS
+//! → notify the scheduler, which updates dependency counts and enqueues
+//! newly-ready tasks. No state survives between tasks — the design whose
+//! read/write amplification Figs. 3–4 measure.
+
+use std::collections::VecDeque;
+
+use crate::config::Config;
+use crate::dag::{Dag, TaskId, TaskNode};
+use crate::metrics::RunMetrics;
+use crate::platform::LambdaService;
+use crate::sim::{secs, to_secs, FifoResource, MultiResource, Sim, Time};
+use crate::storage::KvsModel;
+use crate::util::Rng;
+
+struct Worker {
+    started: Time,
+    nic: FifoResource,
+    ended: bool,
+}
+
+struct World {
+    cfg: Config,
+    dag: Dag,
+    kvs: KvsModel,
+    queue_srv: FifoResource,
+    queue: VecDeque<TaskId>,
+    remaining: Vec<usize>,
+    executed: Vec<bool>,
+    done: u64,
+    workers: Vec<Worker>,
+    lambda: LambdaService,
+    metrics: RunMetrics,
+    finish: Option<Time>,
+}
+
+impl World {
+    fn queue_op(&mut self, now: Time) -> Time {
+        let per = secs(1.0 / self.cfg.numpywren.queue_ops_per_sec.max(1.0));
+        let (_, end) = self.queue_srv.acquire(now, per);
+        end + secs(self.cfg.numpywren.queue_op_s)
+    }
+
+    fn compute_time(&self, t: TaskId) -> Time {
+        let node = self.dag.task(t);
+        match node.dur_override {
+            Some(d) => d + secs(self.cfg.compute.task_overhead_s),
+            None => secs(
+                node.flops / (self.cfg.lambda.gflops * 1e9)
+                    + self.cfg.compute.task_overhead_s,
+            ),
+        }
+    }
+}
+
+/// Worker polls the queue for work.
+fn poll(w: &mut World, sim: &mut Sim<World>, wid: usize) {
+    if w.done == w.dag.len() as u64 {
+        retire(w, sim, wid);
+        return;
+    }
+    // The Lambda runtime ceiling: numpywren re-invokes expired executors.
+    let age = sim.now().saturating_sub(w.workers[wid].started);
+    if age >= w.lambda.max_runtime() {
+        respawn(w, sim, wid);
+        return;
+    }
+    let t_op = w.queue_op(sim.now());
+    match w.queue.pop_front() {
+        Some(task) => {
+            sim.at(t_op, move |w, sim| execute(w, sim, wid, task));
+        }
+        None => {
+            let wait = secs(w.cfg.numpywren.poll_interval_s);
+            sim.at(t_op + wait, move |w, sim| poll(w, sim, wid));
+        }
+    }
+}
+
+/// Stateless task execution: read everything, compute, write everything.
+fn execute(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
+    let mut cursor = sim.now();
+    let parents = w.dag.task(t).parents.clone();
+    let net_bw = w.cfg.lambda.net_bw;
+    for p in parents {
+        let bytes = w.dag.task(p).out_bytes;
+        let shard_end = w.kvs.read(cursor, TaskNode::obj_key(p), bytes);
+        let (_, nic_end) = w.workers[wid]
+            .nic
+            .acquire(cursor, secs(bytes as f64 / net_bw));
+        let end = shard_end.max(nic_end);
+        w.metrics.breakdown.kvs_read_s += to_secs(end - cursor);
+        let sd = secs(bytes as f64 / w.cfg.compute.serde_bw);
+        w.metrics.breakdown.serde_s += to_secs(sd);
+        cursor = end + sd;
+    }
+    let ext = w.dag.task(t).input_bytes;
+    if ext > 0 {
+        let shard_end = w.kvs.read(cursor, TaskNode::input_key(t), ext);
+        let (_, nic_end) = w.workers[wid]
+            .nic
+            .acquire(cursor, secs(ext as f64 / net_bw));
+        let end = shard_end.max(nic_end);
+        w.metrics.breakdown.kvs_read_s += to_secs(end - cursor);
+        cursor = end + secs(ext as f64 / w.cfg.compute.serde_bw);
+    }
+    let d = w.compute_time(t);
+    w.metrics.breakdown.execute_s += to_secs(d);
+    cursor += d;
+    // Write the full output back (statelessness).
+    let out = w.dag.task(t).out_bytes;
+    let shard_end = w.kvs.write(cursor, TaskNode::obj_key(t), out);
+    let (_, nic_end) = w.workers[wid]
+        .nic
+        .acquire(cursor, secs(out as f64 / net_bw));
+    let end = shard_end.max(nic_end);
+    w.metrics.breakdown.kvs_write_s += to_secs(end - cursor);
+    cursor = end;
+    sim.at(cursor, move |w, sim| complete(w, sim, wid, t));
+}
+
+fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
+    assert!(
+        !std::mem::replace(&mut w.executed[t as usize], true),
+        "task executed twice"
+    );
+    w.metrics.tasks_executed += 1;
+    w.done += 1;
+    // Scheduler-side dependency update (one queue op per completion).
+    let t_op = w.queue_op(sim.now());
+    w.metrics.breakdown.publish_s += to_secs(t_op - sim.now());
+    let children = w.dag.task(t).children.clone();
+    for c in children {
+        w.remaining[c as usize] -= 1;
+        if w.remaining[c as usize] == 0 {
+            w.queue.push_back(c);
+        }
+    }
+    if w.done == w.dag.len() as u64 {
+        w.finish = Some(t_op);
+    }
+    sim.at(t_op, move |w, sim| poll(w, sim, wid));
+}
+
+fn retire(w: &mut World, sim: &mut Sim<World>, wid: usize) {
+    if std::mem::replace(&mut w.workers[wid].ended, true) {
+        return;
+    }
+    let dur = to_secs(sim.now().saturating_sub(w.workers[wid].started));
+    w.metrics.timeline.add(sim.now(), -1);
+    w.metrics
+        .billing
+        .charge_lambda(w.cfg.lambda.memory_gb, dur.max(0.001));
+    w.lambda.release();
+}
+
+fn respawn(w: &mut World, sim: &mut Sim<World>, wid: usize) {
+    retire(w, sim, wid);
+    let inv = w.lambda.invoke(sim.now());
+    let nid = w.workers.len();
+    w.workers.push(Worker {
+        started: inv.start_at,
+        nic: FifoResource::new(),
+        ended: false,
+    });
+    w.metrics.executors_used += 1;
+    sim.at(inv.start_at, move |w, sim| {
+        w.workers[nid].started = sim.now();
+        w.metrics.timeline.add(sim.now(), 1);
+        poll(w, sim, nid);
+    });
+}
+
+/// Run a numpywren job: `n_workers` stateless executors over the DAG.
+pub fn run_numpywren(dag: &Dag, cfg: &Config, seed: u64) -> RunMetrics {
+    let mut rng = Rng::new(seed);
+    let n = dag.len();
+    let mut w = World {
+        dag: dag.clone(),
+        kvs: KvsModel::new(cfg.storage.clone()),
+        queue_srv: FifoResource::new(),
+        queue: dag.leaves().into(),
+        remaining: dag.tasks().iter().map(|t| t.parents.len()).collect(),
+        executed: vec![false; n],
+        done: 0,
+        workers: Vec::new(),
+        lambda: LambdaService::new(cfg.lambda.clone(), rng.fork(1)),
+        metrics: RunMetrics::default(),
+        finish: None,
+        cfg: cfg.clone(),
+    };
+    let mut sim: Sim<World> = Sim::new();
+
+    // Provision the initial worker fleet through the invoker threads.
+    let mut invokers = MultiResource::new(cfg.numpywren.n_invoker_threads);
+    let per = secs(cfg.lambda.invoke_latency_s);
+    for _ in 0..cfg.numpywren.n_workers {
+        let (_, end) = invokers.acquire(0, per);
+        let inv = w.lambda.admit(end);
+        let wid = w.workers.len();
+        w.workers.push(Worker {
+            started: inv.start_at,
+            nic: FifoResource::new(),
+            ended: false,
+        });
+        w.metrics.executors_used += 1;
+        sim.at(inv.start_at, move |w, sim| {
+            w.workers[wid].started = sim.now();
+            w.metrics.timeline.add(sim.now(), 1);
+            poll(w, sim, wid);
+        });
+    }
+    sim.run(&mut w);
+
+    let makespan = to_secs(w.finish.unwrap_or(sim.now()));
+    w.metrics.makespan_s = makespan;
+    w.metrics.kvs = w.kvs.metrics;
+    w.metrics.invocations = w.lambda.total_invocations();
+    w.metrics.peak_concurrency = w.lambda.peak_active();
+    w.metrics.cpu_seconds =
+        w.metrics.timeline.integral_s() * w.lambda.vcpus_per_fn();
+    let hours = makespan / 3600.0;
+    // numpywren's S3 has no per-job cost here; single-Redis runs model an
+    // ElastiCache-like node; count the scheduler VM either way.
+    if cfg.storage.n_shards <= 2 {
+        w.metrics.billing.charge_elasticache(cfg.storage.n_shards, hours);
+    }
+    w.metrics.billing.charge_scheduler_vm(hours);
+    w.metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DagBuilder, OpKind};
+    use crate::workloads::micro;
+
+    #[test]
+    fn executes_all_tasks_exactly_once() {
+        let dag = micro::serverless(20, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 4;
+        let m = run_numpywren(&dag, &cfg, 1);
+        assert_eq!(m.tasks_executed, 20);
+    }
+
+    #[test]
+    fn stateless_design_reads_and_writes_everything() {
+        let mut b = DagBuilder::new("chain");
+        let a = b.task("a", OpKind::Generic, 1e6, 1000);
+        let c = b.task("c", OpKind::Generic, 1e6, 1000);
+        b.edge(a, c);
+        let dag = b.build().unwrap();
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 2;
+        let m = run_numpywren(&dag, &cfg, 2);
+        // both outputs written; the intermediate read back
+        assert_eq!(m.kvs.bytes_written, 2000);
+        assert_eq!(m.kvs.bytes_read, 1000);
+    }
+
+    #[test]
+    fn respects_dependencies() {
+        let mut b = DagBuilder::new("fanin");
+        let x = b.task("x", OpKind::Generic, 1e6, 100);
+        let y = b.task("y", OpKind::Generic, 1e6, 100);
+        let z = b.task("z", OpKind::Generic, 1e6, 100);
+        b.edge(x, z).edge(y, z);
+        let dag = b.build().unwrap();
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 3;
+        let m = run_numpywren(&dag, &cfg, 3);
+        assert_eq!(m.tasks_executed, 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let dag = micro::strong(100, 10, secs(0.01));
+        let cfg = Config::default();
+        let a = run_numpywren(&dag, &cfg, 9);
+        let b = run_numpywren(&dag, &cfg, 9);
+        assert_eq!(a.makespan_s, b.makespan_s);
+    }
+
+    #[test]
+    fn more_workers_do_not_break_small_jobs() {
+        let dag = micro::serverless(5, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 50;
+        let m = run_numpywren(&dag, &cfg, 4);
+        assert_eq!(m.tasks_executed, 5);
+    }
+}

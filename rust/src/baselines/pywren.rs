@@ -1,0 +1,67 @@
+//! PyWren model — numpywren's execution substrate (§2.2, Figs. 2, 21).
+//!
+//! PyWren's centralized scheduler uses a fixed pool of invoker threads
+//! (64 in the paper) issuing ~50 ms Lambda invocations serially per
+//! thread, and its stateless executors pull tasks through the central
+//! queue. `run_pywren` is the numpywren engine with worker count = the
+//! scaling experiment's Lambda count; `pywren_launch_time` isolates the
+//! fleet-scale-out time of Fig. 2.
+
+use crate::config::Config;
+use crate::dag::Dag;
+use crate::metrics::RunMetrics;
+use crate::sim::{secs, MultiResource};
+
+use super::numpywren::run_numpywren;
+
+/// Run a (Num)PyWren scaling job with `n_workers` Lambda executors.
+pub fn run_pywren(dag: &Dag, cfg: &Config, n_workers: usize, seed: u64) -> RunMetrics {
+    let mut cfg = cfg.clone();
+    cfg.numpywren.n_workers = n_workers;
+    run_numpywren(dag, &cfg, seed)
+}
+
+/// Fig. 2: time (s) until all `n` Lambda executors have been invoked by
+/// the scheduler's invoker-thread pool.
+pub fn pywren_launch_time(cfg: &Config, n: usize) -> f64 {
+    let mut pool = MultiResource::new(cfg.numpywren.n_invoker_threads);
+    let per = secs(cfg.lambda.invoke_latency_s);
+    let mut last = 0;
+    for _ in 0..n {
+        let (_, end) = pool.acquire(0, per);
+        last = last.max(end);
+    }
+    crate::sim::to_secs(last)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::micro;
+
+    #[test]
+    fn launch_time_scales_linearly_past_pool_size() {
+        let cfg = Config::default();
+        let t64 = pywren_launch_time(&cfg, 64);
+        let t6400 = pywren_launch_time(&cfg, 6400);
+        assert!((t64 - 0.05).abs() < 1e-9);
+        assert!((t6400 - 5.0).abs() < 1e-6); // 6400/64 × 50 ms
+    }
+
+    #[test]
+    fn ten_thousand_lambdas_take_minutes_not_seconds() {
+        // The paper: PyWren needs ~2 min to scale to 10k executors
+        // (invocations + queue pulls); the pure launch time alone is ~8 s.
+        let cfg = Config::default();
+        let t = pywren_launch_time(&cfg, 10_000);
+        assert!(t > 7.0 && t < 10.0, "launch={t}");
+    }
+
+    #[test]
+    fn run_pywren_sets_worker_count() {
+        let dag = micro::serverless(10, 0);
+        let m = run_pywren(&dag, &Config::default(), 10, 1);
+        assert_eq!(m.tasks_executed, 10);
+        assert!(m.executors_used >= 10);
+    }
+}

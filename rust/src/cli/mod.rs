@@ -1,0 +1,123 @@
+//! Minimal command-line parser (clap is not in the offline crate set).
+//!
+//! Grammar: `wukong <command> [positional...] [--flag] [--key value]
+//! [--set a.b=c ...]`. Unknown flags are errors; `--set` may repeat.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    /// Repeated `--set key=value` config overrides.
+    pub sets: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        // options that take a value
+        const VALUED: &[&str] = &["config", "runs", "seed", "out", "engine"];
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name == "set" {
+                    let kv = it
+                        .next()
+                        .ok_or_else(|| "--set needs key=value".to_string())?;
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("--set {kv:?}: expected key=value"))?;
+                    out.sets.insert(k.to_string(), v.to_string());
+                } else if VALUED.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} needs a value"))?;
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = a;
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+wukong — serverless parallel computing (SoCC '20 reproduction)
+
+USAGE:
+  wukong figure <id|all> [--quick] [--set a.b=c ...]   regenerate a paper figure
+  wukong run <workload> [--engine wukong|numpywren|dask1000|dask125]
+                         [--set a.b=c ...]             run one workload on the simulator
+  wukong dag <workload>                                print a workload DAG (DOT)
+  wukong list                                          list figures + workloads
+  wukong serve [--quick]                               real-engine demo (PJRT compute)
+
+WORKLOADS:
+  tr | gemm | tsqr | svd1 | svd2 | svc  (paper-default parameters)
+
+OPTIONS:
+  --config <file>   INI config (see configs/default.ini)
+  --set a.b=c       override any config key (repeatable)
+  --quick           shrunk problem sizes (tests/smoke)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let a = parse("figure fig14 --quick");
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional, vec!["fig14"]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn parses_sets_and_options() {
+        let a = parse(
+            "run tsqr --engine dask125 --set lambda.gflops=30 --set seed=1",
+        );
+        assert_eq!(a.opt("engine"), Some("dask125"));
+        assert_eq!(a.sets.get("lambda.gflops").map(String::as_str), Some("30"));
+        assert_eq!(a.sets.len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed_set() {
+        assert!(Args::parse(
+            ["figure".into(), "--set".into(), "nope".into()].into_iter()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn missing_option_value_is_error() {
+        assert!(
+            Args::parse(["run".into(), "--engine".into()].into_iter()).is_err()
+        );
+    }
+}

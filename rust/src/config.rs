@@ -1,0 +1,502 @@
+//! Configuration system: defaults matching the paper's §4.1 testbed, an
+//! INI-style config-file loader, and `key.path=value` CLI overrides.
+//!
+//! All latency/bandwidth constants are the *inputs* to the simulator; the
+//! defaults encode the paper's own numbers (50 ms Lambda invoke, 3 GB
+//! functions, 75 Fargate shards, 64 invoker processes, 256 KB inline-arg
+//! limit, 200 MB clustering threshold, 5 000-Lambda concurrency).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::sim::{secs, Time};
+
+/// AWS-Lambda-like platform model parameters.
+#[derive(Debug, Clone)]
+pub struct LambdaConfig {
+    /// Function memory (GB); AWS scales CPU linearly with memory.
+    pub memory_gb: f64,
+    /// Warm invocation latency (s) — the paper's ~50 ms Boto3 number.
+    pub invoke_latency_s: f64,
+    /// Cold-start penalty (s); evaluation warms the pool so default 0 use.
+    pub cold_start_s: f64,
+    /// Fraction of invocations that are cold (0 after warmup).
+    pub cold_fraction: f64,
+    /// Lognormal jitter sigma on invocation latency.
+    pub invoke_jitter_sigma: f64,
+    /// Max concurrent executors (paper's account limit: 5 000).
+    pub concurrency_limit: usize,
+    /// Max function runtime (s) — 420 s (7 min) in the evaluation.
+    pub max_runtime_s: f64,
+    /// Effective per-executor compute rate (GFLOP/s) for flops-modeled
+    /// tasks. Calibrated against real PJRT runs (see EXPERIMENTS.md §Perf).
+    pub gflops: f64,
+    /// Per-executor network bandwidth (bytes/s) — Lambda ~600 Mbps.
+    pub net_bw: f64,
+    /// Automatic retries of failed executions (AWS allows 2).
+    pub retries: u32,
+}
+
+impl Default for LambdaConfig {
+    fn default() -> Self {
+        LambdaConfig {
+            memory_gb: 3.0,
+            invoke_latency_s: 0.050,
+            cold_start_s: 0.5,
+            cold_fraction: 0.0,
+            invoke_jitter_sigma: 0.15,
+            concurrency_limit: 5_000,
+            max_runtime_s: 420.0,
+            gflops: 20.0,
+            net_bw: 75e6,
+            retries: 2,
+        }
+    }
+}
+
+/// Intermediate-storage backend flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvsMode {
+    /// Fargate-hosted Redis shards: low latency, per-shard bandwidth.
+    Redis,
+    /// S3: higher latency, throttled IOPS, high aggregate bandwidth.
+    S3,
+    /// ElastiCache: Redis-like latency, fewer shards (cost-prohibitive to
+    /// scale out — paper Fig. 23 baseline).
+    ElastiCache,
+}
+
+/// Storage-cluster model parameters (KVS + MDS + proxy).
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    pub mode: KvsMode,
+    /// Number of KVS shards (Fargate tasks). Paper uses 75.
+    pub n_shards: usize,
+    /// Per-shard sustained bandwidth (bytes/s). Fargate task ≈ 2.4 Gbps.
+    pub shard_bw: f64,
+    /// Per-op base latency (s): Redis ~1 ms, S3 ~15 ms.
+    pub op_latency_s: f64,
+    /// Per-shard IOPS cap (S3 throttling); 0 = uncapped.
+    pub iops_limit: f64,
+    /// MDS (dependency counters / schedules) op latency (s).
+    pub mds_latency_s: f64,
+    /// MDS throughput (ops/s) — a Redis instance on the scheduler VM.
+    pub mds_ops_per_sec: f64,
+    /// Max inline-argument payload on an invocation (bytes) — 256 KB.
+    pub arg_inline_max: u64,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            mode: KvsMode::Redis,
+            n_shards: 75,
+            shard_bw: 300e6,
+            op_latency_s: 0.001,
+            iops_limit: 0.0,
+            mds_latency_s: 0.0008,
+            mds_ops_per_sec: 150_000.0,
+            arg_inline_max: 256 * 1024,
+        }
+    }
+}
+
+impl StorageConfig {
+    /// Paper's "single Redis shard" comparison configuration.
+    pub fn single_redis(mut self) -> Self {
+        self.mode = KvsMode::Redis;
+        self.n_shards = 1;
+        self
+    }
+
+    /// Paper's numpywren-on-S3 configuration.
+    pub fn s3(mut self) -> Self {
+        self.mode = KvsMode::S3;
+        self.n_shards = 64; // S3 prefix parallelism stand-in
+        self.op_latency_s = 0.015;
+        self.iops_limit = 3_500.0;
+        self.shard_bw = 120e6;
+        self
+    }
+
+    /// Paper Fig. 23 ElastiCache baseline: few (costly) cache nodes.
+    pub fn elasticache(mut self) -> Self {
+        self.mode = KvsMode::ElastiCache;
+        self.n_shards = 5;
+        self.op_latency_s = 0.0008;
+        self.shard_bw = 600e6;
+        self
+    }
+}
+
+/// Wukong scheduler/executor policy knobs (§3.3–§3.4).
+#[derive(Debug, Clone)]
+pub struct WukongConfig {
+    /// Output-size threshold `t` above which fan-out targets are clustered.
+    pub clustering_threshold: u64,
+    /// Enable task clustering (Fig. 22/23 ablation flag).
+    pub use_clustering: bool,
+    /// Enable delayed I/O (Fig. 22/23 ablation flag).
+    pub use_delayed_io: bool,
+    /// Delayed-I/O recheck interval (s).
+    pub delayed_io_wait_s: f64,
+    /// Delayed-I/O recheck attempts before giving up and storing.
+    pub delayed_io_retries: u32,
+    /// Fan-outs wider than this are delegated to the invoker pool.
+    pub fanout_delegation_threshold: usize,
+    /// Dedicated invoker processes co-located with the static scheduler.
+    pub n_invokers: usize,
+}
+
+impl Default for WukongConfig {
+    fn default() -> Self {
+        WukongConfig {
+            clustering_threshold: 200 * 1024 * 1024,
+            use_clustering: true,
+            use_delayed_io: true,
+            delayed_io_wait_s: 0.01,
+            delayed_io_retries: 500,
+            fanout_delegation_threshold: 8,
+            n_invokers: 64,
+        }
+    }
+}
+
+/// Serverful Dask-distributed model parameters (§4.1 comparisons).
+#[derive(Debug, Clone)]
+pub struct DaskConfig {
+    pub n_workers: usize,
+    pub cores_per_worker: usize,
+    pub mem_per_worker_gb: f64,
+    /// Central-scheduler base service time per task message (s).
+    pub sched_msg_s: f64,
+    /// Additional scheduler service time per connected worker (s) — the
+    /// Dask-1000 "scheduler struggles with a thousand connections"
+    /// effect (§4.2, §6).
+    pub sched_msg_per_worker_s: f64,
+    /// Per-worker NIC bandwidth (bytes/s).
+    pub worker_bw: f64,
+    /// Per-core compute rate (GFLOP/s).
+    pub gflops_per_core: f64,
+    /// TCP dispatch latency scheduler->worker (s).
+    pub dispatch_latency_s: f64,
+    /// EC2 $/hour for the whole cluster (billing).
+    pub cluster_dollars_per_hour: f64,
+}
+
+impl DaskConfig {
+    /// Paper's 1 000-worker configuration: 1 000 × (2-core, 3 GB) workers
+    /// on 125 c5.4xlarge VMs — the "serverless-like" worst case.
+    pub fn workers_1000() -> DaskConfig {
+        DaskConfig {
+            n_workers: 1000,
+            cores_per_worker: 2,
+            mem_per_worker_gb: 3.0,
+            sched_msg_s: 0.0002,
+            sched_msg_per_worker_s: 1e-6,
+            worker_bw: 1.25e9 / 8.0, // share of a 10 Gbps VM NIC
+            gflops_per_core: 10.0,
+            dispatch_latency_s: 0.0005,
+            cluster_dollars_per_hour: 125.0 * 0.68,
+        }
+    }
+
+    /// Effective per-message scheduler service time for this worker count.
+    pub fn effective_msg_s(&self) -> f64 {
+        self.sched_msg_s + self.n_workers as f64 * self.sched_msg_per_worker_s
+    }
+
+    /// Paper's 125-worker configuration: one 16-core 24 GB worker per
+    /// c5.4xlarge VM — the serverful best case.
+    pub fn workers_125() -> DaskConfig {
+        DaskConfig {
+            n_workers: 125,
+            cores_per_worker: 16,
+            mem_per_worker_gb: 24.0,
+            sched_msg_s: 0.0002,
+            sched_msg_per_worker_s: 1e-6,
+            worker_bw: 1.25e9, // full 10 Gbps VM NIC
+            gflops_per_core: 10.0,
+            dispatch_latency_s: 0.0005,
+            cluster_dollars_per_hour: 125.0 * 0.68,
+        }
+    }
+}
+
+/// numpywren/PyWren baseline model parameters.
+#[derive(Debug, Clone)]
+pub struct NumpywrenConfig {
+    /// Initial executor (worker) count — a user-tuned knob in numpywren.
+    pub n_workers: usize,
+    /// SQS-like task-queue op latency (s).
+    pub queue_op_s: f64,
+    /// Queue service throughput (ops/s) — central contention point.
+    pub queue_ops_per_sec: f64,
+    /// Idle poll interval when the queue is empty (s).
+    pub poll_interval_s: f64,
+    /// PyWren scheduler invoker threads.
+    pub n_invoker_threads: usize,
+}
+
+impl Default for NumpywrenConfig {
+    fn default() -> Self {
+        NumpywrenConfig {
+            n_workers: 169,
+            queue_op_s: 0.030,
+            queue_ops_per_sec: 600.0,
+            poll_interval_s: 0.100,
+            n_invoker_threads: 64,
+        }
+    }
+}
+
+/// Task-compute cost model shared by all engines.
+#[derive(Debug, Clone)]
+pub struct ComputeConfig {
+    /// Fixed per-task runtime overhead (s): deserialize + dispatch.
+    pub task_overhead_s: f64,
+    /// Serialization throughput (bytes/s) charged on reads/writes/args.
+    pub serde_bw: f64,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig {
+            task_overhead_s: 0.001,
+            serde_bw: 1.2e9,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub lambda: LambdaConfig,
+    pub storage: StorageConfig,
+    pub wukong: WukongConfig,
+    pub numpywren: NumpywrenConfig,
+    pub compute: ComputeConfig,
+    /// Simulation seed (same seed + config ⇒ identical trace).
+    pub seed: u64,
+    /// Repetitions per data point (paper averages ten runs).
+    pub runs: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            lambda: LambdaConfig::default(),
+            storage: StorageConfig::default(),
+            wukong: WukongConfig::default(),
+            numpywren: NumpywrenConfig::default(),
+            compute: ComputeConfig::default(),
+            seed: 42,
+            runs: 3,
+        }
+    }
+}
+
+impl Config {
+    /// Warm invoke latency in virtual time.
+    pub fn invoke_latency(&self) -> Time {
+        secs(self.lambda.invoke_latency_s)
+    }
+
+    /// Load an INI-style file (`[section]` + `key = value`) over defaults.
+    pub fn from_file(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut cfg = Config::default();
+        for (section, key, value) in parse_ini(&text)? {
+            cfg.set(&format!("{section}.{key}"), &value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply a dotted-path override, e.g. `lambda.invoke_latency_s=0.05`.
+    pub fn set(&mut self, path: &str, value: &str) -> Result<(), String> {
+        let f = || -> Result<f64, String> {
+            value
+                .parse::<f64>()
+                .map_err(|e| format!("{path}: bad number {value:?}: {e}"))
+        };
+        let b = || -> Result<bool, String> {
+            value
+                .parse::<bool>()
+                .map_err(|e| format!("{path}: bad bool {value:?}: {e}"))
+        };
+        match path {
+            "seed" => self.seed = f()? as u64,
+            "runs" => self.runs = f()? as usize,
+            "lambda.memory_gb" => self.lambda.memory_gb = f()?,
+            "lambda.invoke_latency_s" => self.lambda.invoke_latency_s = f()?,
+            "lambda.cold_start_s" => self.lambda.cold_start_s = f()?,
+            "lambda.cold_fraction" => self.lambda.cold_fraction = f()?,
+            "lambda.invoke_jitter_sigma" => {
+                self.lambda.invoke_jitter_sigma = f()?
+            }
+            "lambda.concurrency_limit" => {
+                self.lambda.concurrency_limit = f()? as usize
+            }
+            "lambda.max_runtime_s" => self.lambda.max_runtime_s = f()?,
+            "lambda.gflops" => self.lambda.gflops = f()?,
+            "lambda.net_bw" => self.lambda.net_bw = f()?,
+            "lambda.retries" => self.lambda.retries = f()? as u32,
+            "storage.mode" => {
+                self.storage.mode = match value {
+                    "redis" => KvsMode::Redis,
+                    "s3" => KvsMode::S3,
+                    "elasticache" => KvsMode::ElastiCache,
+                    other => return Err(format!("unknown storage.mode {other}")),
+                }
+            }
+            "storage.n_shards" => self.storage.n_shards = f()? as usize,
+            "storage.shard_bw" => self.storage.shard_bw = f()?,
+            "storage.op_latency_s" => self.storage.op_latency_s = f()?,
+            "storage.iops_limit" => self.storage.iops_limit = f()?,
+            "storage.mds_latency_s" => self.storage.mds_latency_s = f()?,
+            "storage.mds_ops_per_sec" => self.storage.mds_ops_per_sec = f()?,
+            "storage.arg_inline_max" => {
+                self.storage.arg_inline_max = f()? as u64
+            }
+            "wukong.clustering_threshold" => {
+                self.wukong.clustering_threshold = f()? as u64
+            }
+            "wukong.use_clustering" => self.wukong.use_clustering = b()?,
+            "wukong.use_delayed_io" => self.wukong.use_delayed_io = b()?,
+            "wukong.delayed_io_wait_s" => self.wukong.delayed_io_wait_s = f()?,
+            "wukong.delayed_io_retries" => {
+                self.wukong.delayed_io_retries = f()? as u32
+            }
+            "wukong.fanout_delegation_threshold" => {
+                self.wukong.fanout_delegation_threshold = f()? as usize
+            }
+            "wukong.n_invokers" => self.wukong.n_invokers = f()? as usize,
+            "numpywren.n_workers" => self.numpywren.n_workers = f()? as usize,
+            "numpywren.queue_op_s" => self.numpywren.queue_op_s = f()?,
+            "numpywren.queue_ops_per_sec" => {
+                self.numpywren.queue_ops_per_sec = f()?
+            }
+            "numpywren.poll_interval_s" => self.numpywren.poll_interval_s = f()?,
+            "numpywren.n_invoker_threads" => {
+                self.numpywren.n_invoker_threads = f()? as usize
+            }
+            "compute.task_overhead_s" => self.compute.task_overhead_s = f()?,
+            "compute.serde_bw" => self.compute.serde_bw = f()?,
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+        Ok(())
+    }
+}
+
+/// Parse INI text into `(section, key, value)` triples.
+fn parse_ini(text: &str) -> Result<Vec<(String, String, String)>, String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            section = stripped
+                .strip_suffix(']')
+                .ok_or(format!("line {}: bad section header", lineno + 1))?
+                .trim()
+                .to_string();
+        } else if let Some((k, v)) = line.split_once('=') {
+            out.push((
+                section.clone(),
+                k.trim().to_string(),
+                v.trim().to_string(),
+            ));
+        } else {
+            return Err(format!("line {}: expected key = value", lineno + 1));
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a `--set a.b=c` style override list into an existing config.
+pub fn apply_overrides(
+    cfg: &mut Config,
+    overrides: &BTreeMap<String, String>,
+) -> Result<(), String> {
+    for (k, v) in overrides {
+        cfg.set(k, v)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = Config::default();
+        assert_eq!(c.lambda.memory_gb, 3.0);
+        assert_eq!(c.lambda.invoke_latency_s, 0.050);
+        assert_eq!(c.lambda.concurrency_limit, 5_000);
+        assert_eq!(c.storage.n_shards, 75);
+        assert_eq!(c.storage.arg_inline_max, 256 * 1024);
+        assert_eq!(c.wukong.clustering_threshold, 200 * 1024 * 1024);
+        assert_eq!(c.wukong.n_invokers, 64);
+    }
+
+    #[test]
+    fn set_overrides_work() {
+        let mut c = Config::default();
+        c.set("lambda.invoke_latency_s", "0.1").unwrap();
+        c.set("storage.mode", "s3").unwrap();
+        c.set("wukong.use_clustering", "false").unwrap();
+        assert_eq!(c.lambda.invoke_latency_s, 0.1);
+        assert_eq!(c.storage.mode, KvsMode::S3);
+        assert!(!c.wukong.use_clustering);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        assert!(c.set("nope.nope", "1").is_err());
+    }
+
+    #[test]
+    fn ini_parser_handles_sections_and_comments() {
+        let triples = parse_ini(
+            "# comment\n[lambda]\ninvoke_latency_s = 0.2 # inline\n\n[storage]\nn_shards=3\n",
+        )
+        .unwrap();
+        assert_eq!(
+            triples,
+            vec![
+                (
+                    "lambda".into(),
+                    "invoke_latency_s".into(),
+                    "0.2".into()
+                ),
+                ("storage".into(), "n_shards".into(), "3".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn storage_presets() {
+        let s3 = StorageConfig::default().s3();
+        assert_eq!(s3.mode, KvsMode::S3);
+        assert!(s3.iops_limit > 0.0);
+        let single = StorageConfig::default().single_redis();
+        assert_eq!(single.n_shards, 1);
+    }
+
+    #[test]
+    fn dask_presets_match_paper() {
+        let d1000 = DaskConfig::workers_1000();
+        let d125 = DaskConfig::workers_125();
+        // both are 2,000 cores / ~3,000 GB total
+        assert_eq!(d1000.n_workers * d1000.cores_per_worker, 2000);
+        assert_eq!(d125.n_workers * d125.cores_per_worker, 2000);
+        assert_eq!(d1000.n_workers as f64 * d1000.mem_per_worker_gb, 3000.0);
+        assert_eq!(d125.n_workers as f64 * d125.mem_per_worker_gb, 3000.0);
+    }
+}

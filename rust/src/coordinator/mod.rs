@@ -1,0 +1,16 @@
+//! The paper's contribution: Wukong's decentralized, locality-aware
+//! scheduling (§3).
+//!
+//! * [`static_schedule`] — §3.2: per-leaf DAG subgraphs computed by DFS.
+//! * [`policy`] — §3.3: the pure becomes/invokes + clustering + delayed-I/O
+//!   decision rules, shared verbatim by the simulator and the real engine.
+//! * [`sim_engine`] — the discrete-event Wukong driver used for every
+//!   paper figure.
+
+pub mod policy;
+pub mod sim_engine;
+pub mod static_schedule;
+
+pub use policy::{ChildClass, DispatchPlan};
+pub use sim_engine::{run_wukong, WukongReport};
+pub use static_schedule::{generate_schedules, StaticSchedule};

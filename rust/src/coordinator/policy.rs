@@ -1,0 +1,300 @@
+//! Pure dynamic-scheduling decision rules (§3.3) — engine-agnostic.
+//!
+//! After an executor finishes task `T`, it must decide, for each out-edge,
+//! whether to **become** the target's executor, **invoke** a new executor,
+//! **delegate** a wide fan-out to the invoker pool, **cluster** targets
+//! locally (large output), or **delay I/O** for unready fan-in targets.
+//! These rules are pure functions over dependency-availability facts so
+//! that both the simulator and the real engine execute byte-identical
+//! policy, and so they can be unit/property-tested in isolation.
+
+use crate::dag::{Dag, TaskId};
+
+/// How one child of a finished task is classified.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChildClass {
+    /// All dependencies satisfied by us — we may run or hand it off.
+    Ready,
+    /// Fan-in child whose other inputs are not all available yet.
+    NotReady,
+    /// Another executor already owns this child.
+    Claimed,
+}
+
+/// Dispatch decision for a finished task's out-edges.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DispatchPlan {
+    /// Child the executor *becomes* (runs next, locally, zero I/O).
+    pub becomes: Option<TaskId>,
+    /// Children to run locally after `becomes` (task clustering).
+    pub cluster_local: Vec<TaskId>,
+    /// Children to hand to freshly invoked executors.
+    pub invoke: Vec<TaskId>,
+    /// Whether `invoke` should go through the proxy's invoker pool.
+    pub delegate: bool,
+    /// Unready fan-in children to re-check under delayed I/O.
+    pub delay_watch: Vec<TaskId>,
+    /// Must the output object be written to the KVS now?
+    pub must_store: bool,
+}
+
+/// Policy knobs (mirrors `config::WukongConfig` without the sim deps).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyKnobs {
+    pub clustering_threshold: u64,
+    pub use_clustering: bool,
+    pub use_delayed_io: bool,
+    pub fanout_delegation_threshold: usize,
+    pub arg_inline_max: u64,
+}
+
+/// Build the dispatch plan for task `t`'s children.
+///
+/// `classify(c)` reports each child's availability as seen *after* this
+/// executor's own contribution is (or would be) counted; the caller is
+/// responsible for the atomic counter protocol — this function only turns
+/// availability facts into scheduling actions.
+pub fn plan_dispatch(
+    dag: &Dag,
+    t: TaskId,
+    out_bytes: u64,
+    knobs: &PolicyKnobs,
+    classify: impl Fn(TaskId) -> ChildClass,
+) -> DispatchPlan {
+    let children = &dag.task(t).children;
+    let mut plan = DispatchPlan::default();
+    if children.is_empty() {
+        // Sink: final results are always stored + published.
+        plan.must_store = true;
+        return plan;
+    }
+
+    let mut ready = Vec::new();
+    let mut not_ready = Vec::new();
+    for &c in children {
+        match classify(c) {
+            ChildClass::Ready => ready.push(c),
+            ChildClass::NotReady => not_ready.push(c),
+            ChildClass::Claimed => {}
+        }
+    }
+
+    let big = knobs.use_clustering && out_bytes > knobs.clustering_threshold;
+    if big {
+        // Task clustering (§3.3): execute every ready target locally to
+        // avoid moving the large object; watch unready ones (delayed I/O).
+        plan.becomes = ready.first().copied();
+        plan.cluster_local = ready.iter().skip(1).copied().collect();
+        if knobs.use_delayed_io {
+            plan.delay_watch = not_ready.clone();
+            // Store only if nothing can be delayed and remote consumers
+            // exist anyway (handled by the engine when delay expires).
+            plan.must_store = false;
+        } else {
+            // No delayed I/O: unready fan-ins force the store right away.
+            plan.must_store = !not_ready.is_empty();
+        }
+        return plan;
+    }
+
+    // Normal (small-output) fan-out: become one ready target, invoke
+    // executors for the rest (Case 1/2 of §3.3).
+    plan.becomes = ready.first().copied();
+    plan.invoke = ready.iter().skip(1).copied().collect();
+    plan.delegate = plan.invoke.len() >= knobs.fanout_delegation_threshold.max(1);
+    // The object must be stored if any unready fan-in child will be run by
+    // another executor later, or if invoked executors cannot take the
+    // object inline.
+    let inline_ok = out_bytes <= knobs.arg_inline_max;
+    plan.must_store = !not_ready.is_empty() || (!plan.invoke.is_empty() && !inline_ok);
+    plan
+}
+
+/// Fan-in availability classification from a dependency counter: given a
+/// child with `indegree` inputs of which `avail` are available *including
+/// ours*, is the child ready?
+pub fn fanin_ready(avail: u32, indegree: usize) -> bool {
+    avail as usize == indegree
+}
+
+/// Delayed-I/O hold: we keep our (large) input unavailable; the child can
+/// be claimed by us the moment all *other* inputs are available.
+pub fn holdout_ready(avail_others: u32, indegree: usize) -> bool {
+    avail_others as usize == indegree - 1
+}
+
+/// Holder election for delayed I/O: at most ONE parent of a fan-in may
+/// hold its object back, or two large-output parents deadlock each other
+/// until their retry budgets expire (both waiting to see `n-1`). The
+/// holder is the parent producing the largest object (ties broken by
+/// task id) — everyone else stores + increments immediately, so the
+/// holder's recheck converges after a single store latency instead of a
+/// full timeout. Deterministic and computable from the DAG alone, so the
+/// simulator and the real engine elect identically without coordination.
+pub fn should_hold(dag: &Dag, t: TaskId, child: TaskId) -> bool {
+    let mine = (dag.task(t).out_bytes, t);
+    dag.task(child)
+        .parents
+        .iter()
+        .all(|&p| p == t || (dag.task(p).out_bytes, p) <= mine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DagBuilder, OpKind};
+
+    fn knobs() -> PolicyKnobs {
+        PolicyKnobs {
+            clustering_threshold: 1000,
+            use_clustering: true,
+            use_delayed_io: true,
+            fanout_delegation_threshold: 4,
+            arg_inline_max: 256,
+        }
+    }
+
+    /// root -> {a, b, c}; d is a fan-in of a+b.
+    fn fanout_dag() -> Dag {
+        let mut b = DagBuilder::new("t");
+        let root = b.task("root", OpKind::Generic, 1.0, 10);
+        let a = b.task("a", OpKind::Generic, 1.0, 10);
+        let x = b.task("b", OpKind::Generic, 1.0, 10);
+        let c = b.task("c", OpKind::Generic, 1.0, 10);
+        let d = b.task("d", OpKind::Generic, 1.0, 10);
+        b.edge(root, a).edge(root, x).edge(root, c);
+        b.edge(a, d).edge(x, d);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn small_fanout_becomes_first_invokes_rest() {
+        let dag = fanout_dag();
+        let plan = plan_dispatch(&dag, 0, 100, &knobs(), |_| ChildClass::Ready);
+        assert_eq!(plan.becomes, Some(1));
+        assert_eq!(plan.invoke, vec![2, 3]);
+        assert!(!plan.delegate);
+        assert!(plan.cluster_local.is_empty());
+        // all children ready, object fits inline -> no store needed
+        assert!(!plan.must_store);
+    }
+
+    #[test]
+    fn large_output_clusters_locally() {
+        let dag = fanout_dag();
+        let plan =
+            plan_dispatch(&dag, 0, 10_000, &knobs(), |_| ChildClass::Ready);
+        assert_eq!(plan.becomes, Some(1));
+        assert_eq!(plan.cluster_local, vec![2, 3]);
+        assert!(plan.invoke.is_empty());
+        assert!(!plan.must_store); // nothing leaves this executor
+    }
+
+    #[test]
+    fn clustering_disabled_falls_back_to_invokes() {
+        let dag = fanout_dag();
+        let mut k = knobs();
+        k.use_clustering = false;
+        let plan = plan_dispatch(&dag, 0, 10_000, &k, |_| ChildClass::Ready);
+        assert!(plan.cluster_local.is_empty());
+        assert_eq!(plan.invoke.len(), 2);
+        // 10_000 > arg_inline_max -> invoked executors need the KVS copy
+        assert!(plan.must_store);
+    }
+
+    #[test]
+    fn unready_fanin_forces_store_when_small() {
+        let dag = fanout_dag();
+        let plan = plan_dispatch(&dag, 1, 100, &knobs(), |_| {
+            ChildClass::NotReady
+        });
+        assert_eq!(plan.becomes, None);
+        assert!(plan.must_store);
+    }
+
+    #[test]
+    fn unready_fanin_watched_when_large() {
+        let dag = fanout_dag();
+        let plan = plan_dispatch(&dag, 1, 10_000, &knobs(), |_| {
+            ChildClass::NotReady
+        });
+        assert_eq!(plan.delay_watch, vec![4]);
+        assert!(!plan.must_store); // delayed I/O: hold the object
+    }
+
+    #[test]
+    fn delayed_io_disabled_stores_immediately() {
+        let dag = fanout_dag();
+        let mut k = knobs();
+        k.use_delayed_io = false;
+        let plan =
+            plan_dispatch(&dag, 1, 10_000, &k, |_| ChildClass::NotReady);
+        assert!(plan.delay_watch.is_empty());
+        assert!(plan.must_store);
+    }
+
+    #[test]
+    fn wide_fanout_delegates() {
+        let mut b = DagBuilder::new("wide");
+        let root = b.task("root", OpKind::Generic, 1.0, 10);
+        let kids: Vec<_> = (0..10)
+            .map(|i| b.task(format!("k{i}"), OpKind::Generic, 1.0, 10))
+            .collect();
+        for &k in &kids {
+            b.edge(root, k);
+        }
+        let dag = b.build().unwrap();
+        let plan = plan_dispatch(&dag, 0, 100, &knobs(), |_| ChildClass::Ready);
+        assert_eq!(plan.invoke.len(), 9);
+        assert!(plan.delegate);
+    }
+
+    #[test]
+    fn claimed_children_are_skipped() {
+        let dag = fanout_dag();
+        let plan =
+            plan_dispatch(&dag, 0, 100, &knobs(), |_| ChildClass::Claimed);
+        assert_eq!(plan, DispatchPlan::default());
+    }
+
+    #[test]
+    fn sink_always_stores() {
+        let dag = fanout_dag();
+        let plan = plan_dispatch(&dag, 4, 100, &knobs(), |_| unreachable!());
+        assert!(plan.must_store);
+    }
+
+    #[test]
+    fn fanin_counter_rules() {
+        assert!(fanin_ready(3, 3));
+        assert!(!fanin_ready(2, 3));
+        assert!(holdout_ready(2, 3));
+        assert!(!holdout_ready(1, 3));
+    }
+
+    #[test]
+    fn exactly_one_holder_per_fanin() {
+        // equal-size parents: the higher task id holds, the other stores
+        let mut b = DagBuilder::new("hold");
+        let p0 = b.task("p0", OpKind::Generic, 1.0, 5000);
+        let p1 = b.task("p1", OpKind::Generic, 1.0, 5000);
+        let c = b.task("c", OpKind::Generic, 1.0, 10);
+        b.edge(p0, c).edge(p1, c);
+        let dag = b.build().unwrap();
+        assert!(!should_hold(&dag, p0, c));
+        assert!(should_hold(&dag, p1, c));
+    }
+
+    #[test]
+    fn largest_object_holds() {
+        // a big Q panel beats a small path-product regardless of id order
+        let mut b = DagBuilder::new("hold2");
+        let q = b.task("q", OpKind::Generic, 1.0, 2_000_000);
+        let prod = b.task("prod", OpKind::Generic, 1.0, 65_536);
+        let c = b.task("apply", OpKind::Generic, 1.0, 10);
+        b.edge(q, c).edge(prod, c);
+        let dag = b.build().unwrap();
+        assert!(should_hold(&dag, q, c));
+        assert!(!should_hold(&dag, prod, c));
+    }
+}

@@ -1,0 +1,650 @@
+//! The discrete-event Wukong engine: decentralized executors over the
+//! Lambda/KVS/MDS substrates (§3.3–§3.4).
+//!
+//! Every executor is an entity in the DES world; its life cycle is
+//! `invoke → begin → (fetch → compute → dispatch)* → return`. Dispatch
+//! runs the pure [`super::policy`] rules; fan-in ownership is decided by
+//! atomic MDS counter increments (exact in the DES because events are
+//! serialized); task clustering and delayed I/O keep large objects
+//! resident in the producing executor.
+//!
+//! Data availability is tracked as *times*, not bytes: a consumer's read
+//! of object `o` completes no earlier than the producer's write of `o`
+//! (`avail_at`), which models the blocking-poll reads of the real system.
+
+use std::collections::{HashSet, VecDeque};
+
+use crate::config::Config;
+use crate::dag::{Dag, TaskId, TaskNode};
+use crate::metrics::RunMetrics;
+use crate::platform::faults::FaultPlan;
+use crate::platform::LambdaService;
+use crate::sim::{secs, to_secs, FifoResource, Sim, Time};
+use crate::storage::{InvokerPool, KvsModel, MdsModel};
+use crate::util::Rng;
+
+use super::policy::{fanin_ready, holdout_ready, should_hold, PolicyKnobs};
+use super::static_schedule::generate_schedules;
+
+/// Result of one simulated Wukong run.
+#[derive(Debug, Clone)]
+pub struct WukongReport {
+    pub metrics: RunMetrics,
+    /// Events processed by the DES (L3 perf: events/sec).
+    pub sim_events: u64,
+}
+
+type ExecId = usize;
+
+struct Exec {
+    queue: VecDeque<TaskId>,
+    /// Parent outputs resident in this executor (incl. inline args).
+    /// A set, not a dense bitmap: executors touch O(schedule) tasks, and
+    /// a per-executor Vec<bool> of DAG size costs O(execs × tasks) memory
+    /// (100 MB churn on the 10k-Lambda sweeps — see EXPERIMENTS §Perf).
+    cache: HashSet<TaskId>,
+    nic: FifoResource,
+    started: Time,
+    pending_holds: usize,
+    idle: bool,
+    ended: bool,
+    attempt: u32,
+    first_task: TaskId,
+}
+
+struct World {
+    cfg: Config,
+    knobs: PolicyKnobs,
+    dag: Dag,
+    kvs: KvsModel,
+    mds: MdsModel,
+    lambda: LambdaService,
+    pool: InvokerPool,
+    execs: Vec<Exec>,
+    claimed: Vec<bool>,
+    executed: Vec<bool>,
+    /// Time at which a task's output becomes readable in the KVS.
+    avail_at: Vec<Time>,
+    stored: Vec<bool>,
+    metrics: RunMetrics,
+    sinks_done: usize,
+    n_sinks: usize,
+    finish: Option<Time>,
+    rng: Rng,
+    faults: FaultPlan,
+}
+
+impl World {
+    fn node(&self, t: TaskId) -> &TaskNode {
+        self.dag.task(t)
+    }
+
+    fn compute_time(&self, t: TaskId) -> Time {
+        let node = self.node(t);
+        match node.dur_override {
+            Some(d) => d + secs(self.cfg.compute.task_overhead_s),
+            None => {
+                secs(node.flops / (self.cfg.lambda.gflops * 1e9)
+                    + self.cfg.compute.task_overhead_s)
+            }
+        }
+    }
+
+    fn serde_time(&self, bytes: u64) -> Time {
+        secs(bytes as f64 / self.cfg.compute.serde_bw)
+    }
+
+    /// Sequential KVS read of `bytes` for object key `key`, not before
+    /// `floor` (producer's write completion). Returns completion time.
+    fn kvs_read(&mut self, eid: ExecId, at: Time, key: u64, bytes: u64, floor: Time) -> Time {
+        let shard_end = self.kvs.read(at, key, bytes);
+        let (_, nic_end) = self.execs[eid]
+            .nic
+            .acquire(at, secs(bytes as f64 / self.cfg.lambda.net_bw));
+        let end = shard_end.max(nic_end).max(floor);
+        self.metrics.breakdown.kvs_read_s += to_secs(end.saturating_sub(at));
+        end
+    }
+
+    fn kvs_write(&mut self, eid: ExecId, at: Time, key: u64, bytes: u64) -> Time {
+        let shard_end = self.kvs.write(at, key, bytes);
+        let (_, nic_end) = self.execs[eid]
+            .nic
+            .acquire(at, secs(bytes as f64 / self.cfg.lambda.net_bw));
+        let end = shard_end.max(nic_end);
+        self.metrics.breakdown.kvs_write_s += to_secs(end.saturating_sub(at));
+        end
+    }
+}
+
+/// Spawn a new executor whose schedule starts at `task`; `inline` carries
+/// parent outputs passed as invocation arguments (§3.3's 256 KB rule).
+fn spawn(w: &mut World, sim: &mut Sim<World>, task: TaskId, inline: Vec<TaskId>, start_at: Time, attempt: u32) {
+    let eid = w.execs.len();
+    let cache: HashSet<TaskId> = inline.iter().copied().collect();
+    w.execs.push(Exec {
+        queue: VecDeque::from([task]),
+        cache,
+        nic: FifoResource::new(),
+        started: start_at,
+        pending_holds: 0,
+        idle: false,
+        ended: false,
+        attempt,
+        first_task: task,
+    });
+    w.metrics.executors_used += 1;
+    sim.at(start_at, move |w, sim| begin(w, sim, eid));
+}
+
+fn begin(w: &mut World, sim: &mut Sim<World>, eid: ExecId) {
+    w.execs[eid].started = sim.now();
+    w.metrics.timeline.add(sim.now(), 1);
+    // Fault injection: a failing attempt dies immediately after start and
+    // is retried by the platform (§3.6), up to the retry budget.
+    let fails = {
+        let plan = w.faults.clone();
+        plan.p_fail > 0.0 && plan.attempt_fails(&mut w.rng)
+    };
+    if fails {
+        let attempt = w.execs[eid].attempt;
+        let task = w.execs[eid].first_task;
+        let inline: Vec<TaskId> = w.execs[eid].cache.iter().copied().collect();
+        end_exec(w, sim, eid);
+        if w.faults.can_retry(attempt) {
+            let inv = w.lambda.invoke(sim.now());
+            spawn(w, sim, task, inline, inv.start_at, attempt + 1);
+        } else {
+            w.metrics.failed_executors += 1; // job is failed (§3.6)
+        }
+        return;
+    }
+    process(w, sim, eid);
+}
+
+/// Drive the executor's local queue.
+fn process(w: &mut World, sim: &mut Sim<World>, eid: ExecId) {
+    if w.execs[eid].ended {
+        return;
+    }
+    let Some(t) = w.execs[eid].queue.pop_front() else {
+        if w.execs[eid].pending_holds == 0 {
+            end_exec(w, sim, eid);
+        } else {
+            w.execs[eid].idle = true; // waiting on delayed-I/O rechecks
+        }
+        return;
+    };
+    w.execs[eid].idle = false;
+
+    // Fetch phase: sequential reads of non-resident parent outputs.
+    // (indexed loop: avoids cloning the parent list on every task)
+    let mut cursor = sim.now();
+    for i in 0..w.node(t).parents.len() {
+        let p = w.node(t).parents[i];
+        if w.execs[eid].cache.contains(&p) {
+            continue;
+        }
+        let bytes = w.node(p).out_bytes;
+        let floor = w.avail_at[p as usize];
+        cursor = w.kvs_read(eid, cursor, TaskNode::obj_key(p), bytes, floor);
+        let sd = w.serde_time(bytes);
+        w.metrics.breakdown.serde_s += to_secs(sd);
+        cursor += sd;
+        w.execs[eid].cache.insert(p);
+    }
+    // External input partition (leaf tasks).
+    let ext = w.node(t).input_bytes;
+    if ext > 0 {
+        cursor = w.kvs_read(eid, cursor, TaskNode::input_key(t), ext, 0);
+        let sd = w.serde_time(ext);
+        w.metrics.breakdown.serde_s += to_secs(sd);
+        cursor += sd;
+    }
+
+    // Compute phase.
+    let d = w.compute_time(t);
+    w.metrics.breakdown.execute_s += to_secs(d);
+    cursor += d;
+    sim.at(cursor, move |w, sim| finish_task(w, sim, eid, t));
+}
+
+fn finish_task(w: &mut World, sim: &mut Sim<World>, eid: ExecId, t: TaskId) {
+    assert!(
+        !std::mem::replace(&mut w.executed[t as usize], true),
+        "task {t} executed twice"
+    );
+    w.metrics.tasks_executed += 1;
+    w.execs[eid].cache.insert(t);
+
+    if w.node(t).children.is_empty() {
+        publish_final(w, sim, eid, t);
+    } else {
+        dispatch(w, sim, eid, t);
+    }
+}
+
+/// Final results are stored and relayed to the scheduler's subscriber.
+fn publish_final(w: &mut World, sim: &mut Sim<World>, eid: ExecId, t: TaskId) {
+    let bytes = w.node(t).out_bytes;
+    let end = w.kvs_write(eid, sim.now(), TaskNode::obj_key(t), bytes);
+    w.avail_at[t as usize] = end;
+    w.stored[t as usize] = true;
+    let (_, msg_end) = w.mds.incr(end, 0xF1AA_0000_0000_0000 | t as u64);
+    w.metrics.breakdown.publish_s += to_secs(msg_end.saturating_sub(end));
+    sim.at(msg_end, move |w, _sim| {
+        w.sinks_done += 1;
+        if w.sinks_done == w.n_sinks {
+            w.finish = Some(msg_end);
+        }
+    });
+    sim.at(end, move |w, sim| process(w, sim, eid));
+}
+
+/// Dynamic scheduling after task `t` (§3.3): becomes / invokes /
+/// clustering / delayed I/O, with fan-in ownership via MDS counters.
+fn dispatch(w: &mut World, sim: &mut Sim<World>, eid: ExecId, t: TaskId) {
+    let children = w.node(t).children.clone();
+    let out_bytes = w.node(t).out_bytes;
+    let big = w.knobs.use_clustering && out_bytes > w.knobs.clustering_threshold;
+    let mut cursor = sim.now();
+
+    let mut ready: Vec<TaskId> = Vec::new();
+    let mut watch: Vec<TaskId> = Vec::new();
+    let mut store_targets: Vec<TaskId> = Vec::new();
+
+    if big {
+        // Clustering path: hold the large object; run every ready target
+        // here; for unready fan-ins, the elected holder watches (delayed
+        // I/O) while every other parent stores + increments immediately.
+        for &c in &children {
+            if w.claimed[c as usize] {
+                continue;
+            }
+            let indeg = w.node(c).indegree();
+            if indeg <= 1 {
+                w.claimed[c as usize] = true;
+                ready.push(c);
+            } else {
+                let (avail, t_mds) = w.mds.read(cursor, c as u64);
+                w.metrics.breakdown.publish_s +=
+                    to_secs(t_mds.saturating_sub(cursor));
+                cursor = t_mds;
+                if holdout_ready(avail, indeg) {
+                    w.claimed[c as usize] = true;
+                    ready.push(c);
+                } else if w.knobs.use_delayed_io && should_hold(&w.dag, t, c) {
+                    watch.push(c);
+                } else {
+                    store_targets.push(c);
+                }
+            }
+        }
+        if !store_targets.is_empty() {
+            if !w.stored[t as usize] {
+                let end =
+                    w.kvs_write(eid, cursor, TaskNode::obj_key(t), out_bytes);
+                w.avail_at[t as usize] = end;
+                w.stored[t as usize] = true;
+                cursor = end;
+            }
+            for c in store_targets.drain(..) {
+                if w.claimed[c as usize] {
+                    continue;
+                }
+                let indeg = w.node(c).indegree();
+                let (new, t_mds) = w.mds.incr(cursor, c as u64);
+                cursor = t_mds;
+                if fanin_ready(new, indeg) {
+                    w.claimed[c as usize] = true;
+                    ready.push(c);
+                }
+            }
+        }
+    } else {
+        // Normal path (§3.3 fan-in Cases 1–2): atomically increment each
+        // fan-in child's counter first; claim the ones our increment
+        // completed (they run here — Case 1, no store). Store only when a
+        // child remains unready (its eventual executor reads us from the
+        // KVS — Case 2) or when invoked executors cannot take the object
+        // inline. Consumers' reads are floored at our write completion
+        // (`avail_at`), modeling the real system's blocking poll reads.
+        let mut any_unready = false;
+        for &c in &children {
+            if w.claimed[c as usize] {
+                continue;
+            }
+            let indeg = w.node(c).indegree();
+            if indeg <= 1 {
+                w.claimed[c as usize] = true;
+                ready.push(c);
+            } else {
+                let (new, t_mds) = w.mds.incr(cursor, c as u64);
+                w.metrics.breakdown.publish_s +=
+                    to_secs(t_mds.saturating_sub(cursor));
+                cursor = t_mds;
+                if fanin_ready(new, indeg) && !w.claimed[c as usize] {
+                    w.claimed[c as usize] = true;
+                    ready.push(c);
+                } else {
+                    any_unready = true; // a later parent will claim it
+                }
+            }
+        }
+        let inline_ok = out_bytes <= w.knobs.arg_inline_max;
+        if (any_unready || (ready.len() > 1 && !inline_ok))
+            && !w.stored[t as usize]
+        {
+            let end =
+                w.kvs_write(w_eid(eid), cursor, TaskNode::obj_key(t), out_bytes);
+            w.avail_at[t as usize] = end;
+            w.stored[t as usize] = true;
+            cursor = end;
+        }
+    }
+
+    // Becomes + invokes / clustering.
+    let becomes = ready.first().copied();
+    let rest: Vec<TaskId> = ready.iter().skip(1).copied().collect();
+    if let Some(b) = becomes {
+        w.execs[eid].queue.push_front(b);
+    }
+    if big {
+        // Task clustering: all other ready targets run locally too.
+        for c in rest {
+            w.execs[eid].queue.push_back(c);
+        }
+    } else if !rest.is_empty() {
+        let inline_ok = out_bytes <= w.knobs.arg_inline_max;
+        let inline: Vec<TaskId> = if inline_ok { vec![t] } else { vec![] };
+        if !inline_ok && !w.stored[t as usize] {
+            let end = w.kvs_write(eid, cursor, TaskNode::obj_key(t), out_bytes);
+            w.avail_at[t as usize] = end;
+            w.stored[t as usize] = true;
+            cursor = end;
+        }
+        if rest.len() >= w.knobs.fanout_delegation_threshold.max(1) {
+            // Delegate the wide fan-out to the proxy's invoker pool: one
+            // published message, then parallel invocations.
+            let (_, msg_end) = w.mds.incr(cursor, 0xDE1E_0000_0000_0000 | t as u64);
+            w.metrics.breakdown.publish_s += to_secs(msg_end.saturating_sub(cursor));
+            let per = w.lambda.sample_invoke_latency();
+            let ends = w.pool.invoke_batch(msg_end, rest.len(), per);
+            for (c, end) in rest.into_iter().zip(ends) {
+                let inv = w.lambda.admit(end);
+                spawn(w, sim, c, inline.clone(), inv.start_at, 0);
+            }
+        } else {
+            // Sequential self-invocation: each API call blocks the
+            // executor for ~the invocation latency.
+            for c in rest {
+                let lat = w.lambda.sample_invoke_latency();
+                w.metrics.breakdown.invoke_s += to_secs(lat);
+                cursor += lat;
+                let inv = w.lambda.admit(cursor);
+                spawn(w, sim, c, inline.clone(), inv.start_at, 0);
+            }
+        }
+    }
+
+    // Delayed I/O watches (§3.3): recheck unready fan-ins later.
+    for c in watch {
+        w.execs[eid].pending_holds += 1;
+        let retries = w.knobs_delayed_retries();
+        let wait = secs(w.cfg.wukong.delayed_io_wait_s);
+        sim.at(cursor + wait, move |w, sim| {
+            recheck(w, sim, eid, t, c, retries)
+        });
+    }
+
+    sim.at(cursor, move |w, sim| process(w, sim, eid));
+}
+
+impl World {
+    fn knobs_delayed_retries(&self) -> u32 {
+        self.cfg.wukong.delayed_io_retries
+    }
+}
+
+// Small helper so the borrow in `dispatch` reads clearly.
+fn w_eid(eid: ExecId) -> ExecId {
+    eid
+}
+
+/// Delayed-I/O recheck: claim the fan-in the moment every *other* input is
+/// available; on exhausted retries store the object and fall back to the
+/// counter protocol (§3.3 "checking the unready objects one more time").
+fn recheck(
+    w: &mut World,
+    sim: &mut Sim<World>,
+    eid: ExecId,
+    t: TaskId,
+    c: TaskId,
+    retries_left: u32,
+) {
+    if w.claimed[c as usize] {
+        resolve_hold(w, sim, eid);
+        return;
+    }
+    let indeg = w.node(c).indegree();
+    let (avail, t_mds) = w.mds.read(sim.now(), c as u64);
+    w.metrics.breakdown.publish_s += to_secs(t_mds.saturating_sub(sim.now()));
+    if holdout_ready(avail, indeg) {
+        w.claimed[c as usize] = true;
+        w.execs[eid].queue.push_back(c);
+        resolve_hold(w, sim, eid);
+    } else if retries_left > 0 {
+        let wait = secs(w.cfg.wukong.delayed_io_wait_s);
+        sim.at(t_mds + wait, move |w, sim| {
+            recheck(w, sim, eid, t, c, retries_left - 1)
+        });
+    } else {
+        // Give up: store the object, increment, maybe still claim.
+        let mut cursor = t_mds;
+        if !w.stored[t as usize] {
+            let end = w.kvs_write(eid, cursor, TaskNode::obj_key(t), w.node(t).out_bytes);
+            w.avail_at[t as usize] = end;
+            w.stored[t as usize] = true;
+            cursor = end;
+        }
+        let (new, t2) = w.mds.incr(cursor, c as u64);
+        let final_claim = fanin_ready(new, indeg) && !w.claimed[c as usize];
+        if final_claim {
+            w.claimed[c as usize] = true;
+            w.execs[eid].queue.push_back(c);
+        }
+        sim.at(t2, move |w, sim| resolve_hold(w, sim, eid));
+    }
+}
+
+fn resolve_hold(w: &mut World, sim: &mut Sim<World>, eid: ExecId) {
+    w.execs[eid].pending_holds -= 1;
+    if w.execs[eid].idle {
+        process(w, sim, eid);
+    }
+}
+
+fn end_exec(w: &mut World, sim: &mut Sim<World>, eid: ExecId) {
+    if std::mem::replace(&mut w.execs[eid].ended, true) {
+        return;
+    }
+    let dur = to_secs(sim.now().saturating_sub(w.execs[eid].started));
+    w.metrics.timeline.add(sim.now(), -1);
+    w.metrics
+        .billing
+        .charge_lambda(w.cfg.lambda.memory_gb, dur.max(0.001));
+    w.lambda.release();
+}
+
+/// Run a full Wukong job on the simulator.
+pub fn run_wukong(dag: &Dag, cfg: &Config, seed: u64) -> WukongReport {
+    run_wukong_faulty(dag, cfg, seed, FaultPlan::default())
+}
+
+/// Run with fault injection (§3.6 retry contract).
+pub fn run_wukong_faulty(
+    dag: &Dag,
+    cfg: &Config,
+    seed: u64,
+    faults: FaultPlan,
+) -> WukongReport {
+    let mut rng = Rng::new(seed);
+    let knobs = PolicyKnobs {
+        clustering_threshold: cfg.wukong.clustering_threshold,
+        use_clustering: cfg.wukong.use_clustering,
+        use_delayed_io: cfg.wukong.use_delayed_io,
+        fanout_delegation_threshold: cfg.wukong.fanout_delegation_threshold,
+        arg_inline_max: cfg.storage.arg_inline_max,
+    };
+    let n = dag.len();
+    let n_sinks = dag.sinks().len();
+    let mut w = World {
+        knobs,
+        dag: dag.clone(),
+        kvs: KvsModel::new(cfg.storage.clone()),
+        mds: MdsModel::new(&cfg.storage),
+        lambda: LambdaService::new(cfg.lambda.clone(), rng.fork(1)),
+        pool: InvokerPool::new(cfg.wukong.n_invokers),
+        execs: Vec::new(),
+        claimed: vec![false; n],
+        executed: vec![false; n],
+        avail_at: vec![0; n],
+        stored: vec![false; n],
+        metrics: RunMetrics::default(),
+        sinks_done: 0,
+        n_sinks,
+        finish: None,
+        rng: rng.fork(2),
+        faults,
+        cfg: cfg.clone(),
+    };
+    let mut sim: Sim<World> = Sim::new();
+
+    // Initial-Executor Invokers: the static scheduler's invoker pool
+    // launches one executor per static schedule (leaf), in parallel.
+    let schedules = generate_schedules(dag);
+    let per = secs(cfg.lambda.invoke_latency_s);
+    let ends = w.pool.invoke_batch(0, schedules.len(), per);
+    for (sched, end) in schedules.iter().zip(ends) {
+        let leaf = sched.leaf;
+        w.claimed[leaf as usize] = true;
+        let inv = w.lambda.admit(end);
+        spawn(&mut w, &mut sim, leaf, vec![], inv.start_at, 0);
+    }
+    sim.run(&mut w);
+
+    // Assemble metrics.
+    let makespan = to_secs(w.finish.unwrap_or(sim.now()));
+    w.metrics.makespan_s = makespan;
+    w.metrics.kvs = w.kvs.metrics;
+    w.metrics.invocations = w.lambda.total_invocations();
+    w.metrics.peak_concurrency = w.lambda.peak_active();
+    w.metrics.cpu_seconds =
+        w.metrics.timeline.integral_s() * w.lambda.vcpus_per_fn();
+    // Tenant-side non-Lambda costs for the job's duration.
+    let hours = makespan / 3600.0;
+    w.metrics.billing.charge_fargate(cfg.storage.n_shards, 4.0, 30.0, hours);
+    w.metrics.billing.charge_scheduler_vm(hours);
+    WukongReport {
+        metrics: w.metrics,
+        sim_events: sim.processed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DagBuilder, OpKind};
+
+    fn chain(n: usize) -> Dag {
+        let mut b = DagBuilder::new("chain");
+        let mut prev = b.task("t0", OpKind::Sleep, 0.0, 8);
+        b.with_duration(prev, secs(0.01));
+        for i in 1..n {
+            let t = b.task(format!("t{i}"), OpKind::Sleep, 0.0, 8);
+            b.with_duration(t, secs(0.01));
+            b.edge(prev, t);
+            prev = t;
+        }
+        b.build().unwrap()
+    }
+
+    fn diamond() -> Dag {
+        let mut b = DagBuilder::new("diamond");
+        let a = b.task("a", OpKind::Generic, 1e6, 100);
+        let x = b.task("x", OpKind::Generic, 1e6, 100);
+        let y = b.task("y", OpKind::Generic, 1e6, 100);
+        let d = b.task("d", OpKind::Generic, 1e6, 100);
+        b.edge(a, x).edge(a, y).edge(x, d).edge(y, d);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn chain_runs_on_one_executor() {
+        let dag = chain(16);
+        let r = run_wukong(&dag, &Config::default(), 1);
+        assert_eq!(r.metrics.tasks_executed, 16);
+        assert_eq!(r.metrics.executors_used, 1);
+        // A chain never touches the KVS except the final publish.
+        assert_eq!(r.metrics.kvs.writes, 1);
+        assert_eq!(r.metrics.kvs.reads, 0);
+    }
+
+    #[test]
+    fn diamond_executes_each_task_once() {
+        let dag = diamond();
+        let r = run_wukong(&dag, &Config::default(), 2);
+        assert_eq!(r.metrics.tasks_executed, 4);
+        // fan-out invokes exactly one extra executor
+        assert_eq!(r.metrics.executors_used, 2);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_metrics() {
+        let dag = diamond();
+        let a = run_wukong(&dag, &Config::default(), 7);
+        let b = run_wukong(&dag, &Config::default(), 7);
+        assert_eq!(a.metrics.makespan_s, b.metrics.makespan_s);
+        assert_eq!(a.metrics.kvs, b.metrics.kvs);
+        assert_eq!(a.sim_events, b.sim_events);
+    }
+
+    #[test]
+    fn clustering_eliminates_kvs_traffic_for_large_outputs() {
+        let mut b = DagBuilder::new("big-fanout");
+        let root = b.task("root", OpKind::Generic, 1e6, 500 * 1024 * 1024);
+        let kids: Vec<_> = (0..3)
+            .map(|i| b.task(format!("k{i}"), OpKind::Generic, 1e6, 8))
+            .collect();
+        let sink = b.task("sink", OpKind::Generic, 1e6, 8);
+        for &k in &kids {
+            b.edge(root, k);
+            b.edge(k, sink);
+        }
+        let dag = b.build().unwrap();
+
+        let mut on = Config::default();
+        on.wukong.use_clustering = true;
+        let mut off = Config::default();
+        off.wukong.use_clustering = false;
+        let r_on = run_wukong(&dag, &on, 3);
+        let r_off = run_wukong(&dag, &off, 3);
+        assert!(r_on.metrics.kvs.bytes_written < r_off.metrics.kvs.bytes_written);
+        assert_eq!(r_on.metrics.tasks_executed, 5);
+        assert_eq!(r_off.metrics.tasks_executed, 5);
+        // Clustering keeps everything on one executor.
+        assert_eq!(r_on.metrics.executors_used, 1);
+    }
+
+    #[test]
+    fn faults_are_retried_and_job_completes() {
+        let dag = diamond();
+        let r = run_wukong_faulty(
+            &dag,
+            &Config::default(),
+            5,
+            FaultPlan::with_failure_rate(0.3),
+        );
+        assert_eq!(r.metrics.tasks_executed, 4);
+    }
+}

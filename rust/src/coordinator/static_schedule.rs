@@ -1,0 +1,121 @@
+//! Static schedule generation (§3.2).
+//!
+//! For a DAG with `n` leaf nodes, `n` static schedules are generated; the
+//! schedule for leaf `L` contains every task reachable from `L` (computed
+//! by DFS) plus all edges into and out of those nodes. Schedules may
+//! overlap — dynamic scheduling (fan-in counters) resolves ownership at
+//! runtime. Task-to-processor mapping is *not* in the schedule; the
+//! platform does that at invocation time.
+
+use crate::dag::{Dag, TaskId};
+
+/// One leaf's static schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StaticSchedule {
+    /// The leaf task this schedule starts from.
+    pub leaf: TaskId,
+    /// All tasks reachable from `leaf`, DFS preorder (leaf first).
+    pub tasks: Vec<TaskId>,
+}
+
+impl StaticSchedule {
+    pub fn contains(&self, t: TaskId) -> bool {
+        self.tasks.contains(&t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+/// Generate one static schedule per DAG leaf.
+pub fn generate_schedules(dag: &Dag) -> Vec<StaticSchedule> {
+    dag.leaves()
+        .into_iter()
+        .map(|leaf| StaticSchedule {
+            leaf,
+            tasks: dag.reachable_from(leaf),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DagBuilder, OpKind};
+
+    /// The paper's Fig. 6 DAG: two leaves (T1, T5), fan-out at T1/T3,
+    /// fan-in at T4/T7.
+    fn fig6() -> Dag {
+        let mut b = DagBuilder::new("fig6");
+        let t1 = b.task("T1", OpKind::Generic, 1.0, 8);
+        let t2 = b.task("T2", OpKind::Generic, 1.0, 8);
+        let t3 = b.task("T3", OpKind::Generic, 1.0, 8);
+        let t4 = b.task("T4", OpKind::Generic, 1.0, 8);
+        let t5 = b.task("T5", OpKind::Generic, 1.0, 8);
+        let t6 = b.task("T6", OpKind::Generic, 1.0, 8);
+        let t7 = b.task("T7", OpKind::Generic, 1.0, 8);
+        b.edge(t1, t2)
+            .edge(t2, t3)
+            .edge(t3, t4)
+            .edge(t3, t6)
+            .edge(t5, t4)
+            .edge(t4, t7)
+            .edge(t6, t7);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn one_schedule_per_leaf() {
+        let dag = fig6();
+        let scheds = generate_schedules(&dag);
+        assert_eq!(scheds.len(), 2);
+        assert_eq!(scheds[0].leaf, 0); // T1
+        assert_eq!(scheds[1].leaf, 4); // T5
+    }
+
+    #[test]
+    fn schedule_is_reachable_closure() {
+        let dag = fig6();
+        let scheds = generate_schedules(&dag);
+        // From T1: T1 T2 T3 T4 T6 T7 (not T5)
+        assert_eq!(scheds[0].len(), 6);
+        assert!(!scheds[0].contains(4));
+        // From T5: T5 T4 T7
+        assert_eq!(scheds[1].tasks, vec![4, 3, 6]);
+    }
+
+    #[test]
+    fn schedules_may_overlap_at_fanins() {
+        let dag = fig6();
+        let scheds = generate_schedules(&dag);
+        // T4 and T7 appear in both schedules.
+        assert!(scheds[0].contains(3) && scheds[1].contains(3));
+        assert!(scheds[0].contains(6) && scheds[1].contains(6));
+    }
+
+    #[test]
+    fn union_of_schedules_covers_dag() {
+        let dag = fig6();
+        let scheds = generate_schedules(&dag);
+        let mut covered = vec![false; dag.len()];
+        for s in &scheds {
+            for &t in &s.tasks {
+                covered[t as usize] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn leaf_comes_first() {
+        let dag = fig6();
+        for s in generate_schedules(&dag) {
+            assert_eq!(s.tasks[0], s.leaf);
+        }
+    }
+}

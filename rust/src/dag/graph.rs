@@ -1,0 +1,302 @@
+//! The [`Dag`] container: builder, validation, topology queries, DOT
+//! export.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+
+use super::task::{OpKind, TaskId, TaskNode};
+use crate::sim::Time;
+
+/// A validated directed acyclic task graph.
+#[derive(Debug, Clone)]
+pub struct Dag {
+    pub name: String,
+    tasks: Vec<TaskNode>,
+}
+
+impl Dag {
+    pub fn tasks(&self) -> &[TaskNode] {
+        &self.tasks
+    }
+
+    pub fn task(&self, id: TaskId) -> &TaskNode {
+        &self.tasks[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Tasks with no parents — the static schedules' roots (§3.2).
+    pub fn leaves(&self) -> Vec<TaskId> {
+        (0..self.tasks.len() as TaskId)
+            .filter(|&t| self.tasks[t as usize].parents.is_empty())
+            .collect()
+    }
+
+    /// Tasks with no children — final results, published to the client.
+    pub fn sinks(&self) -> Vec<TaskId> {
+        (0..self.tasks.len() as TaskId)
+            .filter(|&t| self.tasks[t as usize].children.is_empty())
+            .collect()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.tasks.iter().map(|t| t.children.len()).sum()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.tasks.iter().map(|t| t.flops).sum()
+    }
+
+    pub fn total_output_bytes(&self) -> u64 {
+        self.tasks.iter().map(|t| t.out_bytes).sum()
+    }
+
+    /// Kahn topological order (exists because `DagBuilder` validated
+    /// acyclicity).
+    pub fn topo_order(&self) -> Vec<TaskId> {
+        let mut indeg: Vec<usize> =
+            self.tasks.iter().map(|t| t.parents.len()).collect();
+        let mut q: VecDeque<TaskId> = (0..self.tasks.len() as TaskId)
+            .filter(|&t| indeg[t as usize] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.tasks.len());
+        while let Some(t) = q.pop_front() {
+            order.push(t);
+            for &c in &self.tasks[t as usize].children {
+                indeg[c as usize] -= 1;
+                if indeg[c as usize] == 0 {
+                    q.push_back(c);
+                }
+            }
+        }
+        order
+    }
+
+    /// All nodes reachable from `start` (inclusive), DFS preorder — the
+    /// paper's static schedule content for a leaf (§3.2).
+    pub fn reachable_from(&self, start: TaskId) -> Vec<TaskId> {
+        let mut seen = vec![false; self.tasks.len()];
+        let mut stack = vec![start];
+        let mut out = Vec::new();
+        while let Some(t) = stack.pop() {
+            if std::mem::replace(&mut seen[t as usize], true) {
+                continue;
+            }
+            out.push(t);
+            // push children in reverse so DFS visits them in order
+            for &c in self.tasks[t as usize].children.iter().rev() {
+                if !seen[c as usize] {
+                    stack.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Critical-path length under a given per-task duration function
+    /// (lower bound on any engine's makespan; used by scaling tests).
+    pub fn critical_path(&self, dur: impl Fn(&TaskNode) -> Time) -> Time {
+        let order = self.topo_order();
+        let mut finish = vec![0 as Time; self.tasks.len()];
+        let mut best = 0;
+        for &t in &order {
+            let node = &self.tasks[t as usize];
+            let start = node
+                .parents
+                .iter()
+                .map(|&p| finish[p as usize])
+                .max()
+                .unwrap_or(0);
+            finish[t as usize] = start + dur(node);
+            best = best.max(finish[t as usize]);
+        }
+        best
+    }
+
+    /// Graphviz DOT rendering (debugging / docs).
+    pub fn to_dot(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "digraph \"{}\" {{", self.name);
+        for (i, t) in self.tasks.iter().enumerate() {
+            let _ = writeln!(s, "  t{} [label=\"{}\"];", i, t.name);
+        }
+        for (i, t) in self.tasks.iter().enumerate() {
+            for &c in &t.children {
+                let _ = writeln!(s, "  t{} -> t{};", i, c);
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Incremental DAG constructor; `build()` validates.
+#[derive(Debug, Default)]
+pub struct DagBuilder {
+    name: String,
+    tasks: Vec<TaskNode>,
+}
+
+impl DagBuilder {
+    pub fn new(name: &str) -> DagBuilder {
+        DagBuilder {
+            name: name.to_string(),
+            tasks: Vec::new(),
+        }
+    }
+
+    /// Add a task; returns its id.
+    pub fn task(
+        &mut self,
+        name: impl Into<String>,
+        op: OpKind,
+        flops: f64,
+        out_bytes: u64,
+    ) -> TaskId {
+        let id = self.tasks.len() as TaskId;
+        self.tasks.push(TaskNode {
+            name: name.into(),
+            op,
+            flops,
+            out_bytes,
+            input_bytes: 0,
+            dur_override: None,
+            parents: Vec::new(),
+            children: Vec::new(),
+        });
+        id
+    }
+
+    /// Attach external input bytes to a (leaf) task.
+    pub fn with_input(&mut self, id: TaskId, bytes: u64) -> &mut Self {
+        self.tasks[id as usize].input_bytes = bytes;
+        self
+    }
+
+    /// Fixed-duration override (sleep-task microbenchmarks).
+    pub fn with_duration(&mut self, id: TaskId, d: Time) -> &mut Self {
+        self.tasks[id as usize].dur_override = Some(d);
+        self
+    }
+
+    /// Add a dependency edge `from -> to`.
+    pub fn edge(&mut self, from: TaskId, to: TaskId) -> &mut Self {
+        assert!(
+            (from as usize) < self.tasks.len() && (to as usize) < self.tasks.len(),
+            "edge references unknown task"
+        );
+        assert_ne!(from, to, "self-loop");
+        self.tasks[from as usize].children.push(to);
+        self.tasks[to as usize].parents.push(from);
+        self
+    }
+
+    /// Validate and freeze.
+    pub fn build(self) -> Result<Dag, String> {
+        let dag = Dag {
+            name: self.name,
+            tasks: self.tasks,
+        };
+        // acyclicity: Kahn must consume every node
+        let order = dag.topo_order();
+        if order.len() != dag.tasks.len() {
+            return Err(format!(
+                "cycle detected: topo order covers {}/{} tasks",
+                order.len(),
+                dag.tasks.len()
+            ));
+        }
+        // duplicate edges would break dependency counting
+        for (i, t) in dag.tasks.iter().enumerate() {
+            let mut c = t.children.clone();
+            c.sort_unstable();
+            c.dedup();
+            if c.len() != t.children.len() {
+                return Err(format!("task {i} has duplicate out-edges"));
+            }
+        }
+        Ok(dag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        // a -> b, c -> d
+        let mut b = DagBuilder::new("diamond");
+        let a = b.task("a", OpKind::Generic, 1.0, 10);
+        let x = b.task("b", OpKind::Generic, 1.0, 10);
+        let y = b.task("c", OpKind::Generic, 1.0, 10);
+        let d = b.task("d", OpKind::Generic, 1.0, 10);
+        b.edge(a, x).edge(a, y).edge(x, d).edge(y, d);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn leaves_and_sinks() {
+        let d = diamond();
+        assert_eq!(d.leaves(), vec![0]);
+        assert_eq!(d.sinks(), vec![3]);
+        assert_eq!(d.n_edges(), 4);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let d = diamond();
+        let order = d.topo_order();
+        let pos: Vec<usize> = (0..4)
+            .map(|t| order.iter().position(|&x| x == t as TaskId).unwrap())
+            .collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let mut b = DagBuilder::new("cyc");
+        let x = b.task("x", OpKind::Generic, 1.0, 1);
+        let y = b.task("y", OpKind::Generic, 1.0, 1);
+        b.edge(x, y).edge(y, x);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn duplicate_edge_rejected() {
+        let mut b = DagBuilder::new("dup");
+        let x = b.task("x", OpKind::Generic, 1.0, 1);
+        let y = b.task("y", OpKind::Generic, 1.0, 1);
+        b.edge(x, y).edge(x, y);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn reachable_from_is_the_static_schedule() {
+        let d = diamond();
+        let sched = d.reachable_from(0);
+        assert_eq!(sched.len(), 4);
+        assert_eq!(sched[0], 0); // starts at the leaf
+        let from_b = d.reachable_from(1);
+        assert_eq!(from_b, vec![1, 3]);
+    }
+
+    #[test]
+    fn critical_path_diamond() {
+        let d = diamond();
+        assert_eq!(d.critical_path(|_| 10), 30); // a -> (b|c) -> d
+    }
+
+    #[test]
+    fn dot_contains_all_edges() {
+        let d = diamond();
+        let dot = d.to_dot();
+        assert_eq!(dot.matches("->").count(), 4);
+    }
+}

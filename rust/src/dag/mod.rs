@@ -1,0 +1,12 @@
+//! DAG substrate: the task graph every engine executes.
+//!
+//! Mirrors the Dask task-graph role in the paper (§3.5): workload
+//! generators in [`crate::workloads`] build a [`Dag`], the static-schedule
+//! generator partitions it, and engines (Wukong, numpywren, Dask models,
+//! plus the real engine) execute it.
+
+pub mod graph;
+pub mod task;
+
+pub use graph::{Dag, DagBuilder};
+pub use task::{OpKind, TaskId, TaskNode};

@@ -1,0 +1,100 @@
+//! Task nodes: op kind, cost model inputs, and adjacency.
+
+use crate::sim::Time;
+
+/// Task index within its [`super::Dag`].
+pub type TaskId = u32;
+
+/// What a task computes. The sim engine uses only the cost annotations;
+/// the real engine maps each kind to an AOT artifact (see
+/// [`crate::runtime`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// No computation (scaling microbenchmarks).
+    Noop,
+    /// Fixed-duration sleep (paper's injected per-task delay).
+    Sleep,
+    /// Tree-reduction pairwise add.
+    TrAdd,
+    /// Tree-reduction final scalar sum.
+    TrRoot,
+    /// GEMM partial-product block multiply.
+    GemmBlock,
+    /// GEMM multiply-accumulate chain step.
+    GemmAcc,
+    /// Pairwise block add (K-reduction).
+    BlockAdd,
+    /// TSQR leaf factorization.
+    QrFactor,
+    /// TSQR merge of two stacked R factors.
+    QrMerge,
+    /// Extract the small R factor from a [Q, R] bundle (zero-flop).
+    RExtract,
+    /// TSQR Q back-propagation at a leaf.
+    QApplyLeaf,
+    /// TSQR Q back-propagation between internal levels.
+    QApplyHalf,
+    /// SVD1 Gram block (Aᵀ A).
+    Gram,
+    /// SVD1 eigensolve of the reduced Gram matrix.
+    Svd1Finish,
+    /// SVC per-partition gradient.
+    SvcGrad,
+    /// SVC weight update.
+    SvcUpdate,
+    /// Anything else flops-modeled (SVD2 randomized steps etc.).
+    Generic,
+}
+
+/// One node of the workload DAG.
+#[derive(Debug, Clone)]
+pub struct TaskNode {
+    /// Human-readable name (stable across runs; used for object keys).
+    pub name: String,
+    pub op: OpKind,
+    /// Floating-point work (sim compute model: `flops / gflops`).
+    pub flops: f64,
+    /// Size of this task's output object in bytes.
+    pub out_bytes: u64,
+    /// Bytes of *external input* (initial partitions in the KVS) that this
+    /// task reads in addition to its parents' outputs.
+    pub input_bytes: u64,
+    /// Fixed-duration override (microbenchmarks / injected delays).
+    pub dur_override: Option<Time>,
+    pub parents: Vec<TaskId>,
+    pub children: Vec<TaskId>,
+}
+
+impl TaskNode {
+    /// In-degree (fan-in width).
+    pub fn indegree(&self) -> usize {
+        self.parents.len()
+    }
+
+    /// Out-degree (fan-out width).
+    pub fn outdegree(&self) -> usize {
+        self.children.len()
+    }
+
+    /// Stable KVS key for this task's output object.
+    pub fn obj_key(id: TaskId) -> u64 {
+        // task-id → key namespace distinct from external inputs
+        0x5755_4B4F_0000_0000u64 | id as u64
+    }
+
+    /// Stable KVS key for a task's external input partition.
+    pub fn input_key(id: TaskId) -> u64 {
+        0x494E_5055_0000_0000u64 | id as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obj_keys_are_distinct_namespaces() {
+        assert_ne!(TaskNode::obj_key(5), TaskNode::input_key(5));
+        assert_ne!(TaskNode::obj_key(1), TaskNode::obj_key(2));
+    }
+}

@@ -1,0 +1,308 @@
+//! Task-body computation for the real engine: maps each DAG op kind to an
+//! AOT artifact call (or a pure extraction) and assembles its inputs.
+//!
+//! Objects flowing between tasks are `Vec<Tensor>` bundles (a QR task's
+//! object is `[Q, R]`). External input partitions are seeded into the
+//! KVS under name-derived keys (`A:i:k`, `B:k:j`, `Ablk:i`, `in:<task>`),
+//! mirroring how the paper's client uploads input partitions before the
+//! job starts.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dag::{Dag, OpKind, TaskId};
+use crate::runtime::{SharedRuntime, Tensor};
+use crate::storage::real_kvs::RealKvs;
+use crate::util::Rng;
+
+/// An intermediate object: one or more tensors.
+pub type Obj = Vec<Tensor>;
+
+/// Serialize an object (tensor bundle) to bytes.
+pub fn obj_to_bytes(obj: &Obj) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(obj.len() as u32).to_le_bytes());
+    for t in obj {
+        let b = t.to_bytes();
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+/// Deserialize an object.
+pub fn obj_from_bytes(b: &[u8]) -> Result<Obj> {
+    if b.len() < 4 {
+        bail!("object blob too short");
+    }
+    let count = u32::from_le_bytes(b[0..4].try_into()?) as usize;
+    let mut off = 4;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if b.len() < off + 4 {
+            bail!("object blob truncated");
+        }
+        let n = u32::from_le_bytes(b[off..off + 4].try_into()?) as usize;
+        off += 4;
+        out.push(Tensor::from_bytes(
+            b.get(off..off + n).ok_or_else(|| anyhow!("short tensor"))?,
+        )?);
+        off += n;
+    }
+    Ok(out)
+}
+
+/// Executes task bodies against the PJRT runtime.
+pub struct TaskComputer {
+    pub rt: Arc<SharedRuntime>,
+}
+
+impl TaskComputer {
+    /// Run task `t`; `parent_objs` are in DAG parent order; `ext` is the
+    /// task's external input bundle (if any).
+    pub fn compute(
+        &self,
+        dag: &Dag,
+        t: TaskId,
+        parent_objs: &[Arc<Obj>],
+        ext: Option<Arc<Obj>>,
+    ) -> Result<Obj> {
+        let node = dag.task(t);
+        let one = |i: usize| -> Result<&Tensor> {
+            parent_objs
+                .get(i)
+                .and_then(|o| o.first())
+                .ok_or_else(|| anyhow!("{}: missing parent {i}", node.name))
+        };
+        match node.op {
+            OpKind::Noop | OpKind::Sleep => {
+                if let Some(d) = node.dur_override {
+                    std::thread::sleep(std::time::Duration::from_micros(d));
+                }
+                Ok(vec![Tensor::new(vec![1], vec![0.0])])
+            }
+            OpKind::TrAdd => {
+                let (x, y) = if parent_objs.is_empty() {
+                    let e = ext.ok_or_else(|| anyhow!("TR leaf without input"))?;
+                    (e[0].clone(), e[1].clone())
+                } else {
+                    (one(0)?.clone(), one(1)?.clone())
+                };
+                Ok(self.rt.execute("tr_add_f32_8192", &[x, y])?)
+            }
+            OpKind::TrRoot => {
+                Ok(self.rt.execute("tr_root_f32_8192", &[one(0)?.clone()])?)
+            }
+            OpKind::GemmBlock => {
+                let e = ext.ok_or_else(|| anyhow!("GEMM leaf without input"))?;
+                Ok(self
+                    .rt
+                    .execute("gemm_block_f32_256", &[e[0].clone(), e[1].clone()])?)
+            }
+            OpKind::BlockAdd => {
+                let a = one(0)?.clone();
+                let b = one(1)?.clone();
+                if a.shape == vec![256, 256] {
+                    Ok(self.rt.execute("block_add_f32_256", &[a, b])?)
+                } else {
+                    // SVD Gram sums etc. fall back to element-wise CPU add.
+                    let data = a
+                        .data
+                        .iter()
+                        .zip(&b.data)
+                        .map(|(x, y)| x + y)
+                        .collect();
+                    Ok(vec![Tensor::new(a.shape.clone(), data)])
+                }
+            }
+            OpKind::QrFactor => {
+                let e = ext.ok_or_else(|| anyhow!("QR leaf without input"))?;
+                Ok(self.rt.execute("qr_factor_f32_1024x128", &[e[0].clone()])?)
+            }
+            OpKind::RExtract => {
+                // Peel R (the last tensor) off a [Q, R] bundle.
+                Ok(vec![parent_objs[0]
+                    .last()
+                    .ok_or_else(|| anyhow!("empty bundle"))?
+                    .clone()])
+            }
+            OpKind::QrMerge => {
+                // Parents are [Q, R] bundles: merge their R factors.
+                let r_top = parent_objs[0]
+                    .last()
+                    .ok_or_else(|| anyhow!("empty parent"))?
+                    .clone();
+                let r_bot = parent_objs[1]
+                    .last()
+                    .ok_or_else(|| anyhow!("empty parent"))?
+                    .clone();
+                Ok(self.rt.execute("qr_merge_f32_128", &[r_top, r_bot])?)
+            }
+            OpKind::QApplyLeaf => match parent_objs.len() {
+                // Q extraction from a [Q, R] bundle (zero-flop task).
+                1 => Ok(vec![parent_objs[0][0].clone()]),
+                // Final panel: Q_leaf · path-product (parents: [q], [prod]).
+                2 => {
+                    let q = parent_objs[0][0].clone();
+                    let p = parent_objs[1][0].clone();
+                    Ok(self.rt.execute("q_apply_leaf_f32_1024x128", &[p, q])?)
+                }
+                n => bail!("QApplyLeaf with {n} parents"),
+            },
+            OpKind::QApplyHalf => match parent_objs.len() {
+                // Half extraction from the merge's (2c × c) Q.
+                1 => {
+                    let qm = &parent_objs[0][0];
+                    let (rows, cols) = (qm.shape[0], qm.shape[1]);
+                    let half = rows / 2;
+                    // which half: task names end in _0 (top) / _1 (bottom)
+                    let bottom = node.name.ends_with("_1");
+                    let start = if bottom { half * cols } else { 0 };
+                    Ok(vec![Tensor::new(
+                        vec![half, cols],
+                        qm.data[start..start + half * cols].to_vec(),
+                    )])
+                }
+                // Path product: parents [parent_prod, half] → half · prod.
+                2 => {
+                    let prod = parent_objs[0][0].clone();
+                    let half = parent_objs[1][0].clone();
+                    Ok(self.rt.execute("q_apply_half_f32_128", &[prod, half])?)
+                }
+                n => bail!("QApplyHalf with {n} parents"),
+            },
+            OpKind::Gram => {
+                let e = ext.ok_or_else(|| anyhow!("Gram leaf without input"))?;
+                Ok(self.rt.execute("gram_f32_1024x128", &[e[0].clone()])?)
+            }
+            OpKind::Svd1Finish => {
+                Ok(self.rt.execute("svd1_finish_f32_128", &[one(0)?.clone()])?)
+            }
+            OpKind::GemmAcc => {
+                // C += A·B chain step: parents [c], ext [a, b].
+                let c = one(0)?.clone();
+                let e = ext.ok_or_else(|| anyhow!("GemmAcc without input"))?;
+                Ok(self.rt.execute(
+                    "gemm_acc_f32_256",
+                    &[c, e[0].clone(), e[1].clone()],
+                )?)
+            }
+            OpKind::SvcGrad | OpKind::SvcUpdate | OpKind::Generic => {
+                bail!("{:?} is sim-only (no real-engine mapping)", node.op)
+            }
+        }
+    }
+}
+
+/// KVS key for a task's output object.
+pub fn obj_key(t: TaskId) -> String {
+    format!("obj:{t}")
+}
+
+/// KVS key for a task's external input bundle.
+pub fn input_key(dag: &Dag, t: TaskId) -> Option<String> {
+    let node = dag.task(t);
+    if node.input_bytes == 0 {
+        return None;
+    }
+    // GEMM partials share input blocks: mul_{i}_{j}_{k} reads A:i:k, B:k:j
+    // (resolved in `seed_inputs` as a combined bundle per task).
+    Some(format!("in:{}", node.name))
+}
+
+/// Seed external input partitions for a real run. Returns the RNG-backed
+/// ground-truth blocks for client-side verification, keyed by KVS key.
+pub fn seed_inputs(dag: &Dag, kvs: &RealKvs, seed: u64) -> Vec<(String, Obj)> {
+    let mut rng = Rng::new(seed);
+    let mut seeded = Vec::new();
+    // GEMM needs *consistent* shared blocks: generate A/B block pools
+    // keyed by indices parsed from task names.
+    let mut gemm_pool: std::collections::HashMap<String, Tensor> =
+        std::collections::HashMap::new();
+    for (id, node) in dag.tasks().iter().enumerate() {
+        if node.input_bytes == 0 {
+            continue;
+        }
+        let t = id as TaskId;
+        let key = input_key(dag, t).unwrap();
+        let obj: Obj = match node.op {
+            OpKind::TrAdd => vec![
+                Tensor::new(vec![8192], rng.f32_vec(8192)),
+                Tensor::new(vec![8192], rng.f32_vec(8192)),
+            ],
+            OpKind::GemmBlock => {
+                // name: mul_{i}_{j}_{k} → A[i,k], B[k,j]
+                let parts: Vec<&str> = node.name.split('_').collect();
+                let (i, j, k) = (parts[1], parts[2], parts[3]);
+                let a = gemm_pool
+                    .entry(format!("A:{i}:{k}"))
+                    .or_insert_with(|| {
+                        Tensor::new(vec![256, 256], rng.f32_vec(256 * 256))
+                    })
+                    .clone();
+                let b = gemm_pool
+                    .entry(format!("B:{k}:{j}"))
+                    .or_insert_with(|| {
+                        Tensor::new(vec![256, 256], rng.f32_vec(256 * 256))
+                    })
+                    .clone();
+                vec![a, b]
+            }
+            OpKind::QrFactor | OpKind::Gram | OpKind::QApplyLeaf => {
+                vec![Tensor::new(vec![1024, 128], rng.f32_vec(1024 * 128))]
+            }
+            _ => vec![Tensor::new(
+                vec![(node.input_bytes / 4) as usize],
+                rng.f32_vec((node.input_bytes / 4) as usize),
+            )],
+        };
+        kvs.put(&key, obj_to_bytes(&obj));
+        seeded.push((key, obj));
+    }
+    seeded
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obj_serde_roundtrip() {
+        let obj = vec![
+            Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]),
+            Tensor::new(vec![3], vec![5., 6., 7.]),
+        ];
+        let b = obj_to_bytes(&obj);
+        assert_eq!(obj_from_bytes(&b).unwrap(), obj);
+    }
+
+    #[test]
+    fn obj_rejects_truncation() {
+        let obj = vec![Tensor::new(vec![4], vec![0.0; 4])];
+        let mut b = obj_to_bytes(&obj);
+        b.truncate(b.len() - 2);
+        assert!(obj_from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn gemm_seeding_shares_blocks() {
+        use crate::workloads::gemm;
+        let dag = gemm::dag(gemm::GemmParams { n: 512, block: 256 });
+        let kvs = RealKvs::new(4, 0.0, 0.0);
+        let seeded = seed_inputs(&dag, &kvs, 1);
+        // mul_0_0_0 and mul_0_1_0 share A[0,0]
+        let find = |name: &str| {
+            seeded
+                .iter()
+                .find(|(k, _)| k == &format!("in:{name}"))
+                .map(|(_, o)| o)
+                .unwrap()
+        };
+        let a00 = &find("mul_0_0_0")[0];
+        let a00_again = &find("mul_0_1_0")[0];
+        assert_eq!(a00.data, a00_again.data);
+        // but B blocks differ between those tasks
+        assert_ne!(find("mul_0_0_0")[1].data, find("mul_0_1_0")[1].data);
+    }
+}

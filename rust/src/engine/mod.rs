@@ -1,0 +1,18 @@
+//! The real execution engine: the same Wukong policies as the simulator,
+//! but on OS threads with *real* compute (PJRT execution of the AOT
+//! JAX/Pallas artifacts) and a real in-memory KVS.
+//!
+//! An "executor" is a thread-pool job (the pool size models the Lambda
+//! concurrency limit); invocation latency and KVS wire latency are
+//! injected from the same platform constants the simulator uses, scaled
+//! by `latency_scale` so examples run quickly on one machine. Numerics
+//! are end-to-end real: the TSQR example checks Q·R = A and QᵀQ = I
+//! through the full decentralized execution.
+
+pub mod compute;
+pub mod real_numpywren;
+pub mod real_wukong;
+
+pub use compute::{seed_inputs, TaskComputer};
+pub use real_numpywren::run_real_numpywren;
+pub use real_wukong::{run_real_wukong, RealConfig, RealReport};

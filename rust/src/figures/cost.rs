@@ -1,0 +1,205 @@
+//! Figures 17–20: CPU time, monetary cost, and vCPU/cost timelines.
+
+use crate::baselines::{run_dask, run_numpywren};
+use crate::config::{Config, DaskConfig};
+use crate::coordinator::run_wukong;
+use crate::metrics::RunMetrics;
+use crate::sim::secs;
+use crate::util::table::Table;
+use crate::workloads::{gemm, svd, tsqr};
+
+use super::end_to_end::{single_redis, wukong_cfg};
+use super::Figure;
+
+fn svd1_sizes(quick: bool) -> &'static [f64] {
+    if quick {
+        &[0.25, 1.0]
+    } else {
+        &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0]
+    }
+}
+
+/// Fig. 17: SVD1 total CPU time (core-seconds).
+pub fn fig17(cfg: &Config, quick: bool) -> Figure {
+    let mut t = Table::new(vec![
+        "rows",
+        "wukong (core-s)",
+        "dask-1000 (core-s)",
+        "dask-125 (core-s)",
+    ]);
+    let wcfg = wukong_cfg(cfg);
+    for &m in svd1_sizes(quick) {
+        let dag = svd::svd1(svd::Svd1Params::paper(m));
+        let wk = run_wukong(&dag, &wcfg, cfg.seed).metrics;
+        let d1000 = run_dask(&dag, cfg, &DaskConfig::workers_1000(), cfg.seed);
+        let d125 = run_dask(&dag, cfg, &DaskConfig::workers_125(), cfg.seed);
+        t.row(vec![
+            format!("{m}M"),
+            format!("{:.0}", wk.cpu_seconds),
+            format!("{:.0}", d1000.cpu_seconds),
+            format!("{:.0}", d125.cpu_seconds),
+        ]);
+    }
+    Figure {
+        id: "fig17",
+        caption: "SVD1 CPU time: Wukong's pay-per-use beats Dask-1000 \
+                  everywhere, Dask-125 at large sizes",
+        table: t,
+    }
+}
+
+/// Fig. 18: SVD1 monetary cost.
+pub fn fig18(cfg: &Config, quick: bool) -> Figure {
+    let mut t = Table::new(vec![
+        "rows",
+        "wukong ($)",
+        "dask-1000 ($)",
+        "dask-125 ($)",
+    ]);
+    let wcfg = wukong_cfg(cfg);
+    for &m in svd1_sizes(quick) {
+        let dag = svd::svd1(svd::Svd1Params::paper(m));
+        let wk = run_wukong(&dag, &wcfg, cfg.seed).metrics;
+        let d1000 = run_dask(&dag, cfg, &DaskConfig::workers_1000(), cfg.seed);
+        let d125 = run_dask(&dag, cfg, &DaskConfig::workers_125(), cfg.seed);
+        t.row(vec![
+            format!("{m}M"),
+            format!("{:.4}", wk.dollars()),
+            format!("{:.4}", d1000.dollars()),
+            format!("{:.4}", d125.dollars()),
+        ]);
+    }
+    Figure {
+        id: "fig18",
+        caption: "SVD1 cost: Wukong grows slower with problem size than \
+                  Dask",
+        table: t,
+    }
+}
+
+fn timeline_rows(t: &mut Table, name: &str, m: &RunMetrics, vcpus_per_exec: f64) {
+    // Sample vCPU count at quartiles of the makespan + cumulative cost.
+    let end = secs(m.makespan_s);
+    let series = m.timeline.series(end / 4 + 1, end);
+    let vcpu_at = |frac: f64| -> i64 {
+        let idx = ((series.len() - 1) as f64 * frac) as usize;
+        (series[idx].1 as f64 * vcpus_per_exec) as i64
+    };
+    t.row(vec![
+        name.to_string(),
+        format!("{:.2}", m.makespan_s),
+        vcpu_at(0.25).to_string(),
+        vcpu_at(0.5).to_string(),
+        vcpu_at(0.75).to_string(),
+        format!("{}", (m.timeline.peak() as f64 * vcpus_per_exec) as i64),
+        format!("{:.0}", m.cpu_seconds),
+        format!("{:.4}", m.dollars()),
+    ]);
+}
+
+fn timeline_figure(
+    cfg: &Config,
+    dag: &crate::dag::Dag,
+    npw_workers: &[usize],
+    id: &'static str,
+    caption: &'static str,
+) -> Figure {
+    let mut t = Table::new(vec![
+        "config",
+        "makespan (s)",
+        "vCPU@25%",
+        "vCPU@50%",
+        "vCPU@75%",
+        "peak vCPU",
+        "core-s",
+        "cost ($)",
+    ]);
+    let wcfg = single_redis(&wukong_cfg(cfg));
+    let wk = run_wukong(dag, &wcfg, cfg.seed).metrics;
+    timeline_rows(&mut t, "wukong 1-redis", &wk, 2.0);
+    for &n in npw_workers {
+        let mut c = single_redis(cfg);
+        c.numpywren.n_workers = n;
+        let m = run_numpywren(dag, &c, cfg.seed);
+        timeline_rows(&mut t, &format!("numpywren-{n}"), &m, 2.0);
+    }
+    for (name, dcfg) in [
+        ("dask-1000", DaskConfig::workers_1000()),
+        ("dask-125", DaskConfig::workers_125()),
+    ] {
+        let m = run_dask(dag, cfg, &dcfg, cfg.seed);
+        timeline_rows(&mut t, name, &m, 1.0);
+    }
+    Figure {
+        id,
+        caption,
+        table: t,
+    }
+}
+
+/// Fig. 19: GEMM 25k×25k vCPU usage + cost timeline.
+pub fn fig19(cfg: &Config, quick: bool) -> Figure {
+    let nk = if quick { 10 } else { 25 };
+    let dag = gemm::dag(gemm::GemmParams::paper(nk));
+    timeline_figure(
+        cfg,
+        &dag,
+        &[50, 169, 338],
+        "fig19",
+        "GEMM vCPU/cost timeline: Wukong cheaper + fewer vCPUs than every \
+         numpywren configuration",
+    )
+}
+
+/// Fig. 20: TSQR 4M vCPU usage + cost timeline.
+pub fn fig20(cfg: &Config, quick: bool) -> Figure {
+    let rows_m = if quick { 1.0 } else { 4.0 };
+    let dag = tsqr::dag(tsqr::TsqrParams::paper(rows_m));
+    timeline_figure(
+        cfg,
+        &dag,
+        &[128, 256],
+        "fig20",
+        "TSQR vCPU/cost timeline: Wukong ~14x cheaper than the best \
+         numpywren configuration",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wukong_cheaper_than_numpywren_on_tsqr() {
+        let cfg = Config::default();
+        let dag = tsqr::dag(tsqr::TsqrParams {
+            rows: 1 << 21,
+            cols: 128,
+            block_rows: 4096,
+            with_q: false,
+        });
+        let wk = run_wukong(&dag, &single_redis(&wukong_cfg(&cfg)), 1).metrics;
+        let mut c = single_redis(&cfg);
+        c.numpywren.n_workers = 128;
+        let np = run_numpywren(&dag, &c, 1);
+        assert!(
+            wk.dollars() < np.dollars(),
+            "wukong ${:.4} should undercut numpywren ${:.4}",
+            wk.dollars(),
+            np.dollars()
+        );
+    }
+
+    #[test]
+    fn dask_cost_scales_with_makespan_not_work() {
+        // Dask bills allocated VMs for the duration — tiny jobs still pay.
+        let cfg = Config::default();
+        let dag = svd::svd1(svd::Svd1Params {
+            rows: 64 * 1024,
+            cols: 128,
+            block_rows: 16 * 1024,
+        });
+        let d = run_dask(&dag, &cfg, &DaskConfig::workers_125(), 1);
+        assert!(d.dollars() > 0.0);
+    }
+}

@@ -1,0 +1,442 @@
+//! Figures 9–16: end-to-end workload comparisons and I/O volumes.
+
+use crate::baselines::{run_dask, run_numpywren};
+use crate::config::{Config, DaskConfig};
+use crate::coordinator::run_wukong;
+use crate::dag::Dag;
+use crate::sim::secs;
+use crate::util::table::Table;
+use crate::workloads::{gemm, svc, svd, tr, tsqr};
+
+use super::{avg, fmt_b, Figure};
+
+/// Wukong configured the way the big-object workloads run it: the
+/// clustering threshold `t` tuned below the Q/B panel sizes (a
+/// user-exposed knob; §3.3 cites 200 MB as *an example*).
+pub(crate) fn wukong_cfg(cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.wukong.clustering_threshold = 1024 * 1024;
+    c
+}
+
+pub(crate) fn single_redis(cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.storage = c.storage.clone().single_redis();
+    c
+}
+
+pub(crate) fn s3(cfg: &Config) -> Config {
+    let mut c = cfg.clone();
+    c.storage = c.storage.clone().s3();
+    c
+}
+
+/// Dask OOM heuristic: a worker must hold one in-flight working set per
+/// busy core; the paper's Dask-1000 (3 GB workers) dies on the large
+/// SVD2 problems while Dask-125 (24 GB) survives (Fig. 11's crosses).
+pub(crate) fn dask_oom(dag: &Dag, dcfg: &DaskConfig) -> bool {
+    let peak_ws = dag
+        .tasks()
+        .iter()
+        .map(|t| {
+            let parents: u64 = t
+                .parents
+                .iter()
+                .map(|&p| dag.task(p).out_bytes)
+                .sum();
+            t.input_bytes + parents + t.out_bytes
+        })
+        .max()
+        .unwrap_or(0);
+    let cores = dcfg.cores_per_worker.min(4) as f64;
+    // 1.2x: serialization buffers + the Dask worker's own overhead.
+    cores * peak_ws as f64 * 1.2 > dcfg.mem_per_worker_gb * 1e9
+}
+
+/// Fig. 9: TR (N=1024) under injected per-task delays.
+pub fn fig9(cfg: &Config, quick: bool) -> Figure {
+    let delays_ms: &[u64] = if quick { &[0, 250] } else { &[0, 100, 250, 500] };
+    let mut t = Table::new(vec![
+        "delay (ms)",
+        "wukong (s)",
+        "dask-1000 (s)",
+        "dask-125 (s)",
+    ]);
+    let n = if quick { 256 } else { 1024 };
+    for &d in delays_ms {
+        let dag = tr::dag(tr::TrParams {
+            n,
+            chunk: 1,
+            delay: Some(secs(d as f64 / 1000.0)),
+        });
+        let wk = avg(cfg, quick, |s| run_wukong(&dag, cfg, s).metrics.makespan_s);
+        let d1000 = avg(cfg, quick, |s| {
+            run_dask(&dag, cfg, &DaskConfig::workers_1000(), s).makespan_s
+        });
+        let d125 = avg(cfg, quick, |s| {
+            run_dask(&dag, cfg, &DaskConfig::workers_125(), s).makespan_s
+        });
+        t.row(vec![
+            d.to_string(),
+            format!("{wk:.2}"),
+            format!("{d1000:.2}"),
+            format!("{d125:.2}"),
+        ]);
+    }
+    Figure {
+        id: "fig9",
+        caption: "TR vs per-task delay: Dask wins the no-op case; Wukong \
+                  overtakes Dask-1000 at >=250 ms tasks",
+        table: t,
+    }
+}
+
+fn three_way(
+    cfg: &Config,
+    quick: bool,
+    label: &str,
+    dags: Vec<(String, Dag)>,
+    caption: &'static str,
+    id: &'static str,
+) -> Figure {
+    let mut t = Table::new(vec![
+        label,
+        "wukong (s)",
+        "dask-1000 (s)",
+        "dask-125 (s)",
+    ]);
+    let wcfg = wukong_cfg(cfg);
+    for (size, dag) in dags {
+        let wk = avg(cfg, quick, |s| run_wukong(&dag, &wcfg, s).metrics.makespan_s);
+        let d1000 = if dask_oom(&dag, &DaskConfig::workers_1000()) {
+            "OOM".to_string()
+        } else {
+            format!(
+                "{:.2}",
+                avg(cfg, quick, |s| run_dask(
+                    &dag,
+                    cfg,
+                    &DaskConfig::workers_1000(),
+                    s
+                )
+                .makespan_s)
+            )
+        };
+        let d125 = if dask_oom(&dag, &DaskConfig::workers_125()) {
+            "OOM".to_string()
+        } else {
+            format!(
+                "{:.2}",
+                avg(cfg, quick, |s| run_dask(
+                    &dag,
+                    cfg,
+                    &DaskConfig::workers_125(),
+                    s
+                )
+                .makespan_s)
+            )
+        };
+        t.row(vec![size, format!("{wk:.2}"), d1000, d125]);
+    }
+    Figure {
+        id,
+        caption,
+        table: t,
+    }
+}
+
+/// Fig. 10: SVD1 (tall-skinny) across problem sizes.
+pub fn fig10(cfg: &Config, quick: bool) -> Figure {
+    let sizes: &[f64] = if quick {
+        &[0.25, 1.0]
+    } else {
+        &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0]
+    };
+    let dags = sizes
+        .iter()
+        .map(|&m| {
+            (
+                format!("{m}M"),
+                svd::svd1(svd::Svd1Params::paper(m)),
+            )
+        })
+        .collect();
+    three_way(
+        cfg,
+        quick,
+        "rows",
+        dags,
+        "SVD1: Wukong beats Dask-1000, trails Dask-125",
+        "fig10",
+    )
+}
+
+/// Fig. 11: SVD2 (square, randomized) across problem sizes.
+pub fn fig11(cfg: &Config, quick: bool) -> Figure {
+    let sizes: &[usize] = if quick {
+        &[10, 50]
+    } else {
+        &[10, 25, 50, 100, 150, 200, 256]
+    };
+    let dags = sizes
+        .iter()
+        .map(|&nk| {
+            (
+                format!("{nk}k"),
+                svd::svd2(svd::Svd2Params::paper(nk)),
+            )
+        })
+        .collect();
+    three_way(
+        cfg,
+        quick,
+        "n",
+        dags,
+        "SVD2: Wukong scales past Dask-1000's memory ceiling (OOM marks)",
+        "fig11",
+    )
+}
+
+/// Fig. 12: SVC across sample counts.
+pub fn fig12(cfg: &Config, quick: bool) -> Figure {
+    let sizes: &[f64] = if quick {
+        &[0.5, 2.0]
+    } else {
+        &[0.5, 1.0, 2.0, 4.0, 8.0]
+    };
+    let dags = sizes
+        .iter()
+        .map(|&m| (format!("{m}M"), svc::dag(svc::SvcParams::paper(m))))
+        .collect();
+    three_way(
+        cfg,
+        quick,
+        "samples",
+        dags,
+        "SVC: gap to Dask closes as the problem grows",
+        "fig12",
+    )
+}
+
+fn four_way_serverless(
+    cfg: &Config,
+    quick: bool,
+    label: &str,
+    dags: Vec<(String, Dag)>,
+    caption: &'static str,
+    id: &'static str,
+) -> (Figure, Vec<(String, [crate::storage::KvsMetrics; 2])>) {
+    let mut t = Table::new(vec![
+        label,
+        "wukong multi-redis (s)",
+        "wukong 1-redis (s)",
+        "numpywren s3 (s)",
+        "numpywren 1-redis (s)",
+    ]);
+    let mut ios = Vec::new();
+    for (size, dag) in dags {
+        let wk_multi_cfg = wukong_cfg(cfg);
+        let wk_multi = run_wukong(&dag, &wk_multi_cfg, cfg.seed);
+        let wk_single = run_wukong(&dag, &single_redis(&wk_multi_cfg), cfg.seed);
+        let np_s3 = run_numpywren(&dag, &s3(cfg), cfg.seed);
+        let np_single = run_numpywren(&dag, &single_redis(cfg), cfg.seed);
+        let _ = quick;
+        t.row(vec![
+            size.clone(),
+            format!("{:.2}", wk_multi.metrics.makespan_s),
+            format!("{:.2}", wk_single.metrics.makespan_s),
+            format!("{:.2}", np_s3.makespan_s),
+            format!("{:.2}", np_single.makespan_s),
+        ]);
+        ios.push((size, [wk_multi.metrics.kvs, np_s3.kvs]));
+    }
+    (
+        Figure {
+            id,
+            caption,
+            table: t,
+        },
+        ios,
+    )
+}
+
+fn gemm_dags(quick: bool) -> Vec<(String, Dag)> {
+    let sizes: &[usize] = if quick { &[5, 15] } else { &[5, 10, 15, 20, 25] };
+    sizes
+        .iter()
+        .map(|&nk| {
+            (
+                format!("{nk}k"),
+                gemm::dag(gemm::GemmParams::paper(nk)),
+            )
+        })
+        .collect()
+}
+
+fn tsqr_dags(quick: bool) -> Vec<(String, Dag)> {
+    let sizes: &[f64] = if quick {
+        &[1.0, 4.1]
+    } else {
+        &[1.0, 2.0, 4.1, 8.4, 16.7]
+    };
+    sizes
+        .iter()
+        .map(|&m| {
+            (
+                format!("{m}M"),
+                tsqr::dag(tsqr::TsqrParams::paper(m)),
+            )
+        })
+        .collect()
+}
+
+/// Fig. 13: GEMM end-to-end, Wukong vs numpywren.
+pub fn fig13(cfg: &Config, quick: bool) -> Figure {
+    four_way_serverless(
+        cfg,
+        quick,
+        "n",
+        gemm_dags(quick),
+        "GEMM: hard for serverless, but Wukong well ahead of numpywren",
+        "fig13",
+    )
+    .0
+}
+
+/// Fig. 14: TSQR end-to-end (log scale in the paper).
+pub fn fig14(cfg: &Config, quick: bool) -> Figure {
+    four_way_serverless(
+        cfg,
+        quick,
+        "rows",
+        tsqr_dags(quick),
+        "TSQR: Wukong up to ~68x faster than numpywren (single-Redis \
+         pairing)",
+        "fig14",
+    )
+    .0
+}
+
+fn io_figure(
+    cfg: &Config,
+    quick: bool,
+    label: &str,
+    dags: Vec<(String, Dag)>,
+    caption: &'static str,
+    id: &'static str,
+) -> Figure {
+    let mut t = Table::new(vec![
+        label,
+        "wukong read",
+        "wukong written",
+        "numpywren read",
+        "numpywren written",
+        "write ratio",
+    ]);
+    let wcfg = wukong_cfg(cfg);
+    for (size, dag) in dags {
+        let _ = quick;
+        let wk = run_wukong(&dag, &wcfg, cfg.seed).metrics.kvs;
+        let np = run_numpywren(&dag, &s3(cfg), cfg.seed).kvs;
+        t.row(vec![
+            size,
+            fmt_b(wk.bytes_read as f64),
+            fmt_b(wk.bytes_written as f64),
+            fmt_b(np.bytes_read as f64),
+            fmt_b(np.bytes_written as f64),
+            format!(
+                "{:.0}x",
+                np.bytes_written as f64 / (wk.bytes_written.max(1)) as f64
+            ),
+        ]);
+    }
+    Figure {
+        id,
+        caption,
+        table: t,
+    }
+}
+
+/// Fig. 15: GEMM I/O volumes.
+pub fn fig15(cfg: &Config, quick: bool) -> Figure {
+    io_figure(
+        cfg,
+        quick,
+        "n",
+        gemm_dags(quick),
+        "GEMM I/O: Wukong reads ~45-50% less, writes up to 85% less",
+        "fig15",
+    )
+}
+
+/// Fig. 16: TSQR I/O volumes.
+pub fn fig16(cfg: &Config, quick: bool) -> Figure {
+    io_figure(
+        cfg,
+        quick,
+        "rows",
+        tsqr_dags(quick),
+        "TSQR I/O: numpywren writes ~4 orders of magnitude more",
+        "fig16",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsqr_wukong_beats_numpywren_single_redis() {
+        // The paper's 68x headline pairing (we assert the direction and
+        // a large factor, not the absolute value).
+        let cfg = Config::default();
+        let dag = tsqr::dag(tsqr::TsqrParams {
+            rows: 1 << 21,
+            cols: 128,
+            block_rows: 4096,
+            with_q: false,
+        });
+        let wk = run_wukong(&dag, &single_redis(&wukong_cfg(&cfg)), 1)
+            .metrics
+            .makespan_s;
+        let np = run_numpywren(&dag, &single_redis(&cfg), 1).makespan_s;
+        assert!(
+            np > 3.0 * wk,
+            "expected numpywren ({np:.1}s) >> wukong ({wk:.1}s)"
+        );
+    }
+
+    #[test]
+    fn tsqr_write_reduction_is_orders_of_magnitude() {
+        let cfg = Config::default();
+        let dag = tsqr::dag(tsqr::TsqrParams {
+            rows: 1 << 21,
+            cols: 128,
+            block_rows: 4096,
+            with_q: false,
+        });
+        let wk = run_wukong(&dag, &wukong_cfg(&cfg), 1).metrics.kvs;
+        let np = run_numpywren(&dag, &cfg, 1).kvs;
+        let ratio = np.bytes_written as f64 / wk.bytes_written.max(1) as f64;
+        // The stateless Q-bundle writes dominate: we reproduce ~1.5 orders
+        // of magnitude of the paper's 4 (see EXPERIMENTS.md for analysis).
+        assert!(ratio > 25.0, "write ratio only {ratio:.1}x");
+    }
+
+    #[test]
+    fn gemm_wukong_reduces_io() {
+        let cfg = Config::default();
+        let dag = gemm::dag(gemm::GemmParams::paper(10));
+        let wk = run_wukong(&dag, &wukong_cfg(&cfg), 1).metrics.kvs;
+        let np = run_numpywren(&dag, &cfg, 1).kvs;
+        assert!(wk.bytes_read < np.bytes_read);
+        assert!(wk.bytes_written < np.bytes_written);
+    }
+
+    #[test]
+    fn dask_oom_fires_for_thin_workers_on_big_panels() {
+        let dag = svd::svd2(svd::Svd2Params::paper(200));
+        assert!(dask_oom(&dag, &DaskConfig::workers_1000()));
+        assert!(!dask_oom(&dag, &DaskConfig::workers_125()));
+    }
+}

@@ -1,0 +1,97 @@
+//! Figure harness: regenerates every table/figure of the paper's
+//! evaluation (§4) on the simulator.
+//!
+//! Each `figN` function returns a [`Table`] whose rows are the same
+//! series the paper plots. Absolute numbers differ (our substrate is a
+//! calibrated simulator, not AWS), but the *shapes* — who wins, by what
+//! factor, where crossovers fall — are the reproduction targets recorded
+//! in EXPERIMENTS.md. Run via `wukong figure <id>` or `cargo bench`.
+
+pub mod ablation;
+pub mod amplification;
+pub mod cost;
+pub mod end_to_end;
+pub mod scaling;
+pub mod sensitivity;
+
+use crate::config::Config;
+use crate::util::table::Table;
+
+/// A regenerated figure: id, caption, and the data table.
+pub struct Figure {
+    pub id: &'static str,
+    pub caption: &'static str,
+    pub table: Table,
+}
+
+/// All figure ids, in paper order.
+pub fn all_ids() -> Vec<&'static str> {
+    vec![
+        "fig2", "fig3", "fig4", "fig9", "fig10", "fig11", "fig12", "fig13",
+        "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
+        "fig21", "fig22", "fig23", "sens1", "sens2", "sens3",
+    ]
+}
+
+/// Run one figure. `quick` shrinks problem sizes/repetitions (used by the
+/// test suite and the smoke bench; the full sizes run in `cargo bench` /
+/// the CLI).
+pub fn run(id: &str, cfg: &Config, quick: bool) -> Option<Figure> {
+    match id {
+        "fig2" => Some(scaling::fig2(cfg, quick)),
+        "fig3" => Some(amplification::fig3(cfg, quick)),
+        "fig4" => Some(amplification::fig4(cfg, quick)),
+        "fig9" => Some(end_to_end::fig9(cfg, quick)),
+        "fig10" => Some(end_to_end::fig10(cfg, quick)),
+        "fig11" => Some(end_to_end::fig11(cfg, quick)),
+        "fig12" => Some(end_to_end::fig12(cfg, quick)),
+        "fig13" => Some(end_to_end::fig13(cfg, quick)),
+        "fig14" => Some(end_to_end::fig14(cfg, quick)),
+        "fig15" => Some(end_to_end::fig15(cfg, quick)),
+        "fig16" => Some(end_to_end::fig16(cfg, quick)),
+        "fig17" => Some(cost::fig17(cfg, quick)),
+        "fig18" => Some(cost::fig18(cfg, quick)),
+        "fig19" => Some(cost::fig19(cfg, quick)),
+        "fig20" => Some(cost::fig20(cfg, quick)),
+        "fig21" => Some(scaling::fig21(cfg, quick)),
+        "fig22" => Some(ablation::fig22(cfg, quick)),
+        "fig23" => Some(ablation::fig23(cfg, quick)),
+        "sens1" => Some(sensitivity::sens_partition(cfg, quick)),
+        "sens2" => Some(sensitivity::sens_shards(cfg, quick)),
+        "sens3" => Some(sensitivity::sens_threshold(cfg, quick)),
+        _ => None,
+    }
+}
+
+/// Mean of `runs` repetitions of `f(seed)`.
+pub(crate) fn avg(cfg: &Config, quick: bool, mut f: impl FnMut(u64) -> f64) -> f64 {
+    let runs = if quick { 1 } else { cfg.runs.max(1) };
+    let mut acc = 0.0;
+    for r in 0..runs {
+        acc += f(cfg.seed + r as u64);
+    }
+    acc / runs as f64
+}
+
+pub(crate) fn fmt_b(x: f64) -> String {
+    crate::util::stats::human_bytes(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_id_runs_quick() {
+        let cfg = Config::default();
+        for id in all_ids() {
+            let fig = run(id, &cfg, true).unwrap_or_else(|| panic!("{id}"));
+            assert!(!fig.table.is_empty(), "{id} produced no rows");
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(run("fig99", &Config::default(), true).is_none());
+    }
+}

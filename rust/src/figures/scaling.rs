@@ -1,0 +1,166 @@
+//! Figures 2 and 21: scale-out and strong/weak/serverless scaling.
+
+use crate::baselines::{pywren_launch_time, run_pywren};
+use crate::config::Config;
+use crate::coordinator::run_wukong;
+use crate::sim::secs;
+use crate::util::table::Table;
+use crate::workloads::micro;
+
+use super::{avg, Figure};
+
+/// Fig. 2: (Num)PyWren's ability to schedule N no-op tasks on N Lambdas,
+/// vs Wukong on the same workload.
+pub fn fig2(cfg: &Config, quick: bool) -> Figure {
+    let ns: &[usize] = if quick {
+        &[100, 500]
+    } else {
+        &[100, 1_000, 2_000, 5_000, 10_000]
+    };
+    let mut t = Table::new(vec![
+        "no-op tasks",
+        "pywren launch (s)",
+        "pywren e2e (s)",
+        "wukong e2e (s)",
+    ]);
+    for &n in ns {
+        let mut c = cfg.clone();
+        c.lambda.concurrency_limit = c.lambda.concurrency_limit.max(n);
+        let dag = micro::serverless(n, 0);
+        let launch = pywren_launch_time(&c, n);
+        let pw = avg(&c, quick, |s| run_pywren(&dag, &c, n, s).makespan_s);
+        let wk = avg(&c, quick, |s| run_wukong(&dag, &c, s).metrics.makespan_s);
+        t.row(vec![
+            n.to_string(),
+            format!("{launch:.2}"),
+            format!("{pw:.2}"),
+            format!("{wk:.2}"),
+        ]);
+    }
+    Figure {
+        id: "fig2",
+        caption: "PyWren no-op scale-out (paper: ~2 min to 10k Lambdas; \
+                  Wukong: seconds)",
+        table: t,
+    }
+}
+
+/// Fig. 21(a)–(l): strong / weak / serverless scaling, Wukong vs
+/// (Num)PyWren, for per-task delays of 0/100/250/500 ms.
+pub fn fig21(cfg: &Config, quick: bool) -> Figure {
+    let delays_ms: &[u64] = if quick { &[0, 250] } else { &[0, 100, 250, 500] };
+    let mut t = Table::new(vec![
+        "mode",
+        "delay (ms)",
+        "lambdas",
+        "wukong (s)",
+        "pywren (s)",
+    ]);
+    let strong_n: &[usize] = if quick {
+        &[100, 500]
+    } else {
+        &[500, 1_000, 2_000, 5_000]
+    };
+    let weak_n: &[usize] = if quick {
+        &[100, 250]
+    } else {
+        &[250, 500, 750, 1_000]
+    };
+    let sls_n: &[usize] = if quick {
+        &[100, 500]
+    } else {
+        &[1_000, 2_500, 5_000, 10_000]
+    };
+    let total_strong = if quick { 1_000 } else { 10_000 };
+
+    for &d in delays_ms {
+        let dur = secs(d as f64 / 1000.0);
+        for &n in strong_n {
+            let dag = micro::strong(total_strong, n, dur);
+            let (wk, pw) = pair(cfg, quick, &dag, n);
+            t.row(vec![
+                "strong".into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{wk:.2}"),
+                format!("{pw:.2}"),
+            ]);
+        }
+        for &n in weak_n {
+            let dag = micro::weak(n, 10, dur);
+            let (wk, pw) = pair(cfg, quick, &dag, n);
+            t.row(vec![
+                "weak".into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{wk:.2}"),
+                format!("{pw:.2}"),
+            ]);
+        }
+        for &n in sls_n {
+            let dag = micro::serverless(n, dur);
+            let (wk, pw) = pair(cfg, quick, &dag, n);
+            t.row(vec![
+                "serverless".into(),
+                d.to_string(),
+                n.to_string(),
+                format!("{wk:.2}"),
+                format!("{pw:.2}"),
+            ]);
+        }
+    }
+    Figure {
+        id: "fig21",
+        caption: "Strong/weak/serverless scaling: Wukong near-ideal, \
+                  (Num)PyWren degrades with Lambda count",
+        table: t,
+    }
+}
+
+fn pair(cfg: &Config, quick: bool, dag: &crate::dag::Dag, n: usize) -> (f64, f64) {
+    let mut c = cfg.clone();
+    c.lambda.concurrency_limit = c.lambda.concurrency_limit.max(n);
+    let wk = avg(&c, quick, |s| run_wukong(dag, &c, s).metrics.makespan_s);
+    let pw = avg(&c, quick, |s| run_pywren(dag, &c, n, s).makespan_s);
+    (wk, pw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_pywren_slower_than_wukong_at_scale() {
+        let fig = fig2(&Config::default(), true);
+        assert_eq!(fig.table.n_rows(), 2);
+    }
+
+    #[test]
+    fn wukong_serverless_scaling_beats_pywren() {
+        // The headline: N tasks on N Lambdas — Wukong ~seconds, PyWren
+        // grows with N.
+        let cfg = Config::default();
+        let dag = micro::serverless(2_000, 0);
+        let wk = run_wukong(&dag, &cfg, 1).metrics.makespan_s;
+        let pw = run_pywren(&dag, &cfg, 2_000, 1).makespan_s;
+        assert!(
+            wk < pw,
+            "wukong {wk:.2}s should beat pywren {pw:.2}s at 2k lambdas"
+        );
+        assert!(wk < 10.0, "wukong should scale out in seconds, got {wk:.2}");
+    }
+
+    #[test]
+    fn wukong_weak_scaling_is_flat() {
+        // Near-ideal weak scaling: 2x the executors, ~same makespan.
+        let cfg = Config::default();
+        let d1 = micro::weak(250, 10, secs(0.1));
+        let d2 = micro::weak(1_000, 10, secs(0.1));
+        let t1 = run_wukong(&d1, &cfg, 1).metrics.makespan_s;
+        let t2 = run_wukong(&d2, &cfg, 1).metrics.makespan_s;
+        assert!(
+            t2 < t1 * 2.0,
+            "weak scaling blew up: {t1:.2}s -> {t2:.2}s"
+        );
+    }
+}

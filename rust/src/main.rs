@@ -1,0 +1,182 @@
+//! `wukong` — the launcher: figures, workload runs, DAG inspection, and
+//! the real-engine (PJRT) demo.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use wukong::baselines::{run_dask, run_numpywren};
+use wukong::cli::{Args, USAGE};
+use wukong::config::{apply_overrides, Config, DaskConfig};
+use wukong::coordinator::run_wukong;
+use wukong::dag::Dag;
+use wukong::workloads::{gemm, svc, svd, tr, tsqr};
+use wukong::{figures, util};
+
+fn build_workload(name: &str) -> Option<Dag> {
+    Some(match name {
+        "tr" => tr::dag(tr::TrParams::default()),
+        "gemm" => gemm::dag(gemm::GemmParams::paper(25)),
+        "tsqr" => tsqr::dag(tsqr::TsqrParams::paper(4.0)),
+        "svd1" => svd::svd1(svd::Svd1Params::paper(1.0)),
+        "svd2" => svd::svd2(svd::Svd2Params::paper(50)),
+        "svc" => svc::dag(svc::SvcParams::paper(1.0)),
+        _ => return None,
+    })
+}
+
+fn main() -> ExitCode {
+    match run(std::env::args().skip(1).collect()) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config, String> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_file(Path::new(path))?,
+        None => Config::default(),
+    };
+    apply_overrides(&mut cfg, &args.sets)?;
+    if let Some(runs) = args.opt("runs") {
+        cfg.runs = runs.parse().map_err(|e| format!("--runs: {e}"))?;
+    }
+    if let Some(seed) = args.opt("seed") {
+        cfg.seed = seed.parse().map_err(|e| format!("--seed: {e}"))?;
+    }
+    Ok(cfg)
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "list" => {
+            println!("figures:   {}", figures::all_ids().join(" "));
+            println!("workloads: tr gemm tsqr svd1 svd2 svc");
+            Ok(())
+        }
+        "figure" => {
+            let cfg = load_config(&args)?;
+            let quick = args.flag("quick");
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            let ids = if id == "all" {
+                figures::all_ids()
+            } else {
+                vec![figures::all_ids()
+                    .into_iter()
+                    .find(|&x| x == id)
+                    .ok_or(format!("unknown figure {id:?} (try `wukong list`)"))?]
+            };
+            for id in ids {
+                let fig = figures::run(id, &cfg, quick).expect("registered id");
+                println!("== {} — {}", fig.id, fig.caption);
+                println!("{}", fig.table.render());
+            }
+            Ok(())
+        }
+        "run" => {
+            let cfg = load_config(&args)?;
+            let name = args
+                .positional
+                .first()
+                .ok_or("run: which workload? (try `wukong list`)")?;
+            let dag =
+                build_workload(name).ok_or(format!("unknown workload {name:?}"))?;
+            let engine = args.opt("engine").unwrap_or("wukong");
+            println!(
+                "workload {name}: {} tasks, {} edges, {} leaves",
+                dag.len(),
+                dag.n_edges(),
+                dag.leaves().len()
+            );
+            let m = match engine {
+                "wukong" => run_wukong(&dag, &cfg, cfg.seed).metrics,
+                "numpywren" => run_numpywren(&dag, &cfg, cfg.seed),
+                "dask1000" => {
+                    run_dask(&dag, &cfg, &DaskConfig::workers_1000(), cfg.seed)
+                }
+                "dask125" => {
+                    run_dask(&dag, &cfg, &DaskConfig::workers_125(), cfg.seed)
+                }
+                other => return Err(format!("unknown engine {other:?}")),
+            };
+            let mut t = util::table::Table::new(vec!["metric", "value"]);
+            t.row(vec![
+                "makespan".to_string(),
+                util::stats::human_secs(m.makespan_s),
+            ]);
+            t.row(vec!["tasks executed".to_string(), m.tasks_executed.to_string()]);
+            t.row(vec!["executors used".to_string(), m.executors_used.to_string()]);
+            t.row(vec![
+                "peak concurrency".to_string(),
+                m.peak_concurrency.to_string(),
+            ]);
+            t.row(vec![
+                "KVS read".to_string(),
+                util::stats::human_bytes(m.kvs.bytes_read as f64),
+            ]);
+            t.row(vec![
+                "KVS written".to_string(),
+                util::stats::human_bytes(m.kvs.bytes_written as f64),
+            ]);
+            t.row(vec!["CPU core-s".to_string(), format!("{:.1}", m.cpu_seconds)]);
+            t.row(vec!["cost".to_string(), format!("${:.4}", m.dollars())]);
+            println!("{}", t.render());
+            Ok(())
+        }
+        "dag" => {
+            let name = args
+                .positional
+                .first()
+                .ok_or("dag: which workload?")?;
+            let dag =
+                build_workload(name).ok_or(format!("unknown workload {name:?}"))?;
+            println!("{}", dag.to_dot());
+            Ok(())
+        }
+        "serve" => {
+            let quick = args.flag("quick");
+            serve_demo(quick).map_err(|e| e.to_string())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    }
+}
+
+/// Real-engine demo: run a small TSQR with real PJRT compute and verify
+/// the factorization end to end.
+fn serve_demo(quick: bool) -> anyhow::Result<()> {
+    use wukong::engine::{run_real_wukong, seed_inputs, RealConfig};
+    use wukong::runtime::{default_artifact_dir, SharedRuntime};
+    use wukong::storage::real_kvs::RealKvs;
+
+    let rt = SharedRuntime::load(&default_artifact_dir())?;
+    rt.warmup()?;
+    let nb = if quick { 2 } else { 8 };
+    let dag = tsqr::dag(tsqr::TsqrParams {
+        rows: 1024 * nb,
+        cols: 128,
+        block_rows: 1024,
+        with_q: true,
+    });
+    let kvs = RealKvs::new(16, 0.0, 0.0);
+    seed_inputs(&dag, &kvs, 7);
+    let report = run_real_wukong(&dag, rt, kvs, RealConfig::default())?;
+    println!(
+        "real TSQR ({} tasks): {:?}, {} executors, KVS {} B written",
+        report.tasks_executed,
+        report.makespan,
+        report.executors_used,
+        report.kvs_bytes_written
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Run metrics: makespan, I/O, time breakdowns (Fig. 22), vCPU/cost
+//! timelines (Figs. 19–20), CPU-seconds (Fig. 17) and billing (Fig. 18).
+
+pub mod timeline;
+
+use crate::platform::{Billing, Prices};
+use crate::storage::KvsMetrics;
+pub use timeline::Timeline;
+
+/// Aggregate seconds per activity category (paper Fig. 22's bars).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    /// Invoking other executors (incl. delegated fan-outs).
+    pub invoke_s: f64,
+    /// Reading intermediate objects from the KVS.
+    pub kvs_read_s: f64,
+    /// Writing intermediate objects to the KVS.
+    pub kvs_write_s: f64,
+    /// Executing task bodies.
+    pub execute_s: f64,
+    /// Serialization/deserialization.
+    pub serde_s: f64,
+    /// Publishing messages (MDS/counter/proxy traffic).
+    pub publish_s: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.invoke_s
+            + self.kvs_read_s
+            + self.kvs_write_s
+            + self.execute_s
+            + self.serde_s
+            + self.publish_s
+    }
+}
+
+/// Everything one engine run reports.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// End-to-end job time (s).
+    pub makespan_s: f64,
+    /// Per-category aggregate time across all executors.
+    pub breakdown: Breakdown,
+    /// Exact KVS byte/op counters.
+    pub kvs: KvsMetrics,
+    /// Executor-count timeline (×vCPUs per executor for vCPU plots).
+    pub timeline: Timeline,
+    /// Tenant-side billing meter.
+    pub billing: Billing,
+    /// Lambda invocations (or worker-task dispatches for serverful).
+    pub invocations: u64,
+    /// Tasks executed (must equal the DAG size exactly — tested).
+    pub tasks_executed: u64,
+    /// Distinct executors used.
+    pub executors_used: u64,
+    /// Peak concurrent executors.
+    pub peak_concurrency: usize,
+    /// Total active-executor core-seconds (Fig. 17).
+    pub cpu_seconds: f64,
+    /// Executors that died with an exhausted retry budget (§3.6): when
+    /// nonzero the job is failed, mirroring AWS's retry-twice contract.
+    pub failed_executors: u64,
+}
+
+impl RunMetrics {
+    /// Total dollars under the default price book.
+    pub fn dollars(&self) -> f64 {
+        self.billing.total(&Prices::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_sums_categories() {
+        let b = Breakdown {
+            invoke_s: 1.0,
+            kvs_read_s: 2.0,
+            kvs_write_s: 3.0,
+            execute_s: 4.0,
+            serde_s: 5.0,
+            publish_s: 6.0,
+        };
+        assert_eq!(b.total(), 21.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Concurrency timelines: executor-count deltas → vCPU/cost-over-time
+//! series (Figs. 19–20).
+
+use crate::sim::{to_secs, Time};
+
+/// Event-sourced concurrency counter.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    deltas: Vec<(Time, i64)>,
+}
+
+impl Timeline {
+    /// Record a concurrency change (`+1` executor start, `-1` finish).
+    pub fn add(&mut self, t: Time, delta: i64) {
+        self.deltas.push((t, delta));
+    }
+
+    fn sorted(&self) -> Vec<(Time, i64)> {
+        let mut d = self.deltas.clone();
+        d.sort_by_key(|&(t, _)| t);
+        d
+    }
+
+    /// Peak simultaneous count.
+    pub fn peak(&self) -> i64 {
+        let mut cur = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in self.sorted() {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        peak
+    }
+
+    /// Integral of the count over time, in unit-seconds (×vCPUs/executor
+    /// gives core-seconds, Fig. 17).
+    pub fn integral_s(&self) -> f64 {
+        let d = self.sorted();
+        let mut cur = 0i64;
+        let mut last = 0 as Time;
+        let mut acc = 0.0;
+        for (t, delta) in d {
+            acc += cur as f64 * to_secs(t - last);
+            cur += delta;
+            last = t;
+        }
+        acc
+    }
+
+    /// Step series sampled at `step` intervals from 0 to `end`:
+    /// `(t_seconds, active_count)`.
+    pub fn series(&self, step: Time, end: Time) -> Vec<(f64, i64)> {
+        let d = self.sorted();
+        let mut out = Vec::new();
+        let mut cur = 0i64;
+        let mut i = 0;
+        let mut t = 0 as Time;
+        loop {
+            while i < d.len() && d[i].0 <= t {
+                cur += d[i].1;
+                i += 1;
+            }
+            out.push((to_secs(t), cur));
+            if t >= end {
+                break;
+            }
+            t = (t + step).min(end);
+        }
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    /// Merge another timeline in (multi-engine aggregation).
+    pub fn merge(&mut self, other: &Timeline) {
+        self.deltas.extend_from_slice(&other.deltas);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::secs;
+
+    #[test]
+    fn peak_counts_overlap() {
+        let mut tl = Timeline::default();
+        tl.add(secs(0.0), 1);
+        tl.add(secs(1.0), 1);
+        tl.add(secs(2.0), -1);
+        tl.add(secs(3.0), -1);
+        assert_eq!(tl.peak(), 2);
+    }
+
+    #[test]
+    fn integral_is_area_under_curve() {
+        let mut tl = Timeline::default();
+        tl.add(secs(0.0), 2); // 2 executors for 5 s = 10 unit-seconds
+        tl.add(secs(5.0), -2);
+        assert!((tl.integral_s() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_steps() {
+        let mut tl = Timeline::default();
+        tl.add(secs(0.0), 1);
+        tl.add(secs(2.0), -1);
+        let s = tl.series(secs(1.0), secs(3.0));
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].1, 1);
+        assert_eq!(s[1].1, 1);
+        assert_eq!(s[2].1, 0);
+        assert_eq!(s[3].1, 0);
+    }
+
+    #[test]
+    fn out_of_order_adds_are_sorted() {
+        let mut tl = Timeline::default();
+        tl.add(secs(5.0), -1);
+        tl.add(secs(0.0), 1);
+        assert_eq!(tl.peak(), 1);
+        assert!((tl.integral_s() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,142 @@
+//! Tenant-side billing model (Fig. 18–20: cost comparisons).
+//!
+//! Prices are AWS us-east-1 as of the paper's timeframe (2020):
+//! Lambda $0.0000166667/GB-s + $0.20/1M requests; c5.4xlarge $0.68/h;
+//! r5n.16xlarge $4.768/h; Fargate $0.04048/vCPU-h + $0.004445/GB-h;
+//! ElastiCache cache.r5.large $0.216/h.
+
+/// Price book (override for sensitivity studies).
+#[derive(Debug, Clone)]
+pub struct Prices {
+    pub lambda_gb_s: f64,
+    pub lambda_per_invoke: f64,
+    pub c5_4xlarge_h: f64,
+    pub r5n_16xlarge_h: f64,
+    pub fargate_vcpu_h: f64,
+    pub fargate_gb_h: f64,
+    pub elasticache_node_h: f64,
+}
+
+impl Default for Prices {
+    fn default() -> Self {
+        Prices {
+            lambda_gb_s: 0.000_016_666_7,
+            lambda_per_invoke: 0.20 / 1e6,
+            c5_4xlarge_h: 0.68,
+            r5n_16xlarge_h: 4.768,
+            fargate_vcpu_h: 0.040_48,
+            fargate_gb_h: 0.004_445,
+            elasticache_node_h: 0.216,
+        }
+    }
+}
+
+/// Accumulating tenant-side cost meter.
+#[derive(Debug, Clone, Default)]
+pub struct Billing {
+    /// Total Lambda GB-seconds consumed.
+    pub lambda_gb_s: f64,
+    /// Number of Lambda invocations.
+    pub invocations: u64,
+    /// Fargate (vCPU-hours, GB-hours) for the storage cluster.
+    pub fargate_vcpu_h: f64,
+    pub fargate_gb_h: f64,
+    /// Scheduler VM hours (r5n.16xlarge).
+    pub scheduler_vm_h: f64,
+    /// Dask/EC2 cluster dollars (precomputed: $/h × h).
+    pub ec2_dollars: f64,
+    /// ElastiCache node hours.
+    pub elasticache_node_h: f64,
+}
+
+impl Billing {
+    /// Charge one executor's lifetime.
+    pub fn charge_lambda(&mut self, memory_gb: f64, runtime_s: f64) {
+        // AWS bills in 1 ms increments (100 ms pre-2020; we use 1 ms).
+        let billed = (runtime_s * 1000.0).ceil() / 1000.0;
+        self.lambda_gb_s += memory_gb * billed;
+        self.invocations += 1;
+    }
+
+    /// Charge the Fargate storage cluster for the job's duration.
+    pub fn charge_fargate(&mut self, nodes: usize, vcpus: f64, gb: f64, hours: f64) {
+        self.fargate_vcpu_h += nodes as f64 * vcpus * hours;
+        self.fargate_gb_h += nodes as f64 * gb * hours;
+    }
+
+    pub fn charge_scheduler_vm(&mut self, hours: f64) {
+        self.scheduler_vm_h += hours;
+    }
+
+    pub fn charge_ec2(&mut self, dollars_per_hour: f64, hours: f64) {
+        self.ec2_dollars += dollars_per_hour * hours;
+    }
+
+    pub fn charge_elasticache(&mut self, nodes: usize, hours: f64) {
+        self.elasticache_node_h += nodes as f64 * hours;
+    }
+
+    /// Total dollars under a price book.
+    pub fn total(&self, p: &Prices) -> f64 {
+        self.lambda_gb_s * p.lambda_gb_s
+            + self.invocations as f64 * p.lambda_per_invoke
+            + self.fargate_vcpu_h * p.fargate_vcpu_h
+            + self.fargate_gb_h * p.fargate_gb_h
+            + self.scheduler_vm_h * p.r5n_16xlarge_h
+            + self.ec2_dollars
+            + self.elasticache_node_h * p.elasticache_node_h
+    }
+
+    /// Lambda-only dollars (per-workload marginal cost).
+    pub fn lambda_total(&self, p: &Prices) -> f64 {
+        self.lambda_gb_s * p.lambda_gb_s
+            + self.invocations as f64 * p.lambda_per_invoke
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_billing_rounds_to_ms() {
+        let mut b = Billing::default();
+        b.charge_lambda(3.0, 0.0004);
+        assert!((b.lambda_gb_s - 3.0 * 0.001).abs() < 1e-12);
+        assert_eq!(b.invocations, 1);
+    }
+
+    #[test]
+    fn totals_combine_all_sources() {
+        let p = Prices::default();
+        let mut b = Billing::default();
+        b.charge_lambda(3.0, 10.0);
+        b.charge_fargate(75, 4.0, 30.0, 0.5);
+        b.charge_scheduler_vm(0.5);
+        let t = b.total(&p);
+        assert!(t > 0.0);
+        assert!(b.lambda_total(&p) < t);
+    }
+
+    #[test]
+    fn cost_monotone_in_usage() {
+        let p = Prices::default();
+        let mut a = Billing::default();
+        let mut b = Billing::default();
+        a.charge_lambda(3.0, 5.0);
+        b.charge_lambda(3.0, 10.0);
+        assert!(a.total(&p) < b.total(&p));
+    }
+
+    #[test]
+    fn ten_thousand_short_lambdas_cost_dollars_not_cents() {
+        // sanity vs the paper's scale: 10k × 3 GB × 1 s ≈ $0.50 + $0.002
+        let p = Prices::default();
+        let mut b = Billing::default();
+        for _ in 0..10_000 {
+            b.charge_lambda(3.0, 1.0);
+        }
+        let t = b.total(&p);
+        assert!(t > 0.4 && t < 0.7, "got {t}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Fault injection: executor crashes + the AWS retry-twice contract (§3.6).
+//!
+//! The paper relies on Lambda's automatic retry (up to two) for fault
+//! tolerance. The simulator can kill a configurable fraction of executor
+//! runs; a killed run is retried from its static-schedule start with the
+//! platform's invocation latency, up to `retries` times. Tests assert the
+//! job still completes and every task still executes effectively-once
+//! (results are idempotent because task outputs are keyed).
+
+use crate::util::Rng;
+
+/// Fault model: each executor run fails independently with `p_fail`.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub p_fail: f64,
+    pub max_retries: u32,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            p_fail: 0.0,
+            max_retries: 2,
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn with_failure_rate(p_fail: f64) -> FaultPlan {
+        FaultPlan {
+            p_fail,
+            max_retries: 2,
+        }
+    }
+
+    /// Decide whether a given attempt fails.
+    pub fn attempt_fails(&self, rng: &mut Rng) -> bool {
+        self.p_fail > 0.0 && rng.f64() < self.p_fail
+    }
+
+    /// Whether another retry is allowed after `attempt` failures.
+    pub fn can_retry(&self, attempt: u32) -> bool {
+        attempt < self.max_retries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_never_fails() {
+        let plan = FaultPlan::default();
+        let mut rng = Rng::new(1);
+        assert!((0..1000).all(|_| !plan.attempt_fails(&mut rng)));
+    }
+
+    #[test]
+    fn full_rate_always_fails() {
+        let plan = FaultPlan::with_failure_rate(1.0);
+        let mut rng = Rng::new(2);
+        assert!((0..100).all(|_| plan.attempt_fails(&mut rng)));
+    }
+
+    #[test]
+    fn retry_budget_is_two() {
+        let plan = FaultPlan::default();
+        assert!(plan.can_retry(0));
+        assert!(plan.can_retry(1));
+        assert!(!plan.can_retry(2));
+    }
+
+    #[test]
+    fn rate_is_roughly_respected() {
+        let plan = FaultPlan::with_failure_rate(0.3);
+        let mut rng = Rng::new(3);
+        let fails = (0..10_000).filter(|_| plan.attempt_fails(&mut rng)).count();
+        assert!((2_700..3_300).contains(&fails), "fails={fails}");
+    }
+}

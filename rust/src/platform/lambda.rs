@@ -1,0 +1,204 @@
+//! AWS-Lambda invocation/admission model.
+//!
+//! Captures the three platform effects the paper's figures hinge on:
+//!
+//! 1. **Invocation latency** — ~50 ms warm (lognormal-jittered), plus a
+//!    cold-start penalty for a configurable cold fraction (the evaluation
+//!    pre-warms, so the default cold fraction is 0).
+//! 2. **Concurrency limit** — at most N executors run at once (paper: the
+//!    account cap was 5 000); excess invocations queue for admission.
+//! 3. **Runtime ceiling** — executors are forcibly stopped at
+//!    `max_runtime_s` (420 s in the evaluation); the fault model retries.
+
+use crate::config::LambdaConfig;
+use crate::sim::{secs, Time};
+use crate::util::Rng;
+
+/// Admission + latency bookkeeping for a Lambda fleet.
+#[derive(Debug)]
+pub struct LambdaService {
+    cfg: LambdaConfig,
+    rng: Rng,
+    active: usize,
+    peak_active: usize,
+    queued: Vec<Time>, // admission FIFO: requested-at times (metrics only)
+    total_invocations: u64,
+    throttled: u64,
+}
+
+/// Outcome of an invocation request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Invocation {
+    /// When the executor actually starts running.
+    pub start_at: Time,
+    /// Whether the invocation hit a cold start.
+    pub cold: bool,
+}
+
+impl LambdaService {
+    pub fn new(cfg: LambdaConfig, rng: Rng) -> LambdaService {
+        LambdaService {
+            cfg,
+            rng,
+            active: 0,
+            peak_active: 0,
+            queued: Vec::new(),
+            total_invocations: 0,
+            throttled: 0,
+        }
+    }
+
+    /// Sampled invocation latency for a single request.
+    pub fn sample_invoke_latency(&mut self) -> Time {
+        let cold = self.rng.f64() < self.cfg.cold_fraction;
+        let mut lat = if self.cfg.invoke_jitter_sigma > 0.0 {
+            self.rng
+                .lognormal(self.cfg.invoke_latency_s, self.cfg.invoke_jitter_sigma)
+        } else {
+            self.cfg.invoke_latency_s
+        };
+        if cold {
+            lat += self.cfg.cold_start_s;
+        }
+        secs(lat)
+    }
+
+    /// Request an executor slot at time `now`, with the invocation call
+    /// issued now (latency sampled). Returns when the executor will begin.
+    ///
+    /// If the fleet is at the concurrency limit the request is *throttled*:
+    /// the caller must retry via [`LambdaService::release`]-driven wakeups;
+    /// for simplicity we model throttling as an extra queued delay equal to
+    /// the invocation latency (AWS surfaces it as a retryable error).
+    pub fn invoke(&mut self, now: Time) -> Invocation {
+        let lat = self.sample_invoke_latency();
+        self.admit(now + lat)
+    }
+
+    /// Admission only: the invocation API latency has already been paid by
+    /// the caller (invoker-pool service time / client-side blocking call);
+    /// this accounts for the concurrency limit and slot bookkeeping.
+    pub fn admit(&mut self, at: Time) -> Invocation {
+        self.total_invocations += 1;
+        let mut start_at = at;
+        if self.active >= self.cfg.concurrency_limit {
+            // Throttled: backoff-and-retry delay.
+            self.throttled += 1;
+            self.queued.push(at);
+            start_at += secs(self.cfg.invoke_latency_s * 2.0);
+        }
+        self.active += 1;
+        self.peak_active = self.peak_active.max(self.active);
+        Invocation {
+            start_at,
+            cold: false,
+        }
+    }
+
+    /// An executor finished and its slot is free again.
+    pub fn release(&mut self) {
+        debug_assert!(self.active > 0);
+        self.active -= 1;
+    }
+
+    /// Runtime ceiling in virtual time.
+    pub fn max_runtime(&self) -> Time {
+        secs(self.cfg.max_runtime_s)
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn peak_active(&self) -> usize {
+        self.peak_active
+    }
+
+    pub fn total_invocations(&self) -> u64 {
+        self.total_invocations
+    }
+
+    pub fn throttled(&self) -> u64 {
+        self.throttled
+    }
+
+    /// vCPUs allocated per function: AWS scales CPU with memory; 1 792 MB
+    /// ≈ 1 vCPU, so a 3 GB function gets ~1.67 vCPUs (we round to 2 like
+    /// the paper's vCPU plots).
+    pub fn vcpus_per_fn(&self) -> f64 {
+        (self.cfg.memory_gb * 1024.0 / 1792.0).ceil()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc(limit: usize) -> LambdaService {
+        let cfg = LambdaConfig {
+            concurrency_limit: limit,
+            invoke_jitter_sigma: 0.0,
+            ..LambdaConfig::default()
+        };
+        LambdaService::new(cfg, Rng::new(1))
+    }
+
+    #[test]
+    fn warm_invoke_is_50ms() {
+        let mut s = svc(10);
+        let inv = s.invoke(0);
+        assert_eq!(inv.start_at, secs(0.050));
+        assert!(!inv.cold);
+    }
+
+    #[test]
+    fn concurrency_limit_throttles() {
+        let mut s = svc(2);
+        s.invoke(0);
+        s.invoke(0);
+        let third = s.invoke(0);
+        assert!(third.start_at > secs(0.050));
+        assert_eq!(s.throttled(), 1);
+    }
+
+    #[test]
+    fn release_frees_slots() {
+        let mut s = svc(1);
+        s.invoke(0);
+        s.release();
+        let inv = s.invoke(secs(1.0));
+        assert_eq!(inv.start_at, secs(1.050));
+        assert_eq!(s.throttled(), 0);
+    }
+
+    #[test]
+    fn peak_active_tracks_high_water() {
+        let mut s = svc(100);
+        for _ in 0..7 {
+            s.invoke(0);
+        }
+        for _ in 0..3 {
+            s.release();
+        }
+        assert_eq!(s.active(), 4);
+        assert_eq!(s.peak_active(), 7);
+    }
+
+    #[test]
+    fn cold_start_adds_penalty() {
+        let cfg = LambdaConfig {
+            cold_fraction: 1.0,
+            invoke_jitter_sigma: 0.0,
+            ..LambdaConfig::default()
+        };
+        let mut s = LambdaService::new(cfg, Rng::new(2));
+        let inv = s.invoke(0);
+        assert!(inv.start_at >= secs(0.55));
+    }
+
+    #[test]
+    fn vcpus_for_3gb_is_2() {
+        let s = svc(1);
+        assert_eq!(s.vcpus_per_fn(), 2.0);
+    }
+}

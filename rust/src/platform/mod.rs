@@ -1,0 +1,16 @@
+//! Serverless-platform substrate: the AWS-Lambda invocation model,
+//! tenant-side billing, and fault injection.
+//!
+//! The paper's evaluation ran on AWS; we do not have it, so this module
+//! carries the platform behaviours the results depend on: invocation
+//! latency (~50 ms warm), memory→CPU bundling, the 5 000-Lambda
+//! concurrency limit, the runtime ceiling, per-GB-second billing, and the
+//! retry-twice fault tolerance contract (§3.6). See DESIGN.md
+//! "Substitutions".
+
+pub mod billing;
+pub mod faults;
+pub mod lambda;
+
+pub use billing::{Billing, Prices};
+pub use lambda::LambdaService;

@@ -1,0 +1,347 @@
+//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`). The
+//! interchange format is HLO *text* because the bundled xla_extension
+//! 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized protos (text parsing
+//! reassigns ids). Executables are compiled once per op and cached; the
+//! Rust request path never touches Python.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A dense f32 tensor (row-major), the value type flowing through the
+/// real engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Serialize: shape rank + dims + payload (little-endian).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.data.len() * 4);
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for d in &self.shape {
+            out.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        for x in &self.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Tensor> {
+        if b.len() < 4 {
+            bail!("tensor blob too short");
+        }
+        let rank = u32::from_le_bytes(b[0..4].try_into()?) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        let mut off = 4;
+        for _ in 0..rank {
+            if b.len() < off + 4 {
+                bail!("tensor blob truncated header");
+            }
+            shape.push(u32::from_le_bytes(b[off..off + 4].try_into()?) as usize);
+            off += 4;
+        }
+        let n: usize = shape.iter().product();
+        if b.len() != off + n * 4 {
+            bail!("tensor blob size mismatch");
+        }
+        let data = b[off..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { shape, data })
+    }
+}
+
+/// Manifest entry for one AOT op.
+#[derive(Debug, Clone)]
+pub struct OpSpec {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+    pub flops: u64,
+}
+
+/// The artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    ops: BTreeMap<String, OpSpec>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+fn parse_shapes(v: &Json) -> Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|e| {
+            e.get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing shape"))
+                .map(|dims| {
+                    dims.iter()
+                        .map(|d| d.as_u64().unwrap_or(0) as usize)
+                        .collect()
+                })
+        })
+        .collect()
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` (default `artifacts/`) and create the
+    /// PJRT CPU client. Executables compile lazily on first use.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "{} missing — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut ops = BTreeMap::new();
+        for (name, entry) in j
+            .get("ops")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest has no ops"))?
+        {
+            ops.insert(
+                name.clone(),
+                OpSpec {
+                    name: name.clone(),
+                    file: entry
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: no file"))?
+                        .to_string(),
+                    input_shapes: parse_shapes(
+                        entry.get("inputs").ok_or_else(|| anyhow!("inputs"))?,
+                    )?,
+                    output_shapes: parse_shapes(
+                        entry.get("outputs").ok_or_else(|| anyhow!("outputs"))?,
+                    )?,
+                    flops: entry
+                        .get("flops")
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0),
+                },
+            );
+        }
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir: dir.to_path_buf(),
+            ops,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Known op names.
+    pub fn op_names(&self) -> Vec<&str> {
+        self.ops.keys().map(String::as_str).collect()
+    }
+
+    pub fn spec(&self, op: &str) -> Option<&OpSpec> {
+        self.ops.get(op)
+    }
+
+    /// Compile (or fetch from cache) the executable for `op`.
+    fn executable(&self, op: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(op) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self
+            .ops
+            .get(op)
+            .ok_or_else(|| anyhow!("unknown op {op:?}"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(op.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (startup warmup; keeps compilation
+    /// off the request path).
+    pub fn warmup(&self) -> Result<()> {
+        let names: Vec<String> = self.ops.keys().cloned().collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `op` on the given inputs; returns the output tensors.
+    pub fn execute(&self, op: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .ops
+            .get(op)
+            .ok_or_else(|| anyhow!("unknown op {op:?}"))?
+            .clone();
+        if inputs.len() != spec.input_shapes.len() {
+            bail!(
+                "{op}: expected {} inputs, got {}",
+                spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+            if &t.shape != want {
+                bail!("{op}: input {i} shape {:?} != {:?}", t.shape, want);
+            }
+        }
+        let exe = self.executable(op)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.output_shapes.len() {
+            bail!(
+                "{op}: expected {} outputs, got {}",
+                spec.output_shapes.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.output_shapes)
+            .map(|(lit, shape)| {
+                let data = lit.to_vec::<f32>()?;
+                Ok(Tensor::new(shape.clone(), data))
+            })
+            .collect()
+    }
+}
+
+/// Thread-safe runtime handle for the real engine.
+///
+/// The `xla` crate's PJRT client is `Rc`-based (single-threaded FFI); all
+/// access is serialized behind one mutex and no xla type ever escapes the
+/// lock (inputs/outputs cross as plain [`Tensor`]s), which makes the
+/// `Send`/`Sync` assertion sound. The PJRT CPU client parallelizes each
+/// executable internally, so serialized dispatch still uses the machine.
+pub struct SharedRuntime(Mutex<Runtime>);
+
+// SAFETY: the inner Runtime (and its Rc-based FFI handles) is only ever
+// touched while holding the mutex, and no Rc/raw-pointer value crosses the
+// lock boundary.
+unsafe impl Send for SharedRuntime {}
+unsafe impl Sync for SharedRuntime {}
+
+impl SharedRuntime {
+    /// Load + wrap (see [`Runtime::load`]).
+    pub fn load(dir: &Path) -> Result<Arc<SharedRuntime>> {
+        Ok(Arc::new(SharedRuntime(Mutex::new(Runtime::load(dir)?))))
+    }
+
+    /// Execute an op (serialized; PJRT parallelizes internally).
+    pub fn execute(&self, op: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.0.lock().unwrap().execute(op, inputs)
+    }
+
+    /// Pre-compile every artifact.
+    pub fn warmup(&self) -> Result<()> {
+        self.0.lock().unwrap().warmup()
+    }
+
+    pub fn op_names(&self) -> Vec<String> {
+        self.0
+            .lock()
+            .unwrap()
+            .op_names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    pub fn flops(&self, op: &str) -> Option<u64> {
+        self.0.lock().unwrap().spec(op).map(|s| s.flops)
+    }
+}
+
+/// Default artifact directory (env `WUKONG_ARTIFACTS` overrides).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("WUKONG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_serde_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = t.to_bytes();
+        assert_eq!(Tensor::from_bytes(&b).unwrap(), t);
+    }
+
+    #[test]
+    fn tensor_rejects_corrupt_blob() {
+        assert!(Tensor::from_bytes(&[1, 2]).is_err());
+        let t = Tensor::new(vec![4], vec![0.0; 4]);
+        let mut b = t.to_bytes();
+        b.pop();
+        assert!(Tensor::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn tensor_shape_product_enforced() {
+        assert!(std::panic::catch_unwind(|| {
+            Tensor::new(vec![2, 2], vec![0.0; 3])
+        })
+        .is_err());
+    }
+
+    // Full execute() coverage lives in rust/tests/ (requires artifacts).
+}

@@ -1,0 +1,210 @@
+//! The event calendar: closures scheduled at virtual times.
+//!
+//! `Sim<W>` is generic over a world type `W` holding all entity state
+//! (executors, storage shards, schedulers, metrics). Events are
+//! `FnOnce(&mut W, &mut Sim<W>)`; an event may mutate the world and
+//! schedule further events. Ties in time are broken by insertion order
+//! (monotone sequence number), which makes runs bit-reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::Time;
+
+struct Entry<W> {
+    t: Time,
+    seq: u64,
+    f: Box<dyn FnOnce(&mut W, &mut Sim<W>)>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .t
+            .cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Discrete-event simulator over world `W`.
+pub struct Sim<W> {
+    now: Time,
+    seq: u64,
+    processed: u64,
+    heap: BinaryHeap<Entry<W>>,
+}
+
+impl<W> Default for Sim<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Sim<W> {
+    pub fn new() -> Sim<W> {
+        Sim {
+            now: 0,
+            seq: 0,
+            processed: 0,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Total events processed so far (L3 perf metric: events/sec).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `f` at absolute time `t` (clamped to `now`).
+    pub fn at(&mut self, t: Time, f: impl FnOnce(&mut W, &mut Sim<W>) + 'static) {
+        let t = t.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry {
+            t,
+            seq,
+            f: Box::new(f),
+        });
+    }
+
+    /// Schedule `f` after a delay of `dt`.
+    pub fn after(
+        &mut self,
+        dt: Time,
+        f: impl FnOnce(&mut W, &mut Sim<W>) + 'static,
+    ) {
+        self.at(self.now.saturating_add(dt), f);
+    }
+
+    /// Run until the calendar drains. Returns the final time.
+    pub fn run(&mut self, world: &mut W) -> Time {
+        while let Some(e) = self.heap.pop() {
+            debug_assert!(e.t >= self.now, "time went backwards");
+            self.now = e.t;
+            self.processed += 1;
+            (e.f)(world, self);
+        }
+        self.now
+    }
+
+    /// Run until `deadline` (events at exactly `deadline` included) or the
+    /// calendar drains, whichever first.
+    pub fn run_until(&mut self, world: &mut W, deadline: Time) -> Time {
+        while let Some(top) = self.heap.peek() {
+            if top.t > deadline {
+                break;
+            }
+            let e = self.heap.pop().unwrap();
+            self.now = e.t;
+            self.processed += 1;
+            (e.f)(world, self);
+        }
+        self.now = self.now.max(deadline.min(self.now.max(deadline)));
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(Time, u32)>,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(30, |w, s| w.log.push((s.now(), 3)));
+        sim.at(10, |w, s| w.log.push((s.now(), 1)));
+        sim.at(20, |w, s| w.log.push((s.now(), 2)));
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for i in 0..10 {
+            sim.at(5, move |w, _| w.log.push((5, i)));
+        }
+        sim.run(&mut w);
+        let order: Vec<u32> = w.log.iter().map(|&(_, i)| i).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(1, |_, s| {
+            s.after(9, |w: &mut World, s: &mut Sim<World>| {
+                w.log.push((s.now(), 99))
+            });
+        });
+        let end = sim.run(&mut w);
+        assert_eq!(end, 10);
+        assert_eq!(w.log, vec![(10, 99)]);
+    }
+
+    #[test]
+    fn past_times_clamp_to_now() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(100, |w, s| {
+            s.at(50, |w: &mut World, s: &mut Sim<World>| {
+                w.log.push((s.now(), 1))
+            });
+            w.log.push((s.now(), 0));
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(100, 0), (100, 1)]);
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(10, |w, _| w.log.push((10, 1)));
+        sim.at(20, |w, _| w.log.push((20, 2)));
+        sim.run_until(&mut w, 15);
+        assert_eq!(w.log, vec![(10, 1)]);
+        assert_eq!(sim.pending(), 1);
+    }
+
+    #[test]
+    fn processed_counts_events() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for i in 0..100 {
+            sim.at(i, |_, _| {});
+        }
+        sim.run(&mut w);
+        assert_eq!(sim.processed(), 100);
+    }
+}

@@ -1,0 +1,143 @@
+//! Queueing resources: FIFO single-server and k-server stations.
+//!
+//! These model everything in the system with finite service capacity:
+//! a Redis shard's wire (bandwidth × latency), an executor's NIC, the
+//! invoker pool's processes, a Dask worker's cores, the numpywren central
+//! queue. `acquire(now, service)` answers "when would this job start and
+//! finish?", advancing the server's horizon — an O(log k) analytic stand-in
+//! for simulating byte-level transfers.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::time::Time;
+
+/// Single FIFO server: jobs are serviced back-to-back in arrival order.
+#[derive(Debug, Clone, Default)]
+pub struct FifoResource {
+    free_at: Time,
+    busy_total: Time,
+    jobs: u64,
+}
+
+impl FifoResource {
+    pub fn new() -> FifoResource {
+        FifoResource::default()
+    }
+
+    /// Enqueue a job arriving at `now` with the given `service` demand.
+    /// Returns `(start, end)` times.
+    pub fn acquire(&mut self, now: Time, service: Time) -> (Time, Time) {
+        let start = self.free_at.max(now);
+        let end = start + service;
+        self.free_at = end;
+        self.busy_total += service;
+        self.jobs += 1;
+        (start, end)
+    }
+
+    /// Time at which the server next becomes idle.
+    pub fn free_at(&self) -> Time {
+        self.free_at
+    }
+
+    /// Total busy time accumulated (utilization metric).
+    pub fn busy_total(&self) -> Time {
+        self.busy_total
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs
+    }
+}
+
+/// `k` identical FIFO servers; each job takes the earliest-free server.
+#[derive(Debug, Clone)]
+pub struct MultiResource {
+    servers: BinaryHeap<Reverse<Time>>,
+    k: usize,
+    busy_total: Time,
+    jobs: u64,
+}
+
+impl MultiResource {
+    pub fn new(k: usize) -> MultiResource {
+        assert!(k >= 1);
+        MultiResource {
+            servers: (0..k).map(|_| Reverse(0)).collect(),
+            k,
+            busy_total: 0,
+            jobs: 0,
+        }
+    }
+
+    /// Enqueue a job arriving at `now`; returns `(start, end)`.
+    pub fn acquire(&mut self, now: Time, service: Time) -> (Time, Time) {
+        let Reverse(free) = self.servers.pop().expect("k >= 1");
+        let start = free.max(now);
+        let end = start + service;
+        self.servers.push(Reverse(end));
+        self.busy_total += service;
+        self.jobs += 1;
+        (start, end)
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn busy_total(&self) -> Time {
+        self.busy_total
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs
+    }
+
+    /// Earliest time any server is free (for admission estimates).
+    pub fn next_free(&self) -> Time {
+        self.servers.peek().map(|Reverse(t)| *t).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_serializes_jobs() {
+        let mut r = FifoResource::new();
+        assert_eq!(r.acquire(0, 10), (0, 10));
+        assert_eq!(r.acquire(0, 10), (10, 20)); // queued behind job 1
+        assert_eq!(r.acquire(50, 5), (50, 55)); // idle gap
+        assert_eq!(r.busy_total(), 25);
+        assert_eq!(r.jobs(), 3);
+    }
+
+    #[test]
+    fn multi_overlaps_up_to_k() {
+        let mut r = MultiResource::new(2);
+        assert_eq!(r.acquire(0, 10), (0, 10));
+        assert_eq!(r.acquire(0, 10), (0, 10)); // second server
+        assert_eq!(r.acquire(0, 10), (10, 20)); // queued
+        assert_eq!(r.jobs(), 3);
+    }
+
+    #[test]
+    fn multi_picks_earliest_free() {
+        let mut r = MultiResource::new(2);
+        r.acquire(0, 100); // server A busy until 100
+        r.acquire(0, 10); // server B busy until 10
+        assert_eq!(r.acquire(20, 5), (20, 25)); // B is free at 20
+    }
+
+    #[test]
+    fn k_one_equals_fifo() {
+        let mut m = MultiResource::new(1);
+        let mut f = FifoResource::new();
+        let arrivals = [(0u64, 7u64), (3, 2), (100, 4), (100, 4)];
+        for &(now, s) in &arrivals {
+            assert_eq!(m.acquire(now, s), f.acquire(now, s));
+        }
+    }
+}

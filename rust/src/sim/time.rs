@@ -1,0 +1,37 @@
+//! Virtual time: `u64` microseconds (integral ⇒ deterministic ordering).
+
+/// Virtual timestamp / duration in microseconds.
+pub type Time = u64;
+
+/// Microseconds per second.
+pub const MICROS_PER_SEC: Time = 1_000_000;
+
+/// Convert seconds (f64) to virtual time, saturating and rounding.
+pub fn secs(s: f64) -> Time {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * MICROS_PER_SEC as f64).round() as Time
+    }
+}
+
+/// Convert virtual time to seconds.
+pub fn to_secs(t: Time) -> f64 {
+    t as f64 / MICROS_PER_SEC as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        assert_eq!(secs(1.5), 1_500_000);
+        assert!((to_secs(secs(0.25)) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_clamps_to_zero() {
+        assert_eq!(secs(-1.0), 0);
+    }
+}

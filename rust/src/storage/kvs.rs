@@ -1,0 +1,166 @@
+//! Sharded key-value store model (the paper's Fargate Redis cluster / S3).
+//!
+//! Each shard is a FIFO wire: an op occupies its shard for
+//! `op_latency + bytes / shard_bw`, so concurrent large transfers to the
+//! same shard queue behind each other — the contention that Figs. 13–16
+//! measure. S3 mode adds an IOPS gate (request throttling) in front of
+//! the transfer. Keys map to shards by multiplicative hash, matching the
+//! consistent-hash spread of the real system.
+
+use crate::config::StorageConfig;
+use crate::sim::{secs, FifoResource, Time};
+
+/// Byte-exact I/O counters (Figs. 3, 4, 15, 16).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvsMetrics {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+/// The simulated KVS cluster.
+#[derive(Debug)]
+pub struct KvsModel {
+    cfg: StorageConfig,
+    shards: Vec<FifoResource>,
+    iops_gates: Vec<FifoResource>,
+    pub metrics: KvsMetrics,
+}
+
+impl KvsModel {
+    pub fn new(cfg: StorageConfig) -> KvsModel {
+        let n = cfg.n_shards.max(1);
+        KvsModel {
+            shards: (0..n).map(|_| FifoResource::new()).collect(),
+            iops_gates: (0..n).map(|_| FifoResource::new()).collect(),
+            cfg,
+            metrics: KvsMetrics::default(),
+        }
+    }
+
+    fn shard_of(&self, key: u64) -> usize {
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize
+            % self.shards.len()
+    }
+
+    fn transfer(&mut self, now: Time, key: u64, bytes: u64) -> Time {
+        let s = self.shard_of(key);
+        let mut t = now;
+        if self.cfg.iops_limit > 0.0 {
+            let gate = secs(1.0 / self.cfg.iops_limit);
+            let (_, end) = self.iops_gates[s].acquire(t, gate);
+            t = end;
+        }
+        let service =
+            secs(self.cfg.op_latency_s + bytes as f64 / self.cfg.shard_bw);
+        let (_, end) = self.shards[s].acquire(t, service);
+        end
+    }
+
+    /// Read `bytes` under `key`; returns completion time.
+    pub fn read(&mut self, now: Time, key: u64, bytes: u64) -> Time {
+        self.metrics.bytes_read += bytes;
+        self.metrics.reads += 1;
+        self.transfer(now, key, bytes)
+    }
+
+    /// Write `bytes` under `key`; returns completion time.
+    pub fn write(&mut self, now: Time, key: u64, bytes: u64) -> Time {
+        self.metrics.bytes_written += bytes;
+        self.metrics.writes += 1;
+        self.transfer(now, key, bytes)
+    }
+
+    /// Aggregate busy time across shards (utilization metric).
+    pub fn busy_total(&self) -> Time {
+        self.shards.iter().map(|s| s.busy_total()).sum()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StorageConfig;
+    use crate::sim::MICROS_PER_SEC;
+
+    fn model(n_shards: usize) -> KvsModel {
+        KvsModel::new(StorageConfig {
+            n_shards,
+            shard_bw: 100e6,
+            op_latency_s: 0.001,
+            iops_limit: 0.0,
+            ..StorageConfig::default()
+        })
+    }
+
+    #[test]
+    fn read_time_is_latency_plus_transfer() {
+        let mut k = model(4);
+        let end = k.read(0, 1, 100_000_000); // 1 s transfer at 100 MB/s
+        assert_eq!(end, secs(1.001));
+    }
+
+    #[test]
+    fn same_shard_ops_queue() {
+        let mut k = model(1);
+        let a = k.write(0, 1, 100_000_000);
+        let b = k.write(0, 2, 100_000_000);
+        assert_eq!(a, secs(1.001));
+        assert_eq!(b, secs(2.002));
+    }
+
+    #[test]
+    fn different_shards_overlap() {
+        let mut k = model(64);
+        // find two keys on different shards
+        let (mut k1, mut k2) = (1u64, 2u64);
+        while k.shard_of(k1) == k.shard_of(k2) {
+            k2 += 1;
+        }
+        let a = k.write(0, k1, 100_000_000);
+        let b = k.write(0, k2, 100_000_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn metrics_are_byte_exact() {
+        let mut k = model(4);
+        k.write(0, 1, 1000);
+        k.write(0, 2, 500);
+        k.read(0, 1, 1000);
+        assert_eq!(k.metrics.bytes_written, 1500);
+        assert_eq!(k.metrics.bytes_read, 1000);
+        assert_eq!(k.metrics.writes, 2);
+        assert_eq!(k.metrics.reads, 1);
+    }
+
+    #[test]
+    fn s3_iops_gate_throttles_small_ops() {
+        let mut k = KvsModel::new(StorageConfig::default().s3());
+        // Many tiny ops to one key: gated at iops_limit ops/sec.
+        let key = 7;
+        let mut last = 0;
+        for _ in 0..100 {
+            last = k.write(0, key, 1);
+        }
+        // 100 ops at 3500 IOPS ≈ 28.6 ms of gating (plus latency).
+        assert!(last > 28 * MICROS_PER_SEC / 1000);
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let k = model(75);
+        let mut counts = vec![0usize; 75];
+        for key in 0..10_000u64 {
+            counts[k.shard_of(key)] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(min > 60 && max < 260, "imbalanced: {min}..{max}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Storage substrate: the intermediate-data KVS (Fargate Redis / S3 /
+//! ElastiCache models), the metadata store (dependency counters), the
+//! storage-manager proxy with its fan-out invoker pool, and the real
+//! in-memory KVS used by the real engine.
+//!
+//! All simulated byte counts are *exact* (the figures 3/4/15/16 I/O
+//! numbers are metered, not modeled); only *time* is modeled via the
+//! queueing resources.
+
+pub mod kvs;
+pub mod mds;
+pub mod proxy;
+pub mod real_kvs;
+
+pub use kvs::{KvsMetrics, KvsModel};
+pub use mds::MdsModel;
+pub use proxy::InvokerPool;

@@ -1,0 +1,192 @@
+//! Real in-memory KVS for the real engine: sharded maps + injected wire
+//! latency, standing in for the Fargate Redis cluster.
+//!
+//! Values are `Arc<Vec<u8>>` blobs (the real engine serializes f32
+//! tensors). Each shard has its own lock so concurrent executors contend
+//! only when they hash to the same shard — mirroring the simulator's
+//! per-shard FIFO wires. The injected latency reproduces the network cost
+//! on a single machine; set `latency_scale = 0` for pure-throughput runs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Thread-safe sharded blob store with modeled latency.
+pub struct RealKvs {
+    shards: Vec<Mutex<HashMap<String, Arc<Vec<u8>>>>>,
+    op_latency: Duration,
+    bytes_per_sec: f64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub reads: AtomicU64,
+    pub writes: AtomicU64,
+}
+
+impl RealKvs {
+    /// `latency_scale` scales the injected per-op latency + transfer time
+    /// (1.0 = model a real Redis wire; 0.0 = no injected delay).
+    pub fn new(n_shards: usize, op_latency_s: f64, bytes_per_sec: f64) -> RealKvs {
+        RealKvs {
+            shards: (0..n_shards.max(1))
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            op_latency: Duration::from_secs_f64(op_latency_s.max(0.0)),
+            bytes_per_sec,
+            bytes_read: AtomicU64::new(0),
+            bytes_written: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &str) -> usize {
+        // FNV-1a
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        (h >> 32) as usize % self.shards.len()
+    }
+
+    fn wire_delay(&self, bytes: usize) {
+        let mut d = self.op_latency;
+        if self.bytes_per_sec > 0.0 {
+            d += Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+        }
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Store a blob (charges write latency + transfer time).
+    pub fn put(&self, key: &str, value: Vec<u8>) {
+        self.bytes_written
+            .fetch_add(value.len() as u64, Ordering::Relaxed);
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        self.wire_delay(value.len());
+        let s = self.shard_of(key);
+        self.shards[s]
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), Arc::new(value));
+    }
+
+    /// Fetch a blob (charges read latency + transfer time).
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let s = self.shard_of(key);
+        let v = self.shards[s].lock().unwrap().get(key).cloned();
+        if let Some(ref blob) = v {
+            self.bytes_read
+                .fetch_add(blob.len() as u64, Ordering::Relaxed);
+            self.reads.fetch_add(1, Ordering::Relaxed);
+            self.wire_delay(blob.len());
+        }
+        v
+    }
+
+    /// Blocking fetch: spin (with backoff) until the key appears. Used by
+    /// stateless baseline executors waiting on upstream outputs.
+    pub fn get_blocking(&self, key: &str, timeout: Duration) -> Option<Arc<Vec<u8>>> {
+        let start = std::time::Instant::now();
+        loop {
+            if let Some(v) = self.get(key) {
+                return Some(v);
+            }
+            if start.elapsed() > timeout {
+                return None;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        let s = self.shard_of(key);
+        self.shards[s].lock().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Serialize an f32 slice to little-endian bytes.
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize little-endian bytes back to f32s.
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let kvs = RealKvs::new(8, 0.0, 0.0);
+        kvs.put("a", vec![1, 2, 3]);
+        assert_eq!(*kvs.get("a").unwrap(), vec![1, 2, 3]);
+        assert!(kvs.get("missing").is_none());
+    }
+
+    #[test]
+    fn metrics_count_bytes() {
+        let kvs = RealKvs::new(2, 0.0, 0.0);
+        kvs.put("k", vec![0; 100]);
+        kvs.get("k");
+        assert_eq!(kvs.bytes_written.load(Ordering::Relaxed), 100);
+        assert_eq!(kvs.bytes_read.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn f32_serde_roundtrip() {
+        let xs = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn blocking_get_waits_for_writer() {
+        let kvs = Arc::new(RealKvs::new(4, 0.0, 0.0));
+        let k2 = Arc::clone(&kvs);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            k2.put("later", vec![9]);
+        });
+        let v = kvs.get_blocking("later", Duration::from_secs(2));
+        assert_eq!(*v.unwrap(), vec![9]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_puts_do_not_lose_data() {
+        let kvs = Arc::new(RealKvs::new(8, 0.0, 0.0));
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let kvs = Arc::clone(&kvs);
+                std::thread::spawn(move || {
+                    for j in 0..100 {
+                        kvs.put(&format!("k{i}_{j}"), vec![i as u8]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(kvs.len(), 800);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small in-repo substrates that would normally be external crates.
+//!
+//! The offline crate set only contains `xla` + `anyhow`, so the RNG,
+//! JSON parser, table renderer, stats helpers, property-test loop and
+//! thread pool live here.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+pub use rng::Rng;

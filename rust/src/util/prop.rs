@@ -1,0 +1,95 @@
+//! Tiny property-based testing loop (proptest is not in the offline crate
+//! set).
+//!
+//! `check(seed, cases, f)` runs `f` against `cases` independently-seeded
+//! [`Rng`]s; on failure it reports the case seed so the exact input can be
+//! replayed with `replay(seed, f)`. Generators are plain functions of
+//! `&mut Rng`, composed by hand — enough for the coordinator invariants in
+//! `rust/tests/`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. Panics with the failing case seed.
+pub fn check<F: FnMut(&mut Rng)>(seed: u64, cases: u32, mut f: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F: FnMut(&mut Rng)>(case_seed: u64, mut f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// A vector of length in `[lo, hi]` built from `f`.
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        lo: usize,
+        hi: usize,
+        mut f: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
+        let n = usize_in(rng, lo, hi);
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+        &xs[rng.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 50, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_case() {
+        check(2, 50, |rng| {
+            let x = rng.below(10);
+            assert!(x != 3, "hit the bad value");
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        check(3, 50, |rng| {
+            let v = gen::vec_of(rng, 2, 8, |r| r.below(5));
+            assert!((2..=8).contains(&v.len()));
+        });
+    }
+}

@@ -1,0 +1,156 @@
+//! Fixed-size thread pool (tokio is not in the offline crate set).
+//!
+//! Used by the real engine: Lambda-executor bodies run as pool jobs, and
+//! the pool size models the platform's concurrency limit. Plain
+//! `std::sync::mpsc` + worker threads; jobs are `FnOnce() + Send`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool with a pending-job counter for `join`.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+    spawned: AtomicUsize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (`n >= 1`).
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n >= 1, "pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let inflight = Arc::clone(&inflight);
+                thread::Builder::new()
+                    .name(format!("wukong-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*inflight;
+                                let mut cnt = lock.lock().unwrap();
+                                *cnt -= 1;
+                                if *cnt == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            inflight,
+            spawned: AtomicUsize::new(0),
+        }
+    }
+
+    /// Submit a job.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.inflight;
+        *lock.lock().unwrap() += 1;
+        self.spawned.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Block until every submitted job (including jobs submitted by jobs)
+    /// has finished.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.inflight;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
+    }
+
+    /// Total jobs ever submitted (metrics).
+    pub fn total_spawned(&self) -> usize {
+        self.spawned.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_can_spawn_jobs() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            let p = Arc::clone(&pool);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let c2 = Arc::clone(&c);
+                p.spawn(move || {
+                    c2.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn join_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+    }
+
+    #[test]
+    fn single_worker_serializes() {
+        let pool = ThreadPool::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..20 {
+            let log = Arc::clone(&log);
+            pool.spawn(move || log.lock().unwrap().push(i));
+        }
+        pool.join();
+        assert_eq!(*log.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,122 @@
+//! Blocked GEMM — C = A·B with square blocking (§4.1, Figs. 13, 15, 19).
+//!
+//! For an n×n problem with b×b blocks (nb = n/b per side): nb³ leaf
+//! multiply tasks (each reading A_ik and B_kj partitions), then a binary
+//! add-tree over the K partial products for every (i, j) output block.
+//! GEMM is the paper's "hard for serverless" case: many large objects
+//! move before compute can start.
+
+use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+
+use super::{reduction_tree, ELEM};
+
+/// GEMM parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmParams {
+    /// Matrix side (elements).
+    pub n: usize,
+    /// Block side (elements); must divide `n`.
+    pub block: usize,
+}
+
+impl GemmParams {
+    pub fn nb(&self) -> usize {
+        assert!(
+            self.block > 0 && self.n % self.block == 0,
+            "block must divide n"
+        );
+        self.n / self.block
+    }
+
+    /// Paper problem sizes: 5k..25k with 5k blocks.
+    pub fn paper(n_thousands: usize) -> GemmParams {
+        GemmParams {
+            n: n_thousands * 1000,
+            block: 5000,
+        }
+    }
+}
+
+/// Build the blocked-GEMM DAG.
+pub fn dag(p: GemmParams) -> Dag {
+    let nb = p.nb();
+    let bb = (p.block * p.block) as u64 * ELEM; // block bytes
+    let mul_flops = 2.0 * (p.block as f64).powi(3);
+    let add_flops = (p.block * p.block) as f64;
+    let mut b = DagBuilder::new(&format!("gemm_{}x{}_b{}", p.n, p.n, p.block));
+    for i in 0..nb {
+        for j in 0..nb {
+            let partials: Vec<TaskId> = (0..nb)
+                .map(|k| {
+                    let t = b.task(
+                        format!("mul_{i}_{j}_{k}"),
+                        OpKind::GemmBlock,
+                        mul_flops,
+                        bb,
+                    );
+                    // reads A[i,k] and B[k,j] input partitions
+                    b.with_input(t, 2 * bb);
+                    t
+                })
+                .collect();
+            reduction_tree(
+                &mut b,
+                partials,
+                OpKind::BlockAdd,
+                add_flops,
+                bb,
+                &format!("acc_{i}_{j}"),
+            );
+        }
+    }
+    b.build().expect("GEMM DAG is well-formed")
+}
+
+/// Exact logical input/output sizes (for the amplification figures).
+pub fn io_bytes(p: GemmParams) -> (u64, u64) {
+    let n2 = (p.n as u64) * (p.n as u64) * ELEM;
+    (2 * n2, n2) // read A + B; write C
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_counts() {
+        let p = GemmParams { n: 4, block: 1 }; // nb = 4
+        let d = dag(p);
+        // 4*4 output blocks × (4 muls + 3 adds) = 112
+        assert_eq!(d.len(), 16 * 7);
+        assert_eq!(d.leaves().len(), 64);
+        assert_eq!(d.sinks().len(), 16);
+    }
+
+    #[test]
+    fn single_block_degenerates_to_one_task() {
+        let d = dag(GemmParams { n: 8, block: 8 });
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn paper_25k() {
+        let p = GemmParams::paper(25);
+        assert_eq!(p.nb(), 5);
+        let d = dag(p);
+        // 25 output blocks × (5 muls + 4 adds)
+        assert_eq!(d.len(), 25 * 9);
+    }
+
+    #[test]
+    fn io_accounts_both_inputs() {
+        let (i, o) = io_bytes(GemmParams { n: 1000, block: 500 });
+        assert_eq!(i, 2 * 1000 * 1000 * 4);
+        assert_eq!(o, 1000 * 1000 * 4);
+    }
+
+    #[test]
+    fn block_must_divide() {
+        let p = GemmParams { n: 10, block: 3 };
+        assert!(std::panic::catch_unwind(|| p.nb()).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Scaling microbenchmarks (§4.4, Figs. 2 and 21): N chains of fixed-
+//! duration tasks.
+//!
+//! * **Strong scaling** — 10 000 tasks over N executors: N chains of
+//!   `10 000 / N` tasks.
+//! * **Weak scaling** — 10 tasks per executor: N chains of 10.
+//! * **Serverless scaling** — N tasks on N executors: N chains of 1.
+//!
+//! In Wukong each chain is one static schedule executed locally by one
+//! Lambda; in (Num)PyWren every task is a queue round-trip.
+
+use crate::dag::{Dag, DagBuilder, OpKind};
+use crate::sim::Time;
+
+/// Microbenchmark parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroParams {
+    pub n_chains: usize,
+    pub chain_len: usize,
+    /// Per-task duration (0 = no-op).
+    pub task_dur: Time,
+}
+
+/// Build `n_chains` independent chains of `chain_len` tasks.
+pub fn chains(p: MicroParams) -> Dag {
+    assert!(p.n_chains >= 1 && p.chain_len >= 1);
+    let mut b = DagBuilder::new(&format!(
+        "micro_{}x{}",
+        p.n_chains, p.chain_len
+    ));
+    for c in 0..p.n_chains {
+        let mut prev = None;
+        for i in 0..p.chain_len {
+            let op = if p.task_dur == 0 {
+                OpKind::Noop
+            } else {
+                OpKind::Sleep
+            };
+            let t = b.task(format!("c{c}_t{i}"), op, 0.0, 8);
+            b.with_duration(t, p.task_dur);
+            if let Some(prev) = prev {
+                b.edge(prev, t);
+            }
+            prev = Some(t);
+        }
+    }
+    b.build().expect("microbenchmark DAG is well-formed")
+}
+
+/// Strong scaling: `total_tasks` spread over `n_exec` chains.
+pub fn strong(total_tasks: usize, n_exec: usize, task_dur: Time) -> Dag {
+    chains(MicroParams {
+        n_chains: n_exec,
+        chain_len: (total_tasks / n_exec).max(1),
+        task_dur,
+    })
+}
+
+/// Weak scaling: `per_exec` tasks on each of `n_exec` executors.
+pub fn weak(n_exec: usize, per_exec: usize, task_dur: Time) -> Dag {
+    chains(MicroParams {
+        n_chains: n_exec,
+        chain_len: per_exec,
+        task_dur,
+    })
+}
+
+/// Serverless scaling: N tasks on N executors.
+pub fn serverless(n: usize, task_dur: Time) -> Dag {
+    chains(MicroParams {
+        n_chains: n,
+        chain_len: 1,
+        task_dur,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::secs;
+
+    #[test]
+    fn chain_structure() {
+        let d = chains(MicroParams {
+            n_chains: 4,
+            chain_len: 3,
+            task_dur: secs(0.1),
+        });
+        assert_eq!(d.len(), 12);
+        assert_eq!(d.leaves().len(), 4);
+        assert_eq!(d.sinks().len(), 4);
+        assert_eq!(d.n_edges(), 8);
+    }
+
+    #[test]
+    fn strong_divides_tasks() {
+        let d = strong(10_000, 100, 0);
+        assert_eq!(d.len(), 10_000);
+        assert_eq!(d.leaves().len(), 100);
+    }
+
+    #[test]
+    fn serverless_is_all_leaves() {
+        let d = serverless(50, 0);
+        assert_eq!(d.len(), 50);
+        assert_eq!(d.leaves().len(), 50);
+        assert_eq!(d.n_edges(), 0);
+    }
+
+    #[test]
+    fn noop_tasks_have_zero_duration() {
+        let d = serverless(3, 0);
+        assert!(d.tasks().iter().all(|t| t.dur_override == Some(0)));
+        assert!(d.tasks().iter().all(|t| t.op == OpKind::Noop));
+    }
+}

@@ -1,0 +1,80 @@
+//! Workload DAG generators for the paper's five applications (§4.1) plus
+//! the scaling microbenchmarks (§4.4).
+//!
+//! Every generator is a pure function from problem parameters to a
+//! [`Dag`](crate::dag::Dag) with exact per-task byte sizes and flops, so
+//! the same graph drives Wukong, numpywren and Dask engines (the paper's
+//! "exact same input DAG" methodology).
+
+pub mod gemm;
+pub mod micro;
+pub mod svc;
+pub mod svd;
+pub mod tr;
+pub mod tsqr;
+
+use crate::dag::{DagBuilder, OpKind, TaskId};
+
+/// Bytes per matrix element (f32, matching the Pallas kernels).
+pub const ELEM: u64 = 4;
+
+/// Build a binary reduction tree over `items`, returning the root task.
+/// Each internal node is `op` with `flops` work and `out_bytes` output.
+pub(crate) fn reduction_tree(
+    b: &mut DagBuilder,
+    mut items: Vec<TaskId>,
+    op: OpKind,
+    flops: f64,
+    out_bytes: u64,
+    label: &str,
+) -> TaskId {
+    assert!(!items.is_empty());
+    let mut level = 0;
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        for (i, pair) in items.chunks(2).enumerate() {
+            if pair.len() == 1 {
+                next.push(pair[0]); // odd one out rides up a level
+                continue;
+            }
+            let t = b.task(format!("{label}_l{level}_{i}"), op, flops, out_bytes);
+            b.edge(pair[0], t).edge(pair[1], t);
+            next.push(t);
+        }
+        items = next;
+        level += 1;
+    }
+    items[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::OpKind;
+
+    #[test]
+    fn reduction_tree_shape() {
+        let mut b = DagBuilder::new("t");
+        let leaves: Vec<_> = (0..8)
+            .map(|i| b.task(format!("leaf{i}"), OpKind::Noop, 0.0, 8))
+            .collect();
+        let root = reduction_tree(&mut b, leaves, OpKind::BlockAdd, 1.0, 8, "r");
+        let dag = b.build().unwrap();
+        // 8 leaves + 7 internal nodes
+        assert_eq!(dag.len(), 15);
+        assert_eq!(dag.sinks(), vec![root]);
+        assert_eq!(dag.leaves().len(), 8);
+    }
+
+    #[test]
+    fn reduction_tree_handles_odd_counts() {
+        let mut b = DagBuilder::new("t");
+        let leaves: Vec<_> = (0..5)
+            .map(|i| b.task(format!("leaf{i}"), OpKind::Noop, 0.0, 8))
+            .collect();
+        let root = reduction_tree(&mut b, leaves, OpKind::BlockAdd, 1.0, 8, "r");
+        let dag = b.build().unwrap();
+        assert_eq!(dag.len(), 9); // 5 + 4 internal
+        assert_eq!(dag.sinks(), vec![root]);
+    }
+}

@@ -1,0 +1,131 @@
+//! SVC — support-vector/logistic classification (§4.1, Fig. 12), shaped
+//! like the Dask-ML benchmark the paper uses: per-partition gradients,
+//! a tree-reduce, a weight update, and a broadcast into the next
+//! iteration's gradient tasks.
+
+use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+
+use super::{reduction_tree, ELEM};
+
+/// SVC parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SvcParams {
+    /// Total training samples.
+    pub samples: usize,
+    /// Feature dimension.
+    pub features: usize,
+    /// Data partitions (one gradient task each per iteration).
+    pub partitions: usize,
+    /// Gradient-descent iterations in the graph.
+    pub iters: usize,
+}
+
+impl SvcParams {
+    /// Paper sizes: 0.5M–8M samples, 64 features, sample-proportional
+    /// partitioning (~16k samples per partition), 3 unrolled iterations.
+    pub fn paper(millions_of_samples: f64) -> SvcParams {
+        let samples = (millions_of_samples * 1e6) as usize;
+        SvcParams {
+            samples,
+            features: 64,
+            partitions: (samples / 16_384).max(1),
+            iters: 3,
+        }
+    }
+}
+
+/// Build the SVC DAG.
+pub fn dag(p: SvcParams) -> Dag {
+    assert!(p.partitions >= 1 && p.iters >= 1);
+    let per_part = p.samples / p.partitions.max(1);
+    let m = per_part as f64;
+    let d = p.features as f64;
+    let part_bytes = (per_part * (p.features + 1)) as u64 * ELEM; // X_i + y_i
+    let grad_bytes = p.features as u64 * ELEM;
+    let mut b = DagBuilder::new(&format!(
+        "svc_{}m_{}p",
+        p.samples / 1_000_000,
+        p.partitions
+    ));
+
+    let mut prev_update: Option<TaskId> = None;
+    for it in 0..p.iters {
+        let grads: Vec<TaskId> = (0..p.partitions)
+            .map(|i| {
+                let t = b.task(
+                    format!("grad_{it}_{i}"),
+                    OpKind::SvcGrad,
+                    4.0 * m * d,
+                    grad_bytes,
+                );
+                b.with_input(t, part_bytes);
+                if let Some(u) = prev_update {
+                    b.edge(u, t); // broadcast of updated weights
+                }
+                t
+            })
+            .collect();
+        let total = reduction_tree(
+            &mut b,
+            grads,
+            OpKind::BlockAdd,
+            d,
+            grad_bytes,
+            &format!("gsum_{it}"),
+        );
+        let update = b.task(
+            format!("update_{it}"),
+            OpKind::SvcUpdate,
+            2.0 * d,
+            grad_bytes,
+        );
+        b.edge(total, update);
+        prev_update = Some(update);
+    }
+    b.build().expect("SVC DAG is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_structure() {
+        let p = SvcParams {
+            samples: 64_000,
+            features: 64,
+            partitions: 4,
+            iters: 2,
+        };
+        let d = dag(p);
+        // per iter: 4 grads + 3 sums + 1 update = 8; × 2 iters
+        assert_eq!(d.len(), 16);
+        assert_eq!(d.sinks().len(), 1); // last update
+        assert_eq!(d.leaves().len(), 4); // first iteration's grads
+    }
+
+    #[test]
+    fn update_broadcasts_to_next_iteration() {
+        let p = SvcParams {
+            samples: 64_000,
+            features: 64,
+            partitions: 4,
+            iters: 2,
+        };
+        let d = dag(p);
+        let u0 = d
+            .tasks()
+            .iter()
+            .position(|t| t.name == "update_0")
+            .unwrap() as u32;
+        assert_eq!(d.task(u0).children.len(), 4);
+    }
+
+    #[test]
+    fn paper_partition_scaling() {
+        let small = SvcParams::paper(0.5);
+        let large = SvcParams::paper(8.0);
+        assert!(large.partitions > small.partitions);
+        assert_eq!(large.features, 64);
+    }
+}

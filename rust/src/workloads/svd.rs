@@ -1,0 +1,335 @@
+//! SVD workloads (§4.1, Figs. 10, 11, 17, 18, 22, 23).
+//!
+//! * **SVD1** — tall-skinny SVD via the Gram route: per-block AᵀA,
+//!   tree-summed, eigensolved (Jacobi), then the left vectors U are
+//!   reconstructed per block (U_i = A_i·V·S⁻¹) — the U panels are the
+//!   large intermediates.
+//! * **SVD2** — square-matrix approximate SVD (Halko-style randomized
+//!   range finder, the paper's [40]): Y = A·Ω, TSQR(Y) → Q, B = QᵀA
+//!   (tree-summed k×n partials — *large*), small SVD of B, then
+//!   U = Q·Ũ. The large B partials and Q panels are what task clustering
+//!   and delayed I/O eliminate (Figs. 22–23).
+
+use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+
+use super::{reduction_tree, ELEM};
+
+/// SVD1 parameters (tall-skinny m×n, row-blocked).
+#[derive(Debug, Clone, Copy)]
+pub struct Svd1Params {
+    pub rows: usize,
+    pub cols: usize,
+    pub block_rows: usize,
+}
+
+impl Svd1Params {
+    pub fn nb(&self) -> usize {
+        assert!(self.rows % self.block_rows == 0);
+        self.rows / self.block_rows
+    }
+
+    /// Paper sizes: 0.25M–16M rows × 128 cols.
+    pub fn paper(millions_of_rows: f64) -> Svd1Params {
+        let rows = (millions_of_rows * 1024.0 * 1024.0) as usize;
+        let mut block_rows = 16384;
+        while rows % block_rows != 0 {
+            block_rows /= 2;
+        }
+        Svd1Params {
+            rows,
+            cols: 128,
+            block_rows,
+        }
+    }
+}
+
+/// Build the SVD1 DAG.
+pub fn svd1(p: Svd1Params) -> Dag {
+    let nb = p.nb();
+    let m = p.block_rows as f64;
+    let n = p.cols as f64;
+    let block_bytes = (p.block_rows * p.cols) as u64 * ELEM;
+    let gram_bytes = (p.cols * p.cols) as u64 * ELEM;
+    let mut b = DagBuilder::new(&format!("svd1_{}x{}", p.rows, p.cols));
+
+    // Materialize each A block once (Dask persists input partitions as
+    // tasks); the block feeds both the Gram stage and the U stage — the
+    // large fan-out that task clustering keeps local.
+    let loads: Vec<TaskId> = (0..nb)
+        .map(|i| {
+            let t = b.task(
+                format!("load_{i}"),
+                OpKind::Generic,
+                (p.block_rows * p.cols) as f64,
+                block_bytes,
+            );
+            b.with_input(t, block_bytes);
+            t
+        })
+        .collect();
+    let grams: Vec<TaskId> = (0..nb)
+        .map(|i| {
+            let t = b.task(
+                format!("gram_{i}"),
+                OpKind::Gram,
+                2.0 * m * n * n,
+                gram_bytes,
+            );
+            b.edge(loads[i], t);
+            t
+        })
+        .collect();
+    let total = reduction_tree(
+        &mut b,
+        grams,
+        OpKind::BlockAdd,
+        n * n,
+        gram_bytes,
+        "gsum",
+    );
+    // Jacobi eigensolve of the n×n Gram matrix → (S, V).
+    let finish = b.task(
+        "svd1_finish",
+        OpKind::Svd1Finish,
+        12.0 * (n * (n - 1.0) / 2.0) * 12.0 * n,
+        gram_bytes + p.cols as u64 * ELEM,
+    );
+    b.edge(total, finish);
+    // U reconstruction: U_i = A_i · (V S⁻¹) — large panels.
+    for i in 0..nb {
+        let u = b.task(
+            format!("u_{i}"),
+            OpKind::QApplyLeaf,
+            2.0 * m * n * n,
+            block_bytes,
+        );
+        b.edge(loads[i], u).edge(finish, u);
+    }
+    b.build().expect("SVD1 DAG is well-formed")
+}
+
+/// SVD2 parameters (square n×n, rank-k randomized).
+#[derive(Debug, Clone, Copy)]
+pub struct Svd2Params {
+    pub n: usize,
+    /// Target rank + oversampling (paper uses small k ≪ n).
+    pub k: usize,
+    /// Row-panel count (power of two for the TSQR stage).
+    pub nb: usize,
+}
+
+impl Svd2Params {
+    /// Paper sizes: 10k–256k square, k=128. Panel count scales so one
+    /// row panel fits a 3 GB Lambda (the paper repartitions likewise).
+    pub fn paper(n_thousands: usize) -> Svd2Params {
+        let n = n_thousands * 1000;
+        let panel_limit = 1.5e9; // bytes per row panel
+        let need = ((n as f64) * (n as f64) * 4.0 / panel_limit).ceil() as usize;
+        Svd2Params {
+            n,
+            k: 128,
+            nb: need.max(64).next_power_of_two(),
+        }
+    }
+}
+
+/// Build the SVD2 (randomized range-finder) DAG.
+pub fn svd2(p: Svd2Params) -> Dag {
+    assert!(p.nb.is_power_of_two(), "panel count must be a power of two");
+    let rows_per = p.n / p.nb;
+    let m = rows_per as f64;
+    let n = p.n as f64;
+    let k = p.k as f64;
+    let panel_bytes = (rows_per * p.n) as u64 * ELEM; // A_i row panel
+    let y_bytes = (rows_per * p.k) as u64 * ELEM;
+    let kk_bytes = (p.k * p.k) as u64 * ELEM;
+    let bpart_bytes = (p.k * p.n) as u64 * ELEM; // k×n partials — LARGE
+    let mut b = DagBuilder::new(&format!("svd2_{}k", p.n / 1000));
+
+    // Stage 0: materialize each A row panel once; it feeds both the
+    // sketch (Y_i) and the projection (B_i) — the paper's canonical
+    // large-object fan-out that clustering + delayed I/O keep resident.
+    let loads: Vec<TaskId> = (0..p.nb)
+        .map(|i| {
+            let t = b.task(
+                format!("load_{i}"),
+                OpKind::Generic,
+                (rows_per * p.n) as f64,
+                panel_bytes,
+            );
+            b.with_input(t, panel_bytes);
+            t
+        })
+        .collect();
+
+    // Stage 1: range sketch Y_i = A_i · Ω, with Ω column-split in two
+    // (Dask splits the random matrix across chunks): each panel fans out
+    // to two immediately-ready sketch products — the multi-target
+    // fan-out that task clustering (alone) executes locally instead of
+    // invoking executors and shipping the panel through the KVS.
+    let y: Vec<TaskId> = (0..p.nb)
+        .map(|i| {
+            let halves: Vec<TaskId> = (0..2)
+                .map(|j| {
+                    let t = b.task(
+                        format!("y_{i}_{j}"),
+                        OpKind::GemmBlock,
+                        m * n * k, // half of 2·m·n·k
+                        y_bytes / 2,
+                    );
+                    b.edge(loads[i], t);
+                    t
+                })
+                .collect();
+            let cat = b.task(format!("y_{i}"), OpKind::Generic, m * k, y_bytes);
+            b.edge(halves[0], cat).edge(halves[1], cat);
+            cat
+        })
+        .collect();
+
+    // Stage 2: TSQR over Y panels → per-panel Q (via merge halves).
+    let qr: Vec<TaskId> = y
+        .iter()
+        .enumerate()
+        .map(|(i, &yi)| {
+            let t = b.task(
+                format!("yqr_{i}"),
+                OpKind::QrFactor,
+                4.0 * m * k * k,
+                kk_bytes,
+            );
+            b.edge(yi, t);
+            t
+        })
+        .collect();
+    let _r_root = reduction_tree(
+        &mut b,
+        qr.clone(),
+        OpKind::QrMerge,
+        4.0 * (2.0 * k) * k * k,
+        kk_bytes,
+        "ymerge",
+    );
+    // Q panels (approximation: derived from Y + local R, large objects).
+    let q: Vec<TaskId> = (0..p.nb)
+        .map(|i| {
+            let t = b.task(
+                format!("q_{i}"),
+                OpKind::QApplyLeaf,
+                2.0 * m * k * k,
+                y_bytes,
+            );
+            b.edge(y[i], t).edge(qr[i], t);
+            t
+        })
+        .collect();
+
+    // Stage 3: B partials = Q_iᵀ · A_i (k×n, large), tree-summed.
+    let bparts: Vec<TaskId> = (0..p.nb)
+        .map(|i| {
+            let t = b.task(
+                format!("b_{i}"),
+                OpKind::GemmBlock,
+                2.0 * m * k * n,
+                bpart_bytes,
+            );
+            b.edge(loads[i], t).edge(q[i], t);
+            t
+        })
+        .collect();
+    let b_total = reduction_tree(
+        &mut b,
+        bparts,
+        OpKind::BlockAdd,
+        k * n,
+        bpart_bytes,
+        "bsum",
+    );
+
+    // Stage 4: small SVD of B (via k×k Gram + Jacobi).
+    let small = b.task(
+        "svd2_small",
+        OpKind::Svd1Finish,
+        2.0 * k * k * n + 12.0 * (k * (k - 1.0) / 2.0) * 12.0 * k,
+        kk_bytes,
+    );
+    b.edge(b_total, small);
+
+    // Stage 5: U_i = Q_i · Ũ.
+    for i in 0..p.nb {
+        let u = b.task(
+            format!("u_{i}"),
+            OpKind::QApplyLeaf,
+            2.0 * m * k * k,
+            y_bytes,
+        );
+        b.edge(q[i], u).edge(small, u);
+    }
+    b.build().expect("SVD2 DAG is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svd1_counts() {
+        let p = Svd1Params {
+            rows: 8192,
+            cols: 128,
+            block_rows: 1024,
+        };
+        let d = svd1(p);
+        // 8 loads + 8 grams + 7 sums + 1 finish + 8 u = 32
+        assert_eq!(d.len(), 32);
+        assert_eq!(d.sinks().len(), 8);
+        assert_eq!(d.leaves().len(), 8); // the loads
+    }
+
+    #[test]
+    fn svd1_u_fanout_from_finish() {
+        let p = Svd1Params {
+            rows: 4096,
+            cols: 128,
+            block_rows: 1024,
+        };
+        let d = svd1(p);
+        let finish = d
+            .tasks()
+            .iter()
+            .position(|t| t.name == "svd1_finish")
+            .unwrap();
+        assert_eq!(d.task(finish as u32).children.len(), 4);
+    }
+
+    #[test]
+    fn svd2_stage_structure() {
+        let p = Svd2Params {
+            n: 4096,
+            k: 128,
+            nb: 4,
+        };
+        let d = svd2(p);
+        // 4 loads + 8 y-halves + 4 y-concats + 4 yqr + 3 merges + 4 q
+        //  + 4 b + 3 bsum + 1 small + 4 u = 39
+        assert_eq!(d.len(), 39);
+        // sinks: the 4 U panels + the root R factor of the Y-TSQR
+        assert_eq!(d.sinks().len(), 5);
+    }
+
+    #[test]
+    fn svd2_b_partials_are_large() {
+        let p = Svd2Params::paper(50);
+        let d = svd2(p);
+        let bpart = d.tasks().iter().find(|t| t.name == "b_0").unwrap();
+        // 128 × 50 000 × 4 B ≈ 25.6 MB
+        assert!(bpart.out_bytes > 20_000_000);
+    }
+
+    #[test]
+    fn paper_svd2_is_64_panels() {
+        let p = Svd2Params::paper(50);
+        assert_eq!(p.nb, 64);
+        assert_eq!(p.n, 50_000);
+    }
+}

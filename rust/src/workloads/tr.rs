@@ -1,0 +1,125 @@
+//! Tree Reduction (TR) — the paper's task-granularity microbenchmark
+//! (§4.1, Figs. 7–9).
+//!
+//! Sums N elements (or N chunks, for the real engine) pairwise over
+//! log(N) passes. The paper's Fig. 9 variant injects a fixed per-task
+//! delay (0–500 ms) to emulate heavier tasks.
+
+use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+use crate::sim::Time;
+
+use super::{reduction_tree, ELEM};
+
+/// TR parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TrParams {
+    /// Array length; the first pass has `n/2` add tasks. Must be ≥ 2.
+    pub n: usize,
+    /// Elements per chunk (1 = paper's scalar TR; 8192 = real-engine TR).
+    pub chunk: usize,
+    /// Injected per-task delay (Fig. 9's 0–500 ms knob).
+    pub delay: Option<Time>,
+}
+
+impl Default for TrParams {
+    fn default() -> Self {
+        TrParams {
+            n: 1024,
+            chunk: 1,
+            delay: None,
+        }
+    }
+}
+
+/// Build the TR DAG: `n/2` leaf adds, pairwise-merged to a single root.
+pub fn dag(p: TrParams) -> Dag {
+    assert!(p.n >= 2, "TR needs at least 2 elements");
+    let chunk_bytes = p.chunk as u64 * ELEM;
+    let mut b = DagBuilder::new(&format!("tr_{}x{}", p.n, p.chunk));
+    let n_leaves = p.n / 2;
+    let leaves: Vec<TaskId> = (0..n_leaves)
+        .map(|i| {
+            let t = b.task(
+                format!("add_l0_{i}"),
+                OpKind::TrAdd,
+                p.chunk as f64,
+                chunk_bytes,
+            );
+            // Each leaf reads its two input chunks from storage.
+            b.with_input(t, 2 * chunk_bytes);
+            if let Some(d) = p.delay {
+                b.with_duration(t, d);
+            }
+            t
+        })
+        .collect();
+    let root = reduction_tree(
+        &mut b,
+        leaves,
+        OpKind::TrAdd,
+        p.chunk as f64,
+        chunk_bytes,
+        "add",
+    );
+    if let Some(d) = p.delay {
+        // Internal nodes carry the injected delay too.
+        let dag_len = root as usize + 1;
+        for t in n_leaves..dag_len {
+            b.with_duration(t as u32, d);
+        }
+    }
+    // Final scalar collapse (real-engine TR ends with a (1,) sum).
+    if p.chunk > 1 {
+        let fin = b.task("tr_root", OpKind::TrRoot, p.chunk as f64, ELEM);
+        b.edge(root, fin);
+        if let Some(d) = p.delay {
+            b.with_duration(fin, d);
+        }
+    }
+    b.build().expect("TR DAG is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::secs;
+
+    #[test]
+    fn paper_tr_1024_has_512_leaf_adds_and_1023_tasks() {
+        let dag = dag(TrParams::default());
+        assert_eq!(dag.leaves().len(), 512);
+        assert_eq!(dag.len(), 1023); // N-1 operations
+        assert_eq!(dag.sinks().len(), 1);
+    }
+
+    #[test]
+    fn delay_is_applied_to_all_tasks() {
+        let d = dag(TrParams {
+            n: 16,
+            chunk: 1,
+            delay: Some(secs(0.25)),
+        });
+        assert!(d.tasks().iter().all(|t| t.dur_override == Some(secs(0.25))));
+    }
+
+    #[test]
+    fn chunked_tr_appends_root_sum() {
+        let d = dag(TrParams {
+            n: 8,
+            chunk: 8192,
+            delay: None,
+        });
+        assert_eq!(d.sinks().len(), 1);
+        let sink = d.task(d.sinks()[0]);
+        assert_eq!(sink.op, OpKind::TrRoot);
+        assert_eq!(sink.out_bytes, ELEM);
+    }
+
+    #[test]
+    fn leaves_read_external_input() {
+        let d = dag(TrParams::default());
+        for &l in &d.leaves() {
+            assert_eq!(d.task(l).input_bytes, 2 * ELEM);
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! TSQR — tall-skinny QR factorization (§4.1, Figs. 4, 14, 16, 20).
+//!
+//! Communication-avoiding QR: leaf blocks are QR-factored locally, the
+//! small R factors merge pairwise up a binary tree. A leaf factorization
+//! *materializes* its (large) implicit Q alongside R — numpywren's
+//! stateless executors write the whole bundle to storage even though only
+//! the 64 KB R travels up the tree, which is the source of the paper's
+//! four-orders-of-magnitude write amplification. In Wukong the bundle
+//! stays in the executor and only the extracted R moves.
+//!
+//! With `with_q = true` the DAG additionally reconstructs the explicit Q
+//! factor (merge Q-halves propagated back down to the leaves) — the
+//! variant the real engine verifies numerically (Q·R = A, QᵀQ = I).
+
+use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+
+use super::ELEM;
+
+/// TSQR parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TsqrParams {
+    /// Total rows (elements).
+    pub rows: usize,
+    /// Columns (the paper fixes 128).
+    pub cols: usize,
+    /// Rows per leaf block; `rows / block_rows` must be a power of two.
+    pub block_rows: usize,
+    /// Reconstruct the explicit Q factor (downward pass).
+    pub with_q: bool,
+}
+
+impl TsqrParams {
+    pub fn nb(&self) -> usize {
+        assert!(self.rows % self.block_rows == 0);
+        let nb = self.rows / self.block_rows;
+        assert!(nb.is_power_of_two(), "leaf count must be a power of two");
+        nb
+    }
+
+    /// Paper problem sizes: `millions_of_rows` M × 128, 4096-row blocks
+    /// (row count rounded to the nearest power-of-two leaf count),
+    /// R-factor output (numpywren's TSQR benchmark shape).
+    pub fn paper(millions_of_rows: f64) -> TsqrParams {
+        let want = millions_of_rows * 1024.0 * 1024.0 / 4096.0;
+        // nearest power of two (next_power_of_two would round 16.7M rows
+        // up to 33.5M)
+        let nb = (1usize << (want.log2().round() as u32)).max(1);
+        TsqrParams {
+            rows: nb * 4096,
+            cols: 128,
+            block_rows: 4096,
+            with_q: false,
+        }
+    }
+}
+
+/// Build the TSQR DAG.
+pub fn dag(p: TsqrParams) -> Dag {
+    let nb = p.nb();
+    let c = p.cols as u64;
+    let r_bytes = c * c * ELEM;
+    let q_leaf_bytes = (p.block_rows as u64) * c * ELEM;
+    let q_half_bytes = c * c * ELEM; // one half of the (2c × c) merge Q
+    let qr_bundle_bytes = q_leaf_bytes + r_bytes; // [Q, R] of a leaf
+    let merge_bundle_bytes = 2 * c * c * ELEM + r_bytes; // [Q (2c×c), R]
+    let block_bytes = q_leaf_bytes; // input block same shape as Q
+    let m = p.block_rows as f64;
+    let n = p.cols as f64;
+    let qr_flops = 4.0 * m * n * n;
+    let merge_flops = 4.0 * (2.0 * n) * n * n;
+    let apply_flops = 2.0 * m * n * n;
+    let half_flops = 2.0 * n * n * n;
+
+    let mut b = DagBuilder::new(&format!(
+        "tsqr_{}x{}_b{}{}",
+        p.rows,
+        p.cols,
+        p.block_rows,
+        if p.with_q { "_q" } else { "" }
+    ));
+
+    // Leaf factorizations: the task's object is the full [Q, R] bundle;
+    // a trivial extraction task peels off the small R for the merge tree.
+    let qr: Vec<TaskId> = (0..nb)
+        .map(|i| {
+            let t = b.task(
+                format!("qr_{i}"),
+                OpKind::QrFactor,
+                qr_flops,
+                qr_bundle_bytes,
+            );
+            b.with_input(t, block_bytes);
+            t
+        })
+        .collect();
+    let r_of = |b: &mut DagBuilder, src: TaskId, name: String| {
+        let t = b.task(name, OpKind::RExtract, 0.0, r_bytes);
+        b.edge(src, t);
+        t
+    };
+    let rs: Vec<TaskId> = qr
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| r_of(&mut b, q, format!("r_{i}")))
+        .collect();
+
+    // Q materialization per leaf (explicit-Q variant only).
+    let q: Vec<TaskId> = if p.with_q {
+        (0..nb)
+            .map(|i| {
+                let t = b.task(
+                    format!("q_{i}"),
+                    OpKind::QApplyLeaf,
+                    0.0, // extraction: already computed by qr_i
+                    q_leaf_bytes,
+                );
+                b.edge(qr[i], t);
+                t
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    // Merge tree over extracted R factors, bottom-up; remember each
+    // level's Q-half tasks for the downward reconstruction.
+    let mut level_nodes = rs.clone();
+    let mut halves_by_level: Vec<Vec<[TaskId; 2]>> = Vec::new();
+    let mut level = 0;
+    while level_nodes.len() > 1 {
+        let mut next = Vec::new();
+        let mut halves = Vec::new();
+        for (pair_idx, pair) in level_nodes.chunks(2).enumerate() {
+            let merge = b.task(
+                format!("merge_l{level}_{pair_idx}"),
+                OpKind::QrMerge,
+                merge_flops,
+                if p.with_q { merge_bundle_bytes } else { r_bytes },
+            );
+            b.edge(pair[0], merge).edge(pair[1], merge);
+            if p.with_q {
+                let hs = [0, 1].map(|half| {
+                    let h = b.task(
+                        format!("half_l{level}_{pair_idx}_{half}"),
+                        OpKind::QApplyHalf,
+                        0.0,
+                        q_half_bytes,
+                    );
+                    b.edge(merge, h);
+                    h
+                });
+                halves.push(hs);
+            }
+            // Next level consumes the extracted R, not the bundle.
+            let r_next = if level_nodes.len() > 2 || p.with_q {
+                r_of(&mut b, merge, format!("r_l{level}_{pair_idx}"))
+            } else {
+                merge // root merge of the R-only variant is the sink
+            };
+            next.push(r_next);
+        }
+        if p.with_q {
+            halves_by_level.push(halves);
+        }
+        level_nodes = next;
+        level += 1;
+    }
+
+    if p.with_q {
+        // Downward pass: each tree node's path product = parent product ×
+        // its merge half — one `prod` task per node (not per leaf).
+        let n_levels = halves_by_level.len();
+        let mut down: Vec<Option<TaskId>> = vec![None];
+        for level in (0..n_levels).rev() {
+            let halves = &halves_by_level[level];
+            let mut next_down = vec![None; halves.len() * 2];
+            for (pair_idx, hs) in halves.iter().enumerate() {
+                for half in 0..2 {
+                    let node = pair_idx * 2 + half;
+                    next_down[node] = Some(match down[pair_idx] {
+                        None => hs[half],
+                        Some(parent_prod) => {
+                            let prod = b.task(
+                                format!("prod_l{level}_{node}"),
+                                OpKind::QApplyHalf,
+                                half_flops,
+                                q_half_bytes,
+                            );
+                            b.edge(parent_prod, prod).edge(hs[half], prod);
+                            prod
+                        }
+                    });
+                }
+            }
+            down = next_down;
+        }
+        let path_prod: Vec<Option<TaskId>> =
+            if n_levels == 0 { vec![None; nb] } else { down };
+
+        // Final Q panels: Q_global_i = Q_i · (path product of halves).
+        for i in 0..nb {
+            let apply = b.task(
+                format!("applyq_{i}"),
+                OpKind::QApplyLeaf,
+                apply_flops,
+                q_leaf_bytes,
+            );
+            b.edge(q[i], apply);
+            if let Some(pp) = path_prod[i] {
+                b.edge(pp, apply);
+            }
+        }
+    }
+
+    b.build().expect("TSQR DAG is well-formed")
+}
+
+/// Logical input/output bytes: input matrix; output R (plus Q if
+/// reconstructed).
+pub fn io_bytes(p: TsqrParams) -> (u64, u64) {
+    let a = (p.rows as u64) * (p.cols as u64) * ELEM;
+    let r = (p.cols as u64) * (p.cols as u64) * ELEM;
+    (a, if p.with_q { a + r } else { r })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(nb: usize, with_q: bool) -> TsqrParams {
+        TsqrParams {
+            rows: 1024 * nb,
+            cols: 128,
+            block_rows: 1024,
+            with_q,
+        }
+    }
+
+    #[test]
+    fn r_only_two_leaf_tree() {
+        let d = dag(params(2, false));
+        // 2 qr + 2 r + 1 merge = 5; root merge is the sink
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.leaves().len(), 2);
+        assert_eq!(d.sinks().len(), 1);
+        assert_eq!(d.task(d.sinks()[0]).op, OpKind::QrMerge);
+    }
+
+    #[test]
+    fn with_q_two_leaf_tree() {
+        let d = dag(params(2, true));
+        // 2 qr + 2 r + 2 q + 1 merge + 1 r_l0 + 2 half + 2 applyq = 12
+        assert_eq!(d.len(), 12);
+        assert_eq!(d.sinks().len(), 3); // 2 Q panels + root R
+    }
+
+    #[test]
+    fn with_q_four_leaf_counts() {
+        let d = dag(params(4, true));
+        // 4 qr + 4 r + 4 q + 3 merges + 3 r_lx + 6 halves + 4 prods
+        //  + 4 applyq = 32
+        assert_eq!(d.len(), 32);
+        assert_eq!(d.sinks().len(), 5);
+    }
+
+    #[test]
+    fn every_apply_depends_on_path_products() {
+        let d = dag(params(8, true));
+        for t in d.tasks() {
+            if t.name.starts_with("applyq_") {
+                assert_eq!(t.parents.len(), 2, "{}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_bundles_dominate_bytes_in_r_only_mode() {
+        // The stateless-writes story: leaf [Q,R] bundles are ~97% of all
+        // task output bytes, but only R objects are *needed* downstream.
+        let d = dag(params(256, false));
+        let bundle_bytes: u64 = d
+            .tasks()
+            .iter()
+            .filter(|t| t.op == OpKind::QrFactor)
+            .map(|t| t.out_bytes)
+            .sum();
+        assert!(bundle_bytes as f64 / d.total_output_bytes() as f64 > 0.7);
+    }
+
+    #[test]
+    fn paper_params_are_power_of_two() {
+        let p = TsqrParams::paper(4.0);
+        assert!(p.nb().is_power_of_two());
+        assert_eq!(p.cols, 128);
+        assert_eq!(p.rows % p.block_rows, 0);
+        assert!(!p.with_q);
+        let p2 = TsqrParams::paper(16.7);
+        assert!(p2.nb().is_power_of_two());
+    }
+}

@@ -1,0 +1,62 @@
+//! Figure-harness smoke + shape assertions: every paper figure runs in
+//! quick mode and the key qualitative claims hold.
+
+use wukong::config::Config;
+use wukong::figures;
+
+#[test]
+fn all_figures_render_nonempty_tables() {
+    let cfg = Config::default();
+    for id in figures::all_ids() {
+        let fig = figures::run(id, &cfg, true).unwrap();
+        let rendered = fig.table.render();
+        assert!(rendered.lines().count() >= 3, "{id}: {rendered}");
+        assert!(!fig.caption.is_empty());
+    }
+}
+
+#[test]
+fn fig2_pywren_grows_wukong_stays_flat() {
+    let cfg = Config::default();
+    let fig = figures::run("fig2", &cfg, true).unwrap();
+    let rows: Vec<Vec<f64>> = fig
+        .table
+        .render()
+        .lines()
+        .skip(2)
+        .map(|l| {
+            l.split('|')
+                .filter_map(|c| c.trim().parse::<f64>().ok())
+                .collect()
+        })
+        .collect();
+    // columns: n, launch, pywren e2e, wukong e2e
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    // pywren end-to-end grows superlinearly-ish with N...
+    assert!(last[2] > first[2]);
+    // ...and wukong stays within seconds
+    assert!(last[3] < 10.0, "wukong e2e {}", last[3]);
+}
+
+#[test]
+fn fig23_staircase_is_monotone() {
+    let cfg = Config::default();
+    let fig = figures::run("fig23", &cfg, true).unwrap();
+    let makespans: Vec<f64> = fig
+        .table
+        .render()
+        .lines()
+        .skip(2)
+        .map(|l| {
+            l.split('|').nth(2).unwrap().trim().parse::<f64>().unwrap()
+        })
+        .collect();
+    assert_eq!(makespans.len(), 4);
+    for w in makespans.windows(2) {
+        assert!(
+            w[1] <= w[0] * 1.02,
+            "factor analysis regressed: {makespans:?}"
+        );
+    }
+}

@@ -1,0 +1,243 @@
+//! PJRT runtime integration: load every AOT artifact, execute it, and
+//! check the numerics against plain-Rust references — closing the
+//! python→HLO→PJRT→Rust loop. Requires `make artifacts`.
+
+use wukong::runtime::{default_artifact_dir, SharedRuntime, Tensor};
+use wukong::util::Rng;
+
+fn rt() -> std::sync::Arc<SharedRuntime> {
+    SharedRuntime::load(&default_artifact_dir())
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+fn tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape.to_vec(), rng.f32_vec(n))
+}
+
+fn matmul_ref(a: &Tensor, b: &Tensor) -> Vec<f32> {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a.data[i * k + kk];
+            for j in 0..n {
+                c[i * n + j] += av * b.data[kk * n + j];
+            }
+        }
+    }
+    c
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{what}[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn manifest_lists_all_ops() {
+    let rt = rt();
+    let names = rt.op_names();
+    for expected in [
+        "tr_add_f32_8192",
+        "tr_root_f32_8192",
+        "gemm_block_f32_256",
+        "gemm_acc_f32_256",
+        "block_add_f32_256",
+        "qr_factor_f32_1024x128",
+        "qr_merge_f32_128",
+        "q_apply_leaf_f32_1024x128",
+        "q_apply_half_f32_128",
+        "gram_f32_1024x128",
+        "svd1_finish_f32_128",
+        "svc_grad_f32_1024x64",
+        "svc_update_f32_64",
+    ] {
+        assert!(names.iter().any(|n| n == expected), "missing {expected}");
+    }
+}
+
+#[test]
+fn tr_add_matches_cpu() {
+    let rt = rt();
+    let mut rng = Rng::new(1);
+    let x = tensor(&mut rng, &[8192]);
+    let y = tensor(&mut rng, &[8192]);
+    let out = rt.execute("tr_add_f32_8192", &[x.clone(), y.clone()]).unwrap();
+    let want: Vec<f32> = x.data.iter().zip(&y.data).map(|(a, b)| a + b).collect();
+    assert_close(&out[0].data, &want, 1e-6, "tr_add");
+}
+
+#[test]
+fn tr_root_sums() {
+    let rt = rt();
+    let x = Tensor::new(vec![8192], vec![0.5f32; 8192]);
+    let out = rt.execute("tr_root_f32_8192", &[x]).unwrap();
+    assert_eq!(out[0].shape, vec![1]);
+    assert!((out[0].data[0] - 4096.0).abs() < 0.5);
+}
+
+#[test]
+fn gemm_block_matches_naive_matmul() {
+    let rt = rt();
+    let mut rng = Rng::new(2);
+    let a = tensor(&mut rng, &[256, 256]);
+    let b = tensor(&mut rng, &[256, 256]);
+    let out = rt
+        .execute("gemm_block_f32_256", &[a.clone(), b.clone()])
+        .unwrap();
+    assert_close(&out[0].data, &matmul_ref(&a, &b), 3e-4, "gemm_block");
+}
+
+#[test]
+fn gemm_acc_adds_c() {
+    let rt = rt();
+    let mut rng = Rng::new(3);
+    let c = tensor(&mut rng, &[256, 256]);
+    let a = tensor(&mut rng, &[256, 256]);
+    let b = tensor(&mut rng, &[256, 256]);
+    let out = rt
+        .execute("gemm_acc_f32_256", &[c.clone(), a.clone(), b.clone()])
+        .unwrap();
+    let mut want = matmul_ref(&a, &b);
+    for (w, cv) in want.iter_mut().zip(&c.data) {
+        *w += cv;
+    }
+    assert_close(&out[0].data, &want, 3e-4, "gemm_acc");
+}
+
+#[test]
+fn qr_factor_reconstructs_and_is_orthonormal() {
+    let rt = rt();
+    let mut rng = Rng::new(4);
+    let a = tensor(&mut rng, &[1024, 128]);
+    let out = rt.execute("qr_factor_f32_1024x128", &[a.clone()]).unwrap();
+    let (q, r) = (&out[0], &out[1]);
+    assert_eq!(q.shape, vec![1024, 128]);
+    assert_eq!(r.shape, vec![128, 128]);
+    // Q·R = A
+    let qr = matmul_ref(q, r);
+    assert_close(&qr, &a.data, 5e-3, "Q·R");
+    // QᵀQ = I (sample the diagonal + a few off-diagonals)
+    for j in [0usize, 17, 64, 127] {
+        let mut dot = 0f32;
+        for i in 0..1024 {
+            dot += q.data[i * 128 + j] * q.data[i * 128 + j];
+        }
+        assert!((dot - 1.0).abs() < 2e-3, "‖q_{j}‖² = {dot}");
+    }
+    // R upper-triangular
+    for i in 1..128 {
+        for j in 0..i {
+            assert_eq!(r.data[i * 128 + j], 0.0, "R[{i},{j}]");
+        }
+    }
+}
+
+#[test]
+fn qr_merge_stacks() {
+    let rt = rt();
+    let mut rng = Rng::new(5);
+    // Use upper-triangular inputs like real R factors.
+    let mut r1 = tensor(&mut rng, &[128, 128]);
+    let mut r2 = tensor(&mut rng, &[128, 128]);
+    for r in [&mut r1, &mut r2] {
+        for i in 0..128 {
+            for j in 0..i {
+                r.data[i * 128 + j] = 0.0;
+            }
+        }
+    }
+    let out = rt
+        .execute("qr_merge_f32_128", &[r1.clone(), r2.clone()])
+        .unwrap();
+    let (q, r) = (&out[0], &out[1]);
+    assert_eq!(q.shape, vec![256, 128]);
+    // Q·R reconstructs the stack
+    let qr = matmul_ref(q, r);
+    let mut stacked = r1.data.clone();
+    stacked.extend_from_slice(&r2.data);
+    assert_close(&qr, &stacked, 5e-3, "merge Q·R");
+}
+
+#[test]
+fn gram_is_ata() {
+    let rt = rt();
+    let mut rng = Rng::new(6);
+    let a = tensor(&mut rng, &[1024, 128]);
+    let out = rt.execute("gram_f32_1024x128", &[a.clone()]).unwrap();
+    // check a few entries of AᵀA
+    for (i, j) in [(0usize, 0usize), (3, 70), (127, 127)] {
+        let mut want = 0f32;
+        for row in 0..1024 {
+            want += a.data[row * 128 + i] * a.data[row * 128 + j];
+        }
+        let got = out[0].data[i * 128 + j];
+        assert!(
+            (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+            "G[{i},{j}]: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn svd1_finish_singular_values_match_gram_trace() {
+    let rt = rt();
+    let mut rng = Rng::new(7);
+    let a = tensor(&mut rng, &[1024, 128]);
+    let g = rt.execute("gram_f32_1024x128", &[a]).unwrap();
+    let out = rt.execute("svd1_finish_f32_128", &[g[0].clone()]).unwrap();
+    let sv = &out[0];
+    assert_eq!(sv.shape, vec![128]);
+    // Σσ² = trace(AᵀA)
+    let trace: f32 = (0..128).map(|i| g[0].data[i * 128 + i]).sum();
+    let sumsq: f32 = sv.data.iter().map(|s| s * s).sum();
+    assert!(
+        (sumsq - trace).abs() < 0.01 * trace,
+        "Σσ²={sumsq} vs trace={trace}"
+    );
+    // sorted descending
+    for w in sv.data.windows(2) {
+        assert!(w[0] >= w[1] - 1e-3);
+    }
+}
+
+#[test]
+fn svc_update_is_axpy() {
+    let rt = rt();
+    let mut rng = Rng::new(8);
+    let w = tensor(&mut rng, &[64]);
+    let g = tensor(&mut rng, &[64]);
+    let lr = Tensor::new(vec![1], vec![0.1]);
+    let out = rt
+        .execute("svc_update_f32_64", &[w.clone(), g.clone(), lr])
+        .unwrap();
+    let want: Vec<f32> =
+        w.data.iter().zip(&g.data).map(|(w, g)| w - 0.1 * g).collect();
+    assert_close(&out[0].data, &want, 1e-5, "svc_update");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let rt = rt();
+    let bad = Tensor::new(vec![16], vec![0.0; 16]);
+    assert!(rt.execute("tr_add_f32_8192", &[bad.clone(), bad]).is_err());
+}
+
+#[test]
+fn unknown_op_is_rejected() {
+    let rt = rt();
+    assert!(rt.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn warmup_compiles_everything() {
+    let rt = rt();
+    rt.warmup().unwrap();
+}
