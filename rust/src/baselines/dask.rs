@@ -29,7 +29,8 @@ struct World {
     sched: FifoResource,
     ready: VecDeque<TaskId>,
     remaining: Vec<usize>,
-    executed: Vec<bool>,
+    /// Per-task execution counters (fail-fast on 2; see RunMetrics).
+    executed: Vec<u32>,
     /// Primary location of each task's output (executing worker).
     loc: Vec<Option<usize>>,
     /// External input partitions' round-robin placement.
@@ -132,10 +133,8 @@ fn exec_on_worker(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
 }
 
 fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
-    assert!(
-        !std::mem::replace(&mut w.executed[t as usize], true),
-        "task executed twice"
-    );
+    w.executed[t as usize] += 1;
+    assert!(w.executed[t as usize] == 1, "task {t} executed twice");
     w.metrics.tasks_executed += 1;
     w.done += 1;
     w.workers[wid].holds[t as usize] = true;
@@ -168,7 +167,7 @@ pub fn run_dask(dag: &Dag, cfg: &Config, dcfg: &DaskConfig, _seed: u64) -> RunMe
         sched: FifoResource::new(),
         ready: dag.leaves().into(),
         remaining: dag.tasks().iter().map(|t| t.parents.len()).collect(),
-        executed: vec![false; n],
+        executed: vec![0; n],
         loc: vec![None; n],
         input_loc: (0..n).map(|i| i % dcfg.n_workers).collect(),
         workers: (0..dcfg.n_workers)
@@ -195,6 +194,7 @@ pub fn run_dask(dag: &Dag, cfg: &Config, dcfg: &DaskConfig, _seed: u64) -> RunMe
 
     let makespan = to_secs(w.finish.unwrap_or(sim.now()));
     w.metrics.makespan_s = makespan;
+    w.metrics.per_task_exec = w.executed.clone();
     w.metrics.invocations = w.metrics.tasks_executed; // dispatches
     let used = w.workers.iter().filter(|wk| wk.used).count();
     w.metrics.executors_used = used as u64;

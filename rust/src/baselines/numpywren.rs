@@ -31,7 +31,8 @@ struct World {
     queue_srv: FifoResource,
     queue: VecDeque<TaskId>,
     remaining: Vec<usize>,
-    executed: Vec<bool>,
+    /// Per-task execution counters (fail-fast on 2; see RunMetrics).
+    executed: Vec<u32>,
     done: u64,
     workers: Vec<Worker>,
     lambda: LambdaService,
@@ -125,10 +126,8 @@ fn execute(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
 }
 
 fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
-    assert!(
-        !std::mem::replace(&mut w.executed[t as usize], true),
-        "task executed twice"
-    );
+    w.executed[t as usize] += 1;
+    assert!(w.executed[t as usize] == 1, "task {t} executed twice");
     w.metrics.tasks_executed += 1;
     w.done += 1;
     // Scheduler-side dependency update (one queue op per completion).
@@ -186,7 +185,7 @@ pub fn run_numpywren(dag: &Dag, cfg: &Config, seed: u64) -> RunMetrics {
         queue_srv: FifoResource::new(),
         queue: dag.leaves().into(),
         remaining: dag.tasks().iter().map(|t| t.parents.len()).collect(),
-        executed: vec![false; n],
+        executed: vec![0; n],
         done: 0,
         workers: Vec::new(),
         lambda: LambdaService::new(cfg.lambda.clone(), rng.fork(1)),
@@ -219,6 +218,7 @@ pub fn run_numpywren(dag: &Dag, cfg: &Config, seed: u64) -> RunMetrics {
 
     let makespan = to_secs(w.finish.unwrap_or(sim.now()));
     w.metrics.makespan_s = makespan;
+    w.metrics.per_task_exec = w.executed.clone();
     w.metrics.kvs = w.kvs.metrics;
     w.metrics.invocations = w.lambda.total_invocations();
     w.metrics.peak_concurrency = w.lambda.peak_active();

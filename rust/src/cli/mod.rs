@@ -1,9 +1,14 @@
 //! Minimal command-line parser (clap is not in the offline crate set).
 //!
 //! Grammar: `wukong <command> [positional...] [--flag] [--key value]
-//! [--set a.b=c ...]`. Unknown flags are errors; `--set` may repeat.
+//! [--set a.b=c ...]`. Options in [`VALUED`] consume the next argument
+//! (missing value = error); any other `--name` is collected as a boolean
+//! flag and validated by the command handlers; `--set` may repeat.
 
 use std::collections::BTreeMap;
+
+/// Options that take a value (everything else after `--` is a flag).
+pub const VALUED: &[&str] = &["config", "runs", "seed", "out", "engine"];
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -21,8 +26,6 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = it.into_iter().peekable();
-        // options that take a value
-        const VALUED: &[&str] = &["config", "runs", "seed", "out", "engine"];
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 if name == "set" {
@@ -65,11 +68,24 @@ wukong — serverless parallel computing (SoCC '20 reproduction)
 
 USAGE:
   wukong figure <id|all> [--quick] [--set a.b=c ...]   regenerate a paper figure
-  wukong run <workload> [--engine wukong|numpywren|dask1000|dask125]
-                         [--set a.b=c ...]             run one workload on the simulator
+  wukong run <workload> [--engine <name>] [--set a.b=c ...]
+                                                       run one workload on the simulator
+  wukong verify [--engine a,b,...] [--runs N] [--seed S] [--verbose]
+                                                       cross-engine differential conformance:
+                                                       sweeps generated DAGs (incl. irregular
+                                                       shapes) through every registered engine
+                                                       and a policy-knob matrix, asserting
+                                                       exactly-once, completion, per-seed
+                                                       determinism and the locality ordering
+                                                       (Wukong KVS bytes <= stateless bytes);
+                                                       exits non-zero on any violation
   wukong dag <workload>                                print a workload DAG (DOT)
   wukong list                                          list figures + workloads
   wukong serve [--quick]                               real-engine demo (PJRT compute)
+
+ENGINES:
+  wukong | numpywren | pywren | dask125 | dask1000  (all behind the unified
+  Engine trait; `verify` defaults to every one of them)
 
 WORKLOADS:
   tr | gemm | tsqr | svd1 | svd2 | svc  (paper-default parameters)
@@ -77,7 +93,10 @@ WORKLOADS:
 OPTIONS:
   --config <file>   INI config (see configs/default.ini)
   --set a.b=c       override any config key (repeatable)
+  --runs <n>        repetitions (figures) / DAG cases (verify)
+  --seed <s>        base RNG seed
   --quick           shrunk problem sizes (tests/smoke)
+  --verbose         per-case progress (verify)
 ";
 
 #[cfg(test)]
@@ -119,5 +138,73 @@ mod tests {
         assert!(
             Args::parse(["run".into(), "--engine".into()].into_iter()).is_err()
         );
+    }
+
+    #[test]
+    fn every_valued_option_without_value_is_an_error() {
+        for name in VALUED {
+            let err = Args::parse(["run".into(), format!("--{name}")])
+                .expect_err(name);
+            assert!(err.contains(name), "{name}: {err}");
+            assert!(err.contains("needs a value"), "{name}: {err}");
+        }
+    }
+
+    #[test]
+    fn every_valued_option_round_trips() {
+        let argv: Vec<String> = std::iter::once("run".to_string())
+            .chain(VALUED.iter().flat_map(|name| {
+                [format!("--{name}"), format!("val-{name}")]
+            }))
+            .collect();
+        let a = Args::parse(argv).unwrap();
+        for name in VALUED {
+            assert_eq!(a.opt(name), Some(format!("val-{name}").as_str()));
+        }
+        assert_eq!(a.options.len(), VALUED.len());
+    }
+
+    #[test]
+    fn set_without_any_argument_is_an_error() {
+        let err = Args::parse(["figure".into(), "--set".into()]).unwrap_err();
+        assert!(err.contains("needs key=value"), "{err}");
+    }
+
+    #[test]
+    fn set_value_may_itself_contain_equals() {
+        let a = parse("run --set a.b=c=d");
+        assert_eq!(a.sets.get("a.b").map(String::as_str), Some("c=d"));
+    }
+
+    #[test]
+    fn repeated_set_keys_last_one_wins() {
+        let a = parse("run --set seed=1 --set seed=2");
+        assert_eq!(a.sets.get("seed").map(String::as_str), Some("2"));
+        assert_eq!(a.sets.len(), 1);
+    }
+
+    #[test]
+    fn unknown_double_dash_names_are_collected_as_flags() {
+        // Unknown flags are *not* parse errors: command handlers decide
+        // (e.g. `verify --verbose`, future flags stay forward-compatible).
+        let a = parse("verify --verbose --definitely-unknown");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("definitely-unknown"));
+        assert!(!a.flag("quick"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn first_bare_word_is_command_rest_are_positional() {
+        let a = parse("figure fig14 fig15 --quick extra");
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional, vec!["fig14", "fig15", "extra"]);
+    }
+
+    #[test]
+    fn empty_argv_parses_to_empty_command() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "");
+        assert!(a.positional.is_empty() && a.flags.is_empty());
     }
 }

@@ -26,6 +26,8 @@ struct Shared {
     computer: TaskComputer,
     queue: Mutex<VecDeque<TaskId>>,
     remaining: Vec<AtomicU32>,
+    /// Per-task execution counters (fail-fast on 2; see RunMetrics).
+    executed: Vec<AtomicU32>,
     done: AtomicU64,
     outputs: Mutex<HashMap<String, Obj>>,
     errors: Mutex<Vec<String>>,
@@ -73,6 +75,10 @@ fn worker(sh: &Arc<Shared>) {
         });
         match sh.computer.compute(&sh.dag, t, &parent_objs, ext) {
             Ok(out) => {
+                assert!(
+                    sh.executed[t as usize].fetch_add(1, Ordering::SeqCst) == 0,
+                    "task {t} executed twice"
+                );
                 // Stateless: write the full output back.
                 sh.kvs.put(&obj_key(t), obj_to_bytes(&out));
                 if node.children.is_empty() {
@@ -115,6 +121,7 @@ pub fn run_real_numpywren(
             .iter()
             .map(|t| AtomicU32::new(t.parents.len() as u32))
             .collect(),
+        executed: (0..n).map(|_| AtomicU32::new(0)).collect(),
         done: AtomicU64::new(0),
         outputs: Mutex::new(HashMap::new()),
         errors: Mutex::new(Vec::new()),
@@ -147,6 +154,11 @@ pub fn run_real_numpywren(
         kvs_bytes_written: sh.kvs.bytes_written.load(Ordering::Relaxed),
         kvs_reads: sh.kvs.reads.load(Ordering::Relaxed),
         kvs_writes: sh.kvs.writes.load(Ordering::Relaxed),
+        per_task_exec: sh
+            .executed
+            .iter()
+            .map(|e| e.load(Ordering::SeqCst))
+            .collect(),
         outputs: {
             let mut guard = sh.outputs.lock().unwrap();
             std::mem::take(&mut *guard)

@@ -74,6 +74,8 @@ pub struct RealReport {
     pub kvs_bytes_written: u64,
     pub kvs_reads: u64,
     pub kvs_writes: u64,
+    /// Per-task execution counts (conformance: each must be exactly 1).
+    pub per_task_exec: Vec<u32>,
     /// Sink-task outputs by task name (for client-side verification).
     pub outputs: HashMap<String, Obj>,
 }
@@ -85,7 +87,8 @@ struct Shared {
     computer: TaskComputer,
     counters: Vec<AtomicU32>,
     claimed: Vec<AtomicBool>,
-    executed: Vec<AtomicBool>,
+    /// Per-task execution counters (fail-fast on 2; see RunMetrics).
+    executed: Vec<AtomicU32>,
     stored: Vec<AtomicBool>,
     executors: AtomicU64,
     tasks_done: AtomicU64,
@@ -114,7 +117,12 @@ impl Shared {
 }
 
 /// One executor: runs its schedule from `start`, with inline args.
-fn executor_body(sh: &Arc<Shared>, pool: &Arc<ThreadPool>, start: TaskId, inline: HashMap<TaskId, Arc<Obj>>) {
+fn executor_body(
+    sh: &Arc<Shared>,
+    pool: &Arc<ThreadPool>,
+    start: TaskId,
+    inline: HashMap<TaskId, Arc<Obj>>,
+) {
     sh.executors.fetch_add(1, Ordering::Relaxed);
     let mut cache: HashMap<TaskId, Arc<Obj>> = inline;
     let mut queue: VecDeque<TaskId> = VecDeque::from([start]);
@@ -193,7 +201,7 @@ fn executor_body(sh: &Arc<Shared>, pool: &Arc<ThreadPool>, start: TaskId, inline
             }
         };
         assert!(
-            !sh.executed[t as usize].swap(true, Ordering::SeqCst),
+            sh.executed[t as usize].fetch_add(1, Ordering::SeqCst) == 0,
             "task {t} executed twice"
         );
         sh.tasks_done.fetch_add(1, Ordering::SeqCst);
@@ -311,7 +319,7 @@ pub fn run_real_wukong(
         computer: TaskComputer { rt },
         counters: (0..n).map(|_| AtomicU32::new(0)).collect(),
         claimed: (0..n).map(|_| AtomicBool::new(false)).collect(),
-        executed: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        executed: (0..n).map(|_| AtomicU32::new(0)).collect(),
         stored: (0..n).map(|_| AtomicBool::new(false)).collect(),
         executors: AtomicU64::new(0),
         tasks_done: AtomicU64::new(0),
@@ -347,6 +355,11 @@ pub fn run_real_wukong(
         kvs_bytes_written: sh.kvs.bytes_written.load(Ordering::Relaxed),
         kvs_reads: sh.kvs.reads.load(Ordering::Relaxed),
         kvs_writes: sh.kvs.writes.load(Ordering::Relaxed),
+        per_task_exec: sh
+            .executed
+            .iter()
+            .map(|e| e.load(Ordering::SeqCst))
+            .collect(),
         outputs: {
             let mut guard = sh.outputs.lock().unwrap();
             std::mem::take(&mut *guard)

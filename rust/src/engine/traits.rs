@@ -1,0 +1,428 @@
+//! The unified [`Engine`] abstraction: one contract that every execution
+//! backend — the discrete-event Wukong engine, the numpywren / PyWren /
+//! Dask baseline models, and the real PJRT engines — implements behind a
+//! thin adapter.
+//!
+//! The paper's methodology drives *the exact same input DAG* through
+//! several engines and compares normalized meters (makespan, KVS bytes,
+//! per-task execution counts). Before this trait existed each engine had
+//! an ad-hoc entry point (`run_wukong`, `run_numpywren`, `run_dask`, ...)
+//! and nothing enforced that they agree; the [`crate::verify`] harness
+//! now sweeps a DAG corpus through every registered engine via this
+//! trait and asserts the cross-engine invariants (exactly-once,
+//! completion, per-seed determinism, Wukong bytes ≤ stateless bytes).
+//!
+//! Sim-path engines are pure functions of `(dag, config, seed)` and are
+//! always registered; the real engines need AOT artifacts + a PJRT
+//! backend and are only constructible when those are present
+//! ([`RealWukongEngine::try_new`]).
+
+use std::sync::Arc;
+
+use crate::baselines::{run_dask, run_numpywren, run_pywren};
+use crate::config::{Config, DaskConfig};
+use crate::coordinator::sim_engine::run_wukong_faulty;
+use crate::dag::Dag;
+use crate::metrics::RunMetrics;
+use crate::platform::faults::FaultPlan;
+use crate::runtime::SharedRuntime;
+use crate::storage::real_kvs::RealKvs;
+
+use super::compute::seed_inputs;
+use super::real_numpywren::run_real_numpywren;
+use super::real_wukong::{run_real_wukong, RealConfig, RealReport};
+
+/// What an engine is, structurally — used by the conformance harness to
+/// decide which invariants apply (e.g. the locality-ordering bound only
+/// binds engines that meter KVS traffic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineCaps {
+    /// Scheduling decisions are made by the executors themselves (§3.3)
+    /// rather than a central scheduler.
+    pub decentralized: bool,
+    /// Executors keep parent outputs resident between tasks (locality);
+    /// stateless engines round-trip everything through the KVS.
+    pub stateful_executors: bool,
+    /// Runs on ephemeral serverless executors (vs a serverful VM pool).
+    pub serverless: bool,
+    /// Intermediate objects flow through the metered KVS, so the report's
+    /// `kvs` byte counters are meaningful and byte-exact.
+    pub meters_kvs: bool,
+    /// Supports fault injection (§3.6 retry contract).
+    pub supports_faults: bool,
+}
+
+impl Default for EngineCaps {
+    fn default() -> Self {
+        EngineCaps {
+            decentralized: false,
+            stateful_executors: false,
+            serverless: true,
+            meters_kvs: true,
+            supports_faults: false,
+        }
+    }
+}
+
+/// Normalized result of one engine run: the shared [`RunMetrics`] plus
+/// engine-specific extras that matter for conformance.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    /// Registry name of the engine that produced this report.
+    pub engine: &'static str,
+    /// Normalized meters (makespan, KVS bytes, per-task counts, ...).
+    pub metrics: RunMetrics,
+    /// DES events processed, when the engine is simulator-backed (used by
+    /// the determinism check: same seed ⇒ same event count).
+    pub sim_events: Option<u64>,
+}
+
+/// A DAG execution engine. `run` must be a deterministic function of
+/// `(dag, cfg, seed)` for sim-path engines (the conformance harness
+/// asserts it); real engines are wall-clock-timed and exempt from the
+/// determinism invariant but not from exactly-once/completion.
+pub trait Engine {
+    /// Stable registry name (`wukong`, `numpywren`, `dask1000`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Structural capabilities (drives which invariants are checked).
+    fn caps(&self) -> EngineCaps;
+
+    /// Execute `dag` under `cfg` with `seed` and report normalized meters.
+    fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport;
+}
+
+/// The decentralized Wukong engine on the discrete-event simulator.
+#[derive(Debug, Clone, Default)]
+pub struct SimWukong {
+    /// Optional fault injection (§3.6); default = no faults.
+    pub faults: FaultPlan,
+}
+
+impl Engine for SimWukong {
+    fn name(&self) -> &'static str {
+        "wukong"
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            decentralized: true,
+            stateful_executors: true,
+            serverless: true,
+            meters_kvs: true,
+            supports_faults: true,
+        }
+    }
+
+    fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        let r = run_wukong_faulty(dag, cfg, seed, self.faults.clone());
+        EngineReport {
+            engine: self.name(),
+            metrics: r.metrics,
+            sim_events: Some(r.sim_events),
+        }
+    }
+}
+
+/// The centralized, stateless numpywren baseline model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimNumpywren;
+
+impl Engine for SimNumpywren {
+    fn name(&self) -> &'static str {
+        "numpywren"
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::default()
+    }
+
+    fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        EngineReport {
+            engine: self.name(),
+            metrics: run_numpywren(dag, cfg, seed),
+            sim_events: None,
+        }
+    }
+}
+
+/// PyWren scaling configuration: numpywren's substrate with one worker
+/// per static schedule (leaf) unless pinned.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimPywren {
+    /// Worker count override; `None` = one per DAG leaf (the paper's
+    /// serverless-scaling setup, Figs. 2/21).
+    pub n_workers: Option<usize>,
+}
+
+impl Engine for SimPywren {
+    fn name(&self) -> &'static str {
+        "pywren"
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::default()
+    }
+
+    fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        let n = self.n_workers.unwrap_or_else(|| dag.leaves().len().max(1));
+        EngineReport {
+            engine: self.name(),
+            metrics: run_pywren(dag, cfg, n, seed),
+            sim_events: None,
+        }
+    }
+}
+
+/// Serverful Dask-distributed model (paper's Dask-125 / Dask-1000).
+#[derive(Debug, Clone)]
+pub struct SimDask {
+    name: &'static str,
+    dcfg: DaskConfig,
+}
+
+impl SimDask {
+    /// 1000 × 2-core workers (the scheduler-bound worst case).
+    pub fn workers_1000() -> SimDask {
+        SimDask {
+            name: "dask1000",
+            dcfg: DaskConfig::workers_1000(),
+        }
+    }
+
+    /// 125 × 16-core workers (the serverful best case).
+    pub fn workers_125() -> SimDask {
+        SimDask {
+            name: "dask125",
+            dcfg: DaskConfig::workers_125(),
+        }
+    }
+}
+
+impl Engine for SimDask {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            decentralized: false,
+            stateful_executors: true,
+            serverless: false,
+            // Dask moves data peer-to-peer between workers, not through
+            // the metered KVS; its kvs counters stay 0.
+            meters_kvs: false,
+            supports_faults: false,
+        }
+    }
+
+    fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        EngineReport {
+            engine: self.name(),
+            metrics: run_dask(dag, cfg, &self.dcfg, seed),
+            sim_events: None,
+        }
+    }
+}
+
+/// Convert a wall-clock [`RealReport`] into normalized metrics.
+fn real_metrics(rep: &RealReport) -> RunMetrics {
+    RunMetrics {
+        makespan_s: rep.makespan.as_secs_f64(),
+        tasks_executed: rep.tasks_executed,
+        executors_used: rep.executors_used,
+        invocations: rep.executors_used,
+        kvs: crate::storage::KvsMetrics {
+            bytes_read: rep.kvs_bytes_read,
+            bytes_written: rep.kvs_bytes_written,
+            reads: rep.kvs_reads,
+            writes: rep.kvs_writes,
+        },
+        per_task_exec: rep.per_task_exec.clone(),
+        ..RunMetrics::default()
+    }
+}
+
+/// The real (thread-pool + PJRT) Wukong engine behind the shared trait.
+/// Requires AOT artifacts; construct via [`RealWukongEngine::try_new`].
+pub struct RealWukongEngine {
+    rt: Arc<SharedRuntime>,
+    rcfg: RealConfig,
+}
+
+impl RealWukongEngine {
+    /// `None` when artifacts or the PJRT backend are unavailable.
+    pub fn try_new() -> Option<RealWukongEngine> {
+        Some(RealWukongEngine {
+            rt: SharedRuntime::try_load_default()?,
+            rcfg: RealConfig::default(),
+        })
+    }
+
+    pub fn with(rt: Arc<SharedRuntime>, rcfg: RealConfig) -> RealWukongEngine {
+        RealWukongEngine { rt, rcfg }
+    }
+}
+
+impl Engine for RealWukongEngine {
+    fn name(&self) -> &'static str {
+        "real-wukong"
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            decentralized: true,
+            stateful_executors: true,
+            serverless: true,
+            meters_kvs: true,
+            supports_faults: false,
+        }
+    }
+
+    fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        let kvs = RealKvs::new(cfg.storage.n_shards.max(1), 0.0, 0.0);
+        seed_inputs(dag, &kvs, seed);
+        let rep = run_real_wukong(dag, Arc::clone(&self.rt), kvs, self.rcfg.clone())
+            .unwrap_or_else(|e| panic!("real-wukong run failed: {e}"));
+        EngineReport {
+            engine: self.name(),
+            metrics: real_metrics(&rep),
+            sim_events: None,
+        }
+    }
+}
+
+/// The real stateless numpywren baseline behind the shared trait.
+pub struct RealNumpywrenEngine {
+    rt: Arc<SharedRuntime>,
+    rcfg: RealConfig,
+}
+
+impl RealNumpywrenEngine {
+    /// `None` when artifacts or the PJRT backend are unavailable.
+    pub fn try_new() -> Option<RealNumpywrenEngine> {
+        Some(RealNumpywrenEngine {
+            rt: SharedRuntime::try_load_default()?,
+            rcfg: RealConfig::default(),
+        })
+    }
+
+    pub fn with(rt: Arc<SharedRuntime>, rcfg: RealConfig) -> RealNumpywrenEngine {
+        RealNumpywrenEngine { rt, rcfg }
+    }
+}
+
+impl Engine for RealNumpywrenEngine {
+    fn name(&self) -> &'static str {
+        "real-numpywren"
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::default()
+    }
+
+    fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        let kvs = RealKvs::new(cfg.storage.n_shards.max(1), 0.0, 0.0);
+        seed_inputs(dag, &kvs, seed);
+        let rep = run_real_numpywren(dag, Arc::clone(&self.rt), kvs, self.rcfg.clone())
+            .unwrap_or_else(|e| panic!("real-numpywren run failed: {e}"));
+        EngineReport {
+            engine: self.name(),
+            metrics: real_metrics(&rep),
+            sim_events: None,
+        }
+    }
+}
+
+/// Every sim-path engine, in paper-comparison order. These need no
+/// artifacts and are the default `wukong verify` matrix.
+pub fn sim_registry() -> Vec<Box<dyn Engine>> {
+    vec![
+        Box::new(SimWukong::default()),
+        Box::new(SimNumpywren),
+        Box::new(SimPywren::default()),
+        Box::new(SimDask::workers_125()),
+        Box::new(SimDask::workers_1000()),
+    ]
+}
+
+/// Names of every sim-path engine (CLI help / error messages).
+pub fn sim_engine_names() -> Vec<&'static str> {
+    sim_registry().iter().map(|e| e.name()).collect()
+}
+
+/// Look up a sim-path engine by registry name.
+pub fn engine_by_name(name: &str) -> Option<Box<dyn Engine>> {
+    sim_registry().into_iter().find(|e| e.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DagBuilder, OpKind};
+
+    fn diamond() -> Dag {
+        let mut b = DagBuilder::new("diamond");
+        let a = b.task("a", OpKind::Generic, 1e6, 100);
+        let x = b.task("x", OpKind::Generic, 1e6, 100);
+        let y = b.task("y", OpKind::Generic, 1e6, 100);
+        let d = b.task("d", OpKind::Generic, 1e6, 100);
+        b.edge(a, x).edge(a, y).edge(x, d).edge(y, d);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn registry_names_are_unique() {
+        let names = sim_engine_names();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "{names:?}");
+        assert!(names.len() >= 3);
+    }
+
+    #[test]
+    fn lookup_by_name_round_trips() {
+        for name in sim_engine_names() {
+            let e = engine_by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(e.name(), name);
+        }
+        assert!(engine_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_sim_engine_reports_per_task_counts() {
+        let dag = diamond();
+        let cfg = Config::default();
+        for e in sim_registry() {
+            let r = e.run(&dag, &cfg, 7);
+            assert_eq!(r.engine, e.name());
+            assert_eq!(
+                r.metrics.per_task_exec,
+                vec![1; dag.len()],
+                "{} per-task counts",
+                e.name()
+            );
+            assert_eq!(r.metrics.tasks_executed as usize, dag.len(), "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn wukong_is_the_only_decentralized_sim_engine() {
+        let decentralized: Vec<&str> = sim_registry()
+            .iter()
+            .filter(|e| e.caps().decentralized)
+            .map(|e| e.name())
+            .collect();
+        assert_eq!(decentralized, vec!["wukong"]);
+    }
+
+    #[test]
+    fn dask_does_not_meter_kvs() {
+        let dag = diamond();
+        let e = SimDask::workers_125();
+        assert!(!e.caps().meters_kvs);
+        let r = e.run(&dag, &Config::default(), 1);
+        assert_eq!(r.metrics.kvs.bytes_written, 0);
+    }
+}

@@ -4,11 +4,11 @@
 use std::path::Path;
 use std::process::ExitCode;
 
-use wukong::baselines::{run_dask, run_numpywren};
 use wukong::cli::{Args, USAGE};
-use wukong::config::{apply_overrides, Config, DaskConfig};
-use wukong::coordinator::run_wukong;
+use wukong::config::{apply_overrides, Config};
 use wukong::dag::Dag;
+use wukong::engine::{engine_by_name, sim_engine_names, Engine as _};
+use wukong::verify::{run_verify, VerifyOptions};
 use wukong::workloads::{gemm, svc, svd, tr, tsqr};
 use wukong::{figures, util};
 
@@ -75,7 +75,9 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                 vec![figures::all_ids()
                     .into_iter()
                     .find(|&x| x == id)
-                    .ok_or(format!("unknown figure {id:?} (try `wukong list`)"))?]
+                    .ok_or_else(|| {
+                        format!("unknown figure {id:?} (try `wukong list`)")
+                    })?]
             };
             for id in ids {
                 let fig = figures::run(id, &cfg, quick).expect("registered id");
@@ -90,8 +92,8 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                 .positional
                 .first()
                 .ok_or("run: which workload? (try `wukong list`)")?;
-            let dag =
-                build_workload(name).ok_or(format!("unknown workload {name:?}"))?;
+            let dag = build_workload(name)
+                .ok_or_else(|| format!("unknown workload {name:?}"))?;
             let engine = args.opt("engine").unwrap_or("wukong");
             println!(
                 "workload {name}: {} tasks, {} edges, {} leaves",
@@ -99,17 +101,15 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                 dag.n_edges(),
                 dag.leaves().len()
             );
-            let m = match engine {
-                "wukong" => run_wukong(&dag, &cfg, cfg.seed).metrics,
-                "numpywren" => run_numpywren(&dag, &cfg, cfg.seed),
-                "dask1000" => {
-                    run_dask(&dag, &cfg, &DaskConfig::workers_1000(), cfg.seed)
-                }
-                "dask125" => {
-                    run_dask(&dag, &cfg, &DaskConfig::workers_125(), cfg.seed)
-                }
-                other => return Err(format!("unknown engine {other:?}")),
-            };
+            // Every engine runs through the unified trait (same path the
+            // `verify` conformance harness exercises).
+            let eng = engine_by_name(engine).ok_or_else(|| {
+                format!(
+                    "unknown engine {engine:?} (known: {})",
+                    sim_engine_names().join(" ")
+                )
+            })?;
+            let m = eng.run(&dag, &cfg, cfg.seed).metrics;
             let mut t = util::table::Table::new(vec!["metric", "value"]);
             t.row(vec![
                 "makespan".to_string(),
@@ -139,10 +139,53 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                 .positional
                 .first()
                 .ok_or("dag: which workload?")?;
-            let dag =
-                build_workload(name).ok_or(format!("unknown workload {name:?}"))?;
+            let dag = build_workload(name)
+                .ok_or_else(|| format!("unknown workload {name:?}"))?;
             println!("{}", dag.to_dot());
             Ok(())
+        }
+        "verify" => {
+            let mut opts = VerifyOptions::default();
+            if let Some(list) = args.opt("engine") {
+                opts.engines = list
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+            }
+            if let Some(runs) = args.opt("runs") {
+                opts.runs = runs.parse().map_err(|e| format!("--runs: {e}"))?;
+            }
+            if let Some(seed) = args.opt("seed") {
+                opts.seed = seed.parse().map_err(|e| format!("--seed: {e}"))?;
+            }
+            opts.verbose = args.flag("verbose");
+            let summary = run_verify(&opts)?;
+            let mut t = util::table::Table::new(vec!["metric", "value"]);
+            t.row(vec!["engines".into(), summary.engines.join(" ")]);
+            t.row(vec!["DAG cases".into(), summary.cases.to_string()]);
+            t.row(vec!["total tasks".into(), summary.total_tasks.to_string()]);
+            t.row(vec!["engine runs".into(), summary.engine_runs.to_string()]);
+            t.row(vec![
+                "violations".into(),
+                summary.violations.len().to_string(),
+            ]);
+            println!("{}", t.render());
+            if summary.ok() {
+                println!(
+                    "conformance OK: exactly-once, completion, determinism \
+                     and locality ordering hold on every case"
+                );
+                Ok(())
+            } else {
+                for v in &summary.violations {
+                    eprintln!("violation: {v}");
+                }
+                Err(format!(
+                    "{} conformance violation(s)",
+                    summary.violations.len()
+                ))
+            }
         }
         "serve" => {
             let quick = args.flag("quick");

@@ -36,7 +36,12 @@ impl Breakdown {
 }
 
 /// Everything one engine run reports.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` is part of the determinism contract: two runs of any
+/// sim-path engine with the same DAG, config and seed must produce
+/// *identical* metrics (asserted by `wukong verify` and
+/// `rust/tests/conformance.rs`).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {
     /// End-to-end job time (s).
     pub makespan_s: f64,
@@ -61,6 +66,10 @@ pub struct RunMetrics {
     /// Executors that died with an exhausted retry budget (§3.6): when
     /// nonzero the job is failed, mirroring AWS's retry-twice contract.
     pub failed_executors: u64,
+    /// Per-task execution counts, indexed by `TaskId`. Every engine fills
+    /// this (len == DAG size); the conformance harness asserts each entry
+    /// is exactly 1 (the paper's exactly-once claim, §3.3).
+    pub per_task_exec: Vec<u32>,
 }
 
 impl RunMetrics {

@@ -4,7 +4,7 @@
 use crate::sim::{to_secs, Time};
 
 /// Event-sourced concurrency counter.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Timeline {
     deltas: Vec<(Time, i64)>,
 }

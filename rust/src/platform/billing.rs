@@ -32,7 +32,7 @@ impl Default for Prices {
 }
 
 /// Accumulating tenant-side cost meter.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Billing {
     /// Total Lambda GB-seconds consumed.
     pub lambda_gb_s: f64,

@@ -283,6 +283,17 @@ impl SharedRuntime {
         Ok(Arc::new(SharedRuntime(Mutex::new(Runtime::load(dir)?))))
     }
 
+    /// Load from [`default_artifact_dir`], or `None` when the artifact
+    /// manifest or the PJRT backend is unavailable — the single
+    /// availability gate used by the real-engine trait adapters and the
+    /// artifact-dependent tests (which skip with a message on `None`).
+    pub fn try_load_default() -> Option<Arc<SharedRuntime>> {
+        if !artifacts_available() {
+            return None;
+        }
+        SharedRuntime::load(&default_artifact_dir()).ok()
+    }
+
     /// Execute an op (serialized; PJRT parallelizes internally).
     pub fn execute(&self, op: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.0.lock().unwrap().execute(op, inputs)
@@ -313,6 +324,13 @@ pub fn default_artifact_dir() -> PathBuf {
     std::env::var_os("WUKONG_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Whether the AOT artifact manifest is present. Real-engine tests and
+/// the real-engine trait adapters skip cleanly when it is not (run
+/// `make artifacts` to produce it).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").is_file()
 }
 
 #[cfg(test)]

@@ -153,6 +153,80 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_large_writes_same_shard_queue_fifo() {
+        // Two large writes *issued at the same instant* to keys on the
+        // same shard must serialize (FIFO contention — the effect behind
+        // Figs. 13–16), regardless of issue order.
+        let mut k = model(8);
+        let (k1, mut k2) = (1u64, 2u64);
+        while k.shard_of(k1) != k.shard_of(k2) {
+            k2 += 1;
+        }
+        let a = k.write(0, k1, 100_000_000); // 1 s at 100 MB/s
+        let b = k.write(0, k2, 100_000_000);
+        assert_eq!(a, secs(1.001));
+        assert_eq!(b, secs(2.002), "same-shard writes must not overlap");
+    }
+
+    #[test]
+    fn concurrent_large_writes_different_shards_proceed_in_parallel() {
+        let mut k = model(64);
+        let (k1, mut k2) = (1u64, 2u64);
+        while k.shard_of(k1) == k.shard_of(k2) {
+            k2 += 1;
+        }
+        let a = k.write(0, k1, 100_000_000);
+        let b = k.write(0, k2, 100_000_000);
+        let r = k.read(0, k2, 100_000_000); // queues behind b's shard only
+        assert_eq!(a, secs(1.001));
+        assert_eq!(b, secs(1.001), "different shards must overlap");
+        assert_eq!(r, secs(2.002));
+    }
+
+    #[test]
+    fn s3_iops_gate_delays_small_ops_beyond_latency() {
+        // Isolate the IOPS gate from latency/bandwidth: with op_latency=0
+        // and huge shard bandwidth, 50 tiny ops at 100 IOPS must take
+        // ~0.5 s; ungated they are instantaneous.
+        let gated_cfg = StorageConfig {
+            mode: crate::config::KvsMode::S3,
+            n_shards: 1,
+            shard_bw: 1e15,
+            op_latency_s: 0.0,
+            iops_limit: 100.0,
+            ..StorageConfig::default()
+        };
+        let mut gated = KvsModel::new(gated_cfg.clone());
+        let mut ungated = KvsModel::new(StorageConfig {
+            iops_limit: 0.0,
+            ..gated_cfg
+        });
+        let mut last_gated = 0;
+        let mut last_ungated = 0;
+        for _ in 0..50 {
+            last_gated = gated.write(0, 7, 1);
+            last_ungated = ungated.write(0, 7, 1);
+        }
+        assert!(
+            last_gated >= secs(0.49),
+            "gated 50 ops at 100 IOPS ended at {last_gated}"
+        );
+        assert_eq!(last_ungated, 0, "ungated tiny ops must be instant");
+    }
+
+    #[test]
+    fn more_shards_reduce_contention() {
+        // 8 same-instant large writes: one shard serializes all of them;
+        // many shards spread them out (strictly earlier completion).
+        let finish = |n_shards: usize| {
+            let mut k = model(n_shards);
+            (0..8u64).map(|key| k.write(0, key, 100_000_000)).max().unwrap()
+        };
+        assert_eq!(finish(1), secs(8.008));
+        assert!(finish(64) < secs(8.008));
+    }
+
+    #[test]
     fn keys_spread_across_shards() {
         let k = model(75);
         let mut counts = vec![0usize; 75];

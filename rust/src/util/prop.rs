@@ -9,6 +9,15 @@
 
 use super::rng::Rng;
 
+/// Best-effort panic payload → message (shared by [`check`] and the
+/// verify harness's guarded engine runs).
+pub fn panic_message(err: &(dyn std::any::Any + Send)) -> String {
+    err.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
 /// Run `f` for `cases` random cases. Panics with the failing case seed.
 pub fn check<F: FnMut(&mut Rng)>(seed: u64, cases: u32, mut f: F) {
     for case in 0..cases {
@@ -20,11 +29,7 @@ pub fn check<F: FnMut(&mut Rng)>(seed: u64, cases: u32, mut f: F) {
             || f(&mut rng),
         ));
         if let Err(err) = result {
-            let msg = err
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".into());
+            let msg = panic_message(err.as_ref());
             panic!(
                 "property failed on case {case} (replay seed {case_seed:#x}): {msg}"
             );

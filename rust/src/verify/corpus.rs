@@ -1,0 +1,302 @@
+//! The conformance DAG corpus: seeded random generators covering the
+//! regular *and* irregular shapes serverless DAG engines trip over
+//! (cf. the irregular/elastic workloads of arXiv:2206.15321).
+//!
+//! Shapes:
+//!  * layered     — random forward-edge layer graphs (the classic case);
+//!  * skewed      — one wide fan-out root with chains of skewed depth
+//!                  hanging off a subset of children, joined by a sink;
+//!  * diamonds    — stacked fork/join diamonds of varying width;
+//!  * chain       — a long dependency chain (single static schedule);
+//!  * multi-sink  — several independent sinks (every sink must publish);
+//!  * wide fan-in — many parents into one child (MDS counter stress).
+//!
+//! Output sizes deliberately straddle every policy threshold: zero-byte
+//! edges, tiny objects, sizes just below/above the 256 KB inline-argument
+//! limit, and objects above the 200 MB clustering threshold.
+//!
+//! Everything is a pure function of the [`Rng`] stream, so a case seed
+//! reproduces its DAG exactly (the harness prints seeds on failure).
+
+use crate::config::{Config, StorageConfig};
+use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+use crate::util::prop::gen;
+use crate::util::Rng;
+
+/// Output sizes straddling the inline (256 KB) and clustering (200 MB /
+/// 1 MB knob values) thresholds, including zero-byte edges.
+pub const SIZES: &[u64] = &[
+    0,
+    64,
+    8 * 1024,
+    200 * 1024,
+    300 * 1024,
+    2 << 20,
+    300 << 20,
+];
+
+fn add_task(b: &mut DagBuilder, rng: &mut Rng, name: String) -> TaskId {
+    let bytes = *gen::choose(rng, SIZES);
+    b.task(name, OpKind::Generic, rng.below(1_000_000) as f64 + 1.0, bytes)
+}
+
+/// Attach an external input partition to ~half the leaves.
+fn maybe_input(b: &mut DagBuilder, rng: &mut Rng, t: TaskId) {
+    if rng.f64() < 0.5 {
+        b.with_input(t, 1024);
+    }
+}
+
+/// Random layered DAG: 1–5 ranks, forward-only random edges (the shape
+/// the seed property tests used).
+pub fn layered(rng: &mut Rng) -> Dag {
+    let layers = gen::usize_in(rng, 1, 5);
+    let mut b = DagBuilder::new("layered");
+    let mut prev: Vec<TaskId> = Vec::new();
+    let mut all: Vec<TaskId> = Vec::new();
+    let mut edges: std::collections::HashSet<(TaskId, TaskId)> =
+        std::collections::HashSet::new();
+    for layer in 0..layers {
+        let width = gen::usize_in(rng, 1, 6);
+        let mut cur = Vec::new();
+        for i in 0..width {
+            let t = add_task(&mut b, rng, format!("t{layer}_{i}"));
+            if layer == 0 {
+                maybe_input(&mut b, rng, t);
+            }
+            cur.push(t);
+        }
+        if layer > 0 {
+            for &t in &cur {
+                let p = *gen::choose(rng, &prev);
+                edges.insert((p, t));
+                b.edge(p, t);
+                for _ in 0..gen::usize_in(rng, 0, 2) {
+                    let extra = *gen::choose(rng, &all);
+                    if edges.insert((extra, t)) {
+                        b.edge(extra, t);
+                    }
+                }
+            }
+        }
+        all.extend(&cur);
+        prev = cur;
+    }
+    b.build().expect("layered corpus DAG is acyclic by construction")
+}
+
+/// Skewed fan-out: a root wide enough to cross the fan-out delegation
+/// threshold, with chains of uneven depth under some children, all joined
+/// by one sink (a wide, partially-deep fan-in).
+pub fn skewed_fanout(rng: &mut Rng) -> Dag {
+    let width = gen::usize_in(rng, 8, 32);
+    let mut b = DagBuilder::new("skewed");
+    let root = add_task(&mut b, rng, "root".into());
+    maybe_input(&mut b, rng, root);
+    let mut tails = Vec::with_capacity(width);
+    for i in 0..width {
+        let mut cur = add_task(&mut b, rng, format!("k{i}"));
+        b.edge(root, cur);
+        // a skewed minority of branches grows a deeper chain
+        if rng.f64() < 0.3 {
+            for d in 0..gen::usize_in(rng, 1, 4) {
+                let next = add_task(&mut b, rng, format!("k{i}_d{d}"));
+                b.edge(cur, next);
+                cur = next;
+            }
+        }
+        tails.push(cur);
+    }
+    let sink = add_task(&mut b, rng, "sink".into());
+    for (i, &t) in tails.iter().enumerate() {
+        // every tail is a distinct task, so no duplicate edges; keep the
+        // first one unconditionally so the sink has a parent
+        if i == 0 || rng.f64() < 0.6 {
+            b.edge(t, sink);
+        }
+    }
+    b.build().expect("skewed corpus DAG is acyclic by construction")
+}
+
+/// Stacked fork/join diamonds: top → w mids → bottom, repeated 1–5 times
+/// (fan-in ownership must hand over cleanly at every join).
+pub fn diamond_stack(rng: &mut Rng) -> Dag {
+    let depth = gen::usize_in(rng, 1, 5);
+    let mut b = DagBuilder::new("diamonds");
+    let mut top = add_task(&mut b, rng, "d0_top".into());
+    maybe_input(&mut b, rng, top);
+    for d in 0..depth {
+        let width = gen::usize_in(rng, 2, 4);
+        let bottom = add_task(&mut b, rng, format!("d{d}_bot"));
+        for i in 0..width {
+            let mid = add_task(&mut b, rng, format!("d{d}_m{i}"));
+            b.edge(top, mid);
+            b.edge(mid, bottom);
+        }
+        top = bottom;
+    }
+    b.build().expect("diamond corpus DAG is acyclic by construction")
+}
+
+/// A long chain (16–80 tasks): one static schedule, zero fan-out — the
+/// pure "becomes" path.
+pub fn long_chain(rng: &mut Rng) -> Dag {
+    let len = gen::usize_in(rng, 16, 80);
+    let mut b = DagBuilder::new("chain");
+    let mut prev = add_task(&mut b, rng, "c0".into());
+    maybe_input(&mut b, rng, prev);
+    for i in 1..len {
+        let t = add_task(&mut b, rng, format!("c{i}"));
+        b.edge(prev, t);
+        prev = t;
+    }
+    b.build().expect("chain corpus DAG is acyclic by construction")
+}
+
+/// Multiple independent sinks: the job only completes when *every* sink
+/// publishes (the n_sinks bookkeeping the engines must get right).
+pub fn multi_sink(rng: &mut Rng) -> Dag {
+    let n_roots = gen::usize_in(rng, 2, 6);
+    let mut b = DagBuilder::new("multisink");
+    let mut roots = Vec::with_capacity(n_roots);
+    for i in 0..n_roots {
+        let r = add_task(&mut b, rng, format!("r{i}"));
+        maybe_input(&mut b, rng, r);
+        roots.push(r);
+    }
+    for (i, &r) in roots.iter().enumerate() {
+        for j in 0..gen::usize_in(rng, 1, 3) {
+            let s = add_task(&mut b, rng, format!("s{i}_{j}"));
+            b.edge(r, s);
+            // occasionally share a second parent from another root
+            if n_roots > 1 && rng.f64() < 0.3 {
+                let other = roots[(i + 1) % n_roots];
+                b.edge(other, s);
+            }
+        }
+    }
+    b.build().expect("multi-sink corpus DAG is acyclic by construction")
+}
+
+/// Wide fan-in: 4–24 parents feeding one child (atomic-counter stress),
+/// followed by a short tail chain.
+pub fn wide_fanin(rng: &mut Rng) -> Dag {
+    let width = gen::usize_in(rng, 4, 24);
+    let mut b = DagBuilder::new("fanin");
+    let mut parents = Vec::with_capacity(width);
+    for i in 0..width {
+        let p = add_task(&mut b, rng, format!("p{i}"));
+        maybe_input(&mut b, rng, p);
+        parents.push(p);
+    }
+    let join = add_task(&mut b, rng, "join".into());
+    for &p in &parents {
+        b.edge(p, join);
+    }
+    let mut prev = join;
+    for i in 0..gen::usize_in(rng, 0, 3) {
+        let t = add_task(&mut b, rng, format!("tail{i}"));
+        b.edge(prev, t);
+        prev = t;
+    }
+    b.build().expect("fan-in corpus DAG is acyclic by construction")
+}
+
+/// Draw one DAG from the whole corpus, shape chosen by the seed.
+pub fn random_dag(rng: &mut Rng) -> Dag {
+    match rng.below(6) {
+        0 => layered(rng),
+        1 => skewed_fanout(rng),
+        2 => diamond_stack(rng),
+        3 => long_chain(rng),
+        4 => multi_sink(rng),
+        _ => wide_fanin(rng),
+    }
+}
+
+/// Random policy-knob + substrate configuration (the per-case baseline;
+/// the harness additionally sweeps the exhaustive knob matrix on top).
+pub fn random_config(rng: &mut Rng) -> Config {
+    let mut cfg = Config::default();
+    cfg.wukong.use_clustering = rng.f64() < 0.7;
+    cfg.wukong.use_delayed_io = rng.f64() < 0.7;
+    cfg.wukong.clustering_threshold =
+        *gen::choose(rng, &[1u64 << 20, 200 << 20, 100]);
+    cfg.wukong.fanout_delegation_threshold = gen::usize_in(rng, 1, 10);
+    if rng.f64() < 0.25 {
+        cfg.storage = StorageConfig::default().s3(); // IOPS-gated mode
+    }
+    cfg.storage.n_shards = gen::usize_in(rng, 1, 75);
+    cfg.numpywren.n_workers = gen::usize_in(rng, 1, 32);
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn every_shape_builds_and_is_nonempty() {
+        check(0xC0121, 60, |rng| {
+            let shapes: [fn(&mut Rng) -> Dag; 6] = [
+                layered,
+                skewed_fanout,
+                diamond_stack,
+                long_chain,
+                multi_sink,
+                wide_fanin,
+            ];
+            for f in shapes {
+                let d = f(rng);
+                assert!(!d.is_empty());
+                assert!(!d.leaves().is_empty());
+                assert!(!d.sinks().is_empty());
+                // builder validated acyclicity; double-check via topo
+                assert_eq!(d.topo_order().len(), d.len());
+            }
+        });
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..20 {
+            let da = random_dag(&mut a);
+            let db = random_dag(&mut b);
+            assert_eq!(da.len(), db.len());
+            assert_eq!(da.n_edges(), db.n_edges());
+            assert_eq!(
+                da.tasks().iter().map(|t| t.out_bytes).sum::<u64>(),
+                db.tasks().iter().map(|t| t.out_bytes).sum::<u64>()
+            );
+        }
+    }
+
+    #[test]
+    fn corpus_covers_irregular_sizes() {
+        // Across a modest sample the corpus must emit zero-byte edges,
+        // inline-straddling sizes and clustering-sized objects.
+        let mut rng = Rng::new(7);
+        let (mut zero, mut straddle, mut huge) = (false, false, false);
+        for _ in 0..40 {
+            let d = random_dag(&mut rng);
+            for t in d.tasks() {
+                zero |= t.out_bytes == 0;
+                straddle |= t.out_bytes == 300 * 1024;
+                huge |= t.out_bytes == (300 << 20);
+            }
+        }
+        assert!(zero && straddle && huge, "{zero} {straddle} {huge}");
+    }
+
+    #[test]
+    fn chain_has_single_schedule() {
+        let mut rng = Rng::new(3);
+        let d = long_chain(&mut rng);
+        assert_eq!(d.leaves().len(), 1);
+        assert_eq!(d.sinks().len(), 1);
+        assert_eq!(d.n_edges(), d.len() - 1);
+    }
+}

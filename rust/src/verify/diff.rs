@@ -1,0 +1,188 @@
+//! Differential conformance checks: the cross-engine invariants every
+//! [`crate::engine::Engine`] run must satisfy on every corpus DAG.
+//!
+//! * **completion** — every task ran; the job did not deadlock;
+//! * **exactly-once** — per-task execution counts are all exactly 1
+//!   (§3.3's fan-in ownership claim);
+//! * **determinism** — the same `(dag, config, seed)` yields identical
+//!   [`crate::metrics::RunMetrics`] (and DES event counts);
+//! * **locality ordering** — Wukong's metered KVS traffic never exceeds
+//!   the stateless bound (what a numpywren-style engine must move), the
+//!   paper's Figs. 3–4 claim;
+//! * **stateless model** — a stateless engine's measured bytes equal the
+//!   closed form exactly (byte-exact metering, not modeling).
+
+use crate::dag::Dag;
+use crate::engine::EngineReport;
+
+/// The closed-form KVS traffic of a fully-stateless engine on `dag`:
+/// every task writes its output once; every dependency edge reads the
+/// parent's full output; every external input partition is read once.
+/// Returns `(bytes_read, bytes_written)`.
+pub fn stateless_bytes(dag: &Dag) -> (u64, u64) {
+    let mut read = 0u64;
+    let mut written = 0u64;
+    for t in dag.tasks() {
+        written += t.out_bytes;
+        read += t.input_bytes;
+        for &p in &t.parents {
+            read += dag.task(p).out_bytes;
+        }
+    }
+    (read, written)
+}
+
+/// Every task executed; count matches the DAG size.
+pub fn check_completion(dag: &Dag, rep: &EngineReport) -> Result<(), String> {
+    if rep.metrics.tasks_executed as usize != dag.len() {
+        return Err(format!(
+            "[{}] completion: {}/{} tasks executed",
+            rep.engine,
+            rep.metrics.tasks_executed,
+            dag.len()
+        ));
+    }
+    Ok(())
+}
+
+/// Per-task execution counts are present and all exactly 1.
+pub fn check_exactly_once(dag: &Dag, rep: &EngineReport) -> Result<(), String> {
+    let counts = &rep.metrics.per_task_exec;
+    if counts.len() != dag.len() {
+        return Err(format!(
+            "[{}] exactly-once: engine reported {} per-task counts for a \
+             {}-task DAG",
+            rep.engine,
+            counts.len(),
+            dag.len()
+        ));
+    }
+    for (t, &c) in counts.iter().enumerate() {
+        if c != 1 {
+            return Err(format!(
+                "[{}] exactly-once: task {t} ({}) executed {c} times",
+                rep.engine,
+                dag.task(t as u32).name
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Two runs with the same seed must be byte-identical.
+pub fn check_determinism(a: &EngineReport, b: &EngineReport) -> Result<(), String> {
+    if a.sim_events != b.sim_events {
+        return Err(format!(
+            "[{}] determinism: event counts differ ({:?} vs {:?})",
+            a.engine, a.sim_events, b.sim_events
+        ));
+    }
+    if a.metrics != b.metrics {
+        let what = if a.metrics.makespan_s != b.metrics.makespan_s {
+            format!(
+                "makespan {} vs {}",
+                a.metrics.makespan_s, b.metrics.makespan_s
+            )
+        } else if a.metrics.kvs != b.metrics.kvs {
+            format!("kvs {:?} vs {:?}", a.metrics.kvs, b.metrics.kvs)
+        } else {
+            "metrics structs differ".to_string()
+        };
+        return Err(format!("[{}] determinism: {what}", a.engine));
+    }
+    Ok(())
+}
+
+/// Locality ordering: a locality-aware engine's metered KVS bytes never
+/// exceed the stateless closed form on the same DAG.
+pub fn check_locality(dag: &Dag, rep: &EngineReport) -> Result<(), String> {
+    let (sl_read, sl_written) = stateless_bytes(dag);
+    if rep.metrics.kvs.bytes_written > sl_written {
+        return Err(format!(
+            "[{}] locality: wrote {} B > stateless bound {} B",
+            rep.engine, rep.metrics.kvs.bytes_written, sl_written
+        ));
+    }
+    if rep.metrics.kvs.bytes_read > sl_read {
+        return Err(format!(
+            "[{}] locality: read {} B > stateless bound {} B",
+            rep.engine, rep.metrics.kvs.bytes_read, sl_read
+        ));
+    }
+    Ok(())
+}
+
+/// A stateless engine's measured traffic must equal the closed form
+/// exactly (locks in byte-exact metering).
+pub fn check_stateless_model(dag: &Dag, rep: &EngineReport) -> Result<(), String> {
+    let (sl_read, sl_written) = stateless_bytes(dag);
+    if rep.metrics.kvs.bytes_written != sl_written
+        || rep.metrics.kvs.bytes_read != sl_read
+    {
+        return Err(format!(
+            "[{}] stateless-model: measured read/write {}/{} B != closed \
+             form {}/{} B",
+            rep.engine,
+            rep.metrics.kvs.bytes_read,
+            rep.metrics.kvs.bytes_written,
+            sl_read,
+            sl_written
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::dag::{DagBuilder, OpKind};
+    use crate::engine::{Engine, SimNumpywren, SimWukong};
+
+    fn chain2() -> Dag {
+        let mut b = DagBuilder::new("chain2");
+        let a = b.task("a", OpKind::Generic, 1e6, 1000);
+        let c = b.task("c", OpKind::Generic, 1e6, 1000);
+        b.edge(a, c);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn stateless_closed_form_counts_edges_and_inputs() {
+        let mut b = DagBuilder::new("f");
+        let x = b.task("x", OpKind::Generic, 1.0, 100);
+        let y = b.task("y", OpKind::Generic, 1.0, 50);
+        let z = b.task("z", OpKind::Generic, 1.0, 10);
+        b.edge(x, z).edge(y, z);
+        b.with_input(x, 7);
+        let dag = b.build().unwrap();
+        let (read, written) = stateless_bytes(&dag);
+        assert_eq!(written, 160);
+        assert_eq!(read, 150 + 7);
+    }
+
+    #[test]
+    fn numpywren_matches_the_stateless_closed_form() {
+        let dag = chain2();
+        let rep = SimNumpywren.run(&dag, &Config::default(), 1);
+        check_stateless_model(&dag, &rep).unwrap();
+        check_completion(&dag, &rep).unwrap();
+        check_exactly_once(&dag, &rep).unwrap();
+    }
+
+    #[test]
+    fn wukong_satisfies_the_locality_bound() {
+        let dag = chain2();
+        let rep = SimWukong::default().run(&dag, &Config::default(), 1);
+        check_locality(&dag, &rep).unwrap();
+    }
+
+    #[test]
+    fn violations_carry_engine_and_detail() {
+        let dag = chain2();
+        let mut rep = SimNumpywren.run(&dag, &Config::default(), 1);
+        rep.metrics.per_task_exec[1] = 2;
+        let err = check_exactly_once(&dag, &rep).unwrap_err();
+        assert!(err.contains("numpywren") && err.contains("task 1"), "{err}");
+    }
+}

@@ -1,0 +1,290 @@
+//! `wukong verify` — the cross-engine differential conformance harness.
+//!
+//! Sweeps a corpus of generated DAGs ([`corpus`]) through every
+//! registered [`crate::engine::Engine`] under an exhaustive policy-knob
+//! matrix and asserts the invariants in [`diff`]: exactly-once
+//! execution, completion, per-seed determinism, and the paper's locality
+//! ordering (Wukong KVS bytes ≤ stateless KVS bytes on every DAG).
+//!
+//! This is the regression gate for every scaling/perf refactor: it runs
+//! artifact-free under plain `cargo test -q` (`rust/tests/conformance.rs`)
+//! and interactively via `wukong verify [--engine ...] [--runs N]
+//! [--seed S]`. Engine panics (an engine's internal exactly-once assert,
+//! an index bug mid-refactor) are caught per run and reported as
+//! violations with the case seed, so one bad case never hides the rest
+//! of the matrix.
+
+pub mod corpus;
+pub mod diff;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::config::Config;
+use crate::dag::Dag;
+use crate::engine::{engine_by_name, sim_engine_names, sim_registry, Engine, EngineReport};
+use crate::util::Rng;
+
+/// Options for one verify sweep (CLI flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct VerifyOptions {
+    /// Engine names to exercise; empty = every sim-path engine.
+    pub engines: Vec<String>,
+    /// Number of generated DAG cases.
+    pub runs: u64,
+    /// Base seed; each case derives an independent seed from it.
+    pub seed: u64,
+    /// Print one line per case.
+    pub verbose: bool,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        VerifyOptions {
+            engines: Vec::new(),
+            runs: 25,
+            seed: 7,
+            verbose: false,
+        }
+    }
+}
+
+/// Aggregate result of a verify sweep.
+#[derive(Debug, Clone)]
+pub struct VerifySummary {
+    /// DAG cases generated and executed.
+    pub cases: u64,
+    /// Engines exercised (registry names).
+    pub engines: Vec<String>,
+    /// Total engine runs (incl. knob-matrix and determinism re-runs).
+    pub engine_runs: u64,
+    /// Total tasks across all generated DAGs.
+    pub total_tasks: u64,
+    /// Every invariant violation found, with its case seed for replay.
+    pub violations: Vec<String>,
+}
+
+impl VerifySummary {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// The exhaustive Wukong policy-knob matrix swept per case: clustering ×
+/// delayed-I/O × clustering threshold (below/above most corpus sizes).
+fn knob_matrix(base: &Config) -> Vec<(String, Config)> {
+    let mut out = Vec::new();
+    for &clustering in &[false, true] {
+        for &delayed_io in &[false, true] {
+            for &threshold in &[1u64 << 20, 200u64 << 20] {
+                let mut cfg = base.clone();
+                cfg.wukong.use_clustering = clustering;
+                cfg.wukong.use_delayed_io = delayed_io;
+                cfg.wukong.clustering_threshold = threshold;
+                out.push((
+                    format!(
+                        "clustering={clustering} delayed_io={delayed_io} \
+                         t={}MB",
+                        threshold >> 20
+                    ),
+                    cfg,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Run one engine, converting a panic (engine-internal assertion) into a
+/// reportable violation instead of aborting the sweep.
+fn run_guarded(
+    engine: &dyn Engine,
+    dag: &Dag,
+    cfg: &Config,
+    seed: u64,
+) -> Result<EngineReport, String> {
+    catch_unwind(AssertUnwindSafe(|| engine.run(dag, cfg, seed))).map_err(|err| {
+        format!(
+            "[{}] engine panicked: {}",
+            engine.name(),
+            crate::util::prop::panic_message(err.as_ref())
+        )
+    })
+}
+
+/// Resolve the engine selection against the sim registry.
+fn select_engines(names: &[String]) -> Result<Vec<Box<dyn Engine>>, String> {
+    if names.is_empty() {
+        return Ok(sim_registry());
+    }
+    names
+        .iter()
+        .map(|n| {
+            engine_by_name(n).ok_or_else(|| {
+                format!(
+                    "unknown engine {n:?} (known: {})",
+                    sim_engine_names().join(" ")
+                )
+            })
+        })
+        .collect()
+}
+
+/// Execute the differential conformance sweep.
+///
+/// Errors only on invalid options (unknown engine name); invariant
+/// violations are *returned in the summary*, not errors, so callers can
+/// report all of them.
+pub fn run_verify(opts: &VerifyOptions) -> Result<VerifySummary, String> {
+    let engines = select_engines(&opts.engines)?;
+    let mut summary = VerifySummary {
+        cases: 0,
+        engines: engines.iter().map(|e| e.name().to_string()).collect(),
+        engine_runs: 0,
+        total_tasks: 0,
+        violations: Vec::new(),
+    };
+
+    for case in 0..opts.runs {
+        // Same derivation as util::prop::check, so failing cases can be
+        // replayed with the printed seed.
+        let case_seed = opts
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(case_seed);
+        let dag = corpus::random_dag(&mut rng);
+        let base = corpus::random_config(&mut rng);
+        let run_seed = rng.next_u64();
+        summary.cases += 1;
+        summary.total_tasks += dag.len() as u64;
+
+        let mut case_violations = Vec::new();
+        for engine in &engines {
+            // Wukong sweeps the full knob matrix; other engines ignore
+            // the Wukong knobs, so one base config suffices.
+            let configs = if engine.caps().decentralized {
+                knob_matrix(&base)
+            } else {
+                vec![("base".to_string(), base.clone())]
+            };
+            for (label, cfg) in &configs {
+                summary.engine_runs += 1;
+                let rep = match run_guarded(engine.as_ref(), &dag, cfg, run_seed)
+                {
+                    Ok(r) => r,
+                    Err(v) => {
+                        case_violations.push(format!("{v} ({label})"));
+                        continue;
+                    }
+                };
+                summary.engine_runs += 1; // determinism re-run
+                let rerun =
+                    match run_guarded(engine.as_ref(), &dag, cfg, run_seed) {
+                        Ok(r) => r,
+                        Err(v) => {
+                            case_violations.push(format!("{v} ({label}, rerun)"));
+                            continue;
+                        }
+                    };
+
+                for check in [
+                    diff::check_completion(&dag, &rep),
+                    diff::check_exactly_once(&dag, &rep),
+                    diff::check_determinism(&rep, &rerun),
+                ] {
+                    if let Err(v) = check {
+                        case_violations.push(format!("{v} ({label})"));
+                    }
+                }
+                if engine.caps().meters_kvs {
+                    // Locality ordering: metered engines never move more
+                    // bytes than the stateless closed form; stateful ones
+                    // (Wukong) are the paper's headline ≤ claim, and the
+                    // stateless baselines must *equal* the closed form.
+                    let check = if engine.caps().stateful_executors {
+                        diff::check_locality(&dag, &rep)
+                    } else {
+                        diff::check_stateless_model(&dag, &rep)
+                    };
+                    if let Err(v) = check {
+                        case_violations.push(format!("{v} ({label})"));
+                    }
+                }
+            }
+        }
+
+        if opts.verbose {
+            println!(
+                "case {case:>3}  seed {case_seed:#018x}  dag {:<10} {:>3} tasks \
+                 {:>3} edges  {}",
+                dag.name,
+                dag.len(),
+                dag.n_edges(),
+                if case_violations.is_empty() {
+                    "ok".to_string()
+                } else {
+                    format!("{} VIOLATIONS", case_violations.len())
+                }
+            );
+        }
+        for v in case_violations {
+            summary
+                .violations
+                .push(format!("case {case} (replay seed {case_seed:#x}): {v}"));
+        }
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_is_clean() {
+        let s = run_verify(&VerifyOptions {
+            runs: 4,
+            seed: 11,
+            ..VerifyOptions::default()
+        })
+        .unwrap();
+        assert_eq!(s.cases, 4);
+        assert!(s.engines.len() >= 3);
+        assert!(s.violations.is_empty(), "{:#?}", s.violations);
+        // wukong knob matrix (8×2) + 4 baselines ×2, per case
+        assert_eq!(s.engine_runs, 4 * (16 + 8));
+    }
+
+    #[test]
+    fn unknown_engine_is_an_option_error() {
+        let err = run_verify(&VerifyOptions {
+            engines: vec!["warp-drive".into()],
+            runs: 1,
+            ..VerifyOptions::default()
+        })
+        .unwrap_err();
+        assert!(err.contains("unknown engine"), "{err}");
+        assert!(err.contains("wukong"), "{err}");
+    }
+
+    #[test]
+    fn engine_filter_is_respected() {
+        let s = run_verify(&VerifyOptions {
+            engines: vec!["wukong".into(), "numpywren".into()],
+            runs: 2,
+            seed: 3,
+            ..VerifyOptions::default()
+        })
+        .unwrap();
+        assert_eq!(s.engines, vec!["wukong", "numpywren"]);
+        assert!(s.violations.is_empty(), "{:#?}", s.violations);
+    }
+
+    #[test]
+    fn knob_matrix_is_exhaustive() {
+        let m = knob_matrix(&Config::default());
+        assert_eq!(m.len(), 8);
+        let on = m.iter().filter(|(_, c)| c.wukong.use_clustering).count();
+        assert_eq!(on, 4);
+    }
+}

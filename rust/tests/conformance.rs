@@ -1,0 +1,153 @@
+//! The differential conformance matrix under plain `cargo test -q`:
+//! every sim-path engine, the full policy-knob matrix, and the corpus of
+//! regular + irregular DAG shapes — no artifacts required.
+//!
+//! This is the regression gate the ROADMAP's "refactor freely" license
+//! leans on: a scheduling/perf refactor that breaks exactly-once,
+//! completion, per-seed determinism or the paper's locality ordering
+//! fails here with a replayable case seed.
+
+use wukong::config::Config;
+use wukong::dag::{Dag, DagBuilder, OpKind};
+use wukong::engine::{sim_registry, Engine};
+use wukong::util::Rng;
+use wukong::verify::{corpus, diff, run_verify, VerifyOptions};
+
+/// The acceptance matrix: 25 generated DAGs through every registered
+/// engine (≥ 3), mirroring `wukong verify --runs 25 --seed 7`.
+#[test]
+fn differential_matrix_runs_clean() {
+    let summary = run_verify(&VerifyOptions {
+        runs: 25,
+        seed: 7,
+        ..VerifyOptions::default()
+    })
+    .expect("default options are valid");
+    assert_eq!(summary.cases, 25);
+    assert!(
+        summary.engines.len() >= 3,
+        "need ≥ 3 engines, got {:?}",
+        summary.engines
+    );
+    assert!(
+        summary.violations.is_empty(),
+        "conformance violations:\n{}",
+        summary.violations.join("\n")
+    );
+    // wukong's 8-combo knob matrix ×2 runs + 4 baselines ×2, per case
+    assert_eq!(summary.engine_runs, 25 * 24);
+}
+
+/// Satellite: same seed ⇒ byte-identical `RunMetrics` across two runs of
+/// each sim-path engine (catches accidental HashMap-iteration
+/// nondeterminism introduced during engine refactors).
+#[test]
+fn determinism_same_seed_byte_identical_metrics() {
+    let mut rng = Rng::new(0xD_E7E_12);
+    for case in 0..6u64 {
+        let dag = corpus::random_dag(&mut rng);
+        let cfg = corpus::random_config(&mut rng);
+        let seed = rng.next_u64();
+        for engine in sim_registry() {
+            let a = engine.run(&dag, &cfg, seed);
+            let b = engine.run(&dag, &cfg, seed);
+            assert_eq!(
+                a.metrics,
+                b.metrics,
+                "{} metrics diverged on case {case} (dag {})",
+                engine.name(),
+                dag.name
+            );
+            assert_eq!(a.sim_events, b.sim_events, "{}", engine.name());
+        }
+    }
+}
+
+/// The conformance path constructs engines only through the shared trait
+/// registry — and the registry names stay stable for the CLI.
+#[test]
+fn registry_covers_the_paper_comparison_set() {
+    let names: Vec<&str> = sim_registry().iter().map(|e| e.name()).collect();
+    for expected in ["wukong", "numpywren", "pywren", "dask125", "dask1000"] {
+        assert!(names.contains(&expected), "missing engine {expected}");
+    }
+}
+
+/// Engine filtering and unknown-engine handling of the verify options.
+#[test]
+fn verify_engine_selection() {
+    let s = run_verify(&VerifyOptions {
+        engines: vec!["wukong".into(), "numpywren".into(), "dask125".into()],
+        runs: 3,
+        seed: 21,
+        ..VerifyOptions::default()
+    })
+    .unwrap();
+    assert_eq!(s.engines, vec!["wukong", "numpywren", "dask125"]);
+    assert!(s.violations.is_empty(), "{:#?}", s.violations);
+
+    let err = run_verify(&VerifyOptions {
+        engines: vec!["spark".into()],
+        runs: 1,
+        ..VerifyOptions::default()
+    })
+    .unwrap_err();
+    assert!(err.contains("unknown engine"), "{err}");
+}
+
+fn irregular_sampler() -> Vec<Dag> {
+    let mut rng = Rng::new(42);
+    vec![
+        corpus::skewed_fanout(&mut rng),
+        corpus::diamond_stack(&mut rng),
+        corpus::long_chain(&mut rng),
+        corpus::multi_sink(&mut rng),
+        corpus::wide_fanin(&mut rng),
+    ]
+}
+
+/// The locality ordering invariant, asserted directly on every irregular
+/// shape: Wukong never moves more KVS bytes than the stateless closed
+/// form, and numpywren's meters match the closed form exactly.
+#[test]
+fn locality_ordering_holds_on_every_irregular_shape() {
+    let cfg = Config::default();
+    for dag in irregular_sampler() {
+        let engines = sim_registry();
+        let wukong = engines.iter().find(|e| e.name() == "wukong").unwrap();
+        let numpywren =
+            engines.iter().find(|e| e.name() == "numpywren").unwrap();
+        let wk = wukong.run(&dag, &cfg, 5);
+        let np = numpywren.run(&dag, &cfg, 5);
+        diff::check_locality(&dag, &wk)
+            .unwrap_or_else(|e| panic!("{}: {e}", dag.name));
+        diff::check_stateless_model(&dag, &np)
+            .unwrap_or_else(|e| panic!("{}: {e}", dag.name));
+        assert!(
+            wk.metrics.kvs.bytes_written <= np.metrics.kvs.bytes_written,
+            "{}: wukong wrote {} > numpywren {}",
+            dag.name,
+            wk.metrics.kvs.bytes_written,
+            np.metrics.kvs.bytes_written
+        );
+    }
+}
+
+/// Per-task execution counts flow through the trait for every engine,
+/// even on a hand-built fan-in DAG with a zero-byte edge.
+#[test]
+fn per_task_counts_cover_zero_byte_edges() {
+    let mut b = DagBuilder::new("zero-edge");
+    let a = b.task("a", OpKind::Generic, 1e6, 0); // zero-byte output
+    let x = b.task("x", OpKind::Generic, 1e6, 300 * 1024); // > inline max
+    let z = b.task("z", OpKind::Generic, 1e6, 64);
+    b.edge(a, z).edge(x, z);
+    let dag = b.build().unwrap();
+    for engine in sim_registry() {
+        let rep = engine.run(&dag, &Config::default(), 9);
+        diff::check_completion(&dag, &rep)
+            .unwrap_or_else(|e| panic!("{e}"));
+        diff::check_exactly_once(&dag, &rep)
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+}
