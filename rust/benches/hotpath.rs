@@ -6,6 +6,7 @@
 //! Targets (DESIGN.md §Perf):
 //!  * DES engine:     ≥ 1M events/s
 //!  * Wukong sim:     10k-Lambda serverless scaling sweep ≪ 1 s
+//!  * Million-task:   `wukong bench` regime — see BENCH_PR2.json
 //!  * real executor:  coordinator overhead per task ≪ the 50 ms invoke
 //!  * PJRT kernels:   per-op latency (informational; interpret=True CPU)
 
@@ -13,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use wukong::config::Config;
 use wukong::coordinator::run_wukong;
-use wukong::sim::{secs, Sim};
+use wukong::sim::{secs, Handler, Sim};
 use wukong::util::Rng;
 use wukong::workloads::{micro, svd, tsqr};
 
@@ -29,15 +30,23 @@ fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> Duration {
     per
 }
 
+/// Empty world for raw-calendar benchmarks (typed unit events).
+struct NopWorld;
+
+impl Handler for NopWorld {
+    type Ev = ();
+
+    fn handle(&mut self, _sim: &mut Sim<()>, _ev: ()) {}
+}
+
 fn main() {
     println!("== L3: DES engine ==");
     let per = bench("des: 1M empty events", 5, || {
-        struct W;
-        let mut sim: Sim<W> = Sim::new();
+        let mut sim: Sim<()> = Sim::new();
         for i in 0..1_000_000u64 {
-            sim.at(i, |_, _| {});
+            sim.at(i, ());
         }
-        sim.run(&mut W);
+        sim.run(&mut NopWorld);
     });
     let evps = 1_000_000.0 / per.as_secs_f64();
     println!("  -> {:.1}M events/s (target >= 1M/s)", evps / 1e6);
@@ -49,6 +58,17 @@ fn main() {
         let dag = micro::serverless(10_000, 0);
         let r = run_wukong(&dag, &c, 1);
         assert_eq!(r.metrics.tasks_executed, 10_000);
+    });
+    bench("wukong sim: serverless 1M lambdas (bench gate)", 1, || {
+        let mut c = cfg.clone();
+        c.lambda.concurrency_limit = 2_000_000;
+        let dag = micro::serverless(1_000_000, 0);
+        let r = run_wukong(&dag, &c, 1);
+        assert_eq!(r.metrics.tasks_executed, 1_000_000);
+        println!(
+            "  -> {} events, peak pending {}",
+            r.sim_events, r.peak_pending
+        );
     });
     bench("wukong sim: strong 10k tasks / 1k chains", 3, || {
         let dag = micro::strong(10_000, 1_000, secs(0.1));

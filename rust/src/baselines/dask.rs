@@ -7,13 +7,19 @@
 //! fetch missing inputs peer-to-peer over their NICs. Assignment prefers
 //! the worker holding the most input bytes, tie-broken by earliest-free
 //! core — Dask's own locality heuristic.
+//!
+//! Hot-path layout mirrors the other sim engines: the world borrows the
+//! DAG/configs, adjacency comes from the CSR slices, and the calendar
+//! carries typed events (no per-event allocation).
 
 use std::collections::VecDeque;
 
 use crate::config::{Config, DaskConfig};
 use crate::dag::{Dag, TaskId};
 use crate::metrics::RunMetrics;
-use crate::sim::{secs, to_secs, FifoResource, MultiResource, Sim, Time};
+use crate::sim::{secs, to_secs, FifoResource, Handler, MultiResource, Sim, Time};
+
+use super::BaselineReport;
 
 struct Worker {
     cores: MultiResource,
@@ -22,10 +28,20 @@ struct Worker {
     used: bool,
 }
 
-struct World {
-    cfg: Config,
-    dcfg: DaskConfig,
-    dag: Dag,
+/// Typed calendar events.
+enum Ev {
+    /// Scheduler assigns the next ready task.
+    Schedule,
+    /// Worker `wid` starts fetching + computing `task`.
+    Exec { wid: usize, task: TaskId },
+    /// Worker `wid` finished `task`.
+    Done { wid: usize, task: TaskId },
+}
+
+struct World<'a> {
+    cfg: &'a Config,
+    dcfg: &'a DaskConfig,
+    dag: &'a Dag,
     sched: FifoResource,
     ready: VecDeque<TaskId>,
     remaining: Vec<usize>,
@@ -42,7 +58,19 @@ struct World {
     busy: crate::metrics::Timeline,
 }
 
-impl World {
+impl Handler for World<'_> {
+    type Ev = Ev;
+
+    fn handle(&mut self, sim: &mut Sim<Ev>, ev: Ev) {
+        match ev {
+            Ev::Schedule => schedule_next(self, sim),
+            Ev::Exec { wid, task } => exec_on_worker(self, sim, wid, task),
+            Ev::Done { wid, task } => complete(self, sim, wid, task),
+        }
+    }
+}
+
+impl World<'_> {
     fn compute_time(&self, t: TaskId) -> Time {
         let node = self.dag.task(t);
         match node.dur_override {
@@ -56,13 +84,13 @@ impl World {
 
     /// Bytes of task `t`'s inputs already resident on worker `wid`.
     fn local_bytes(&self, t: TaskId, wid: usize) -> u64 {
-        let node = self.dag.task(t);
         let mut bytes = 0;
-        for &p in &node.parents {
+        for &p in self.dag.parents(t) {
             if self.workers[wid].holds[p as usize] {
                 bytes += self.dag.task(p).out_bytes;
             }
         }
+        let node = self.dag.task(t);
         if node.input_bytes > 0 && self.input_loc[t as usize] == wid {
             bytes += node.input_bytes;
         }
@@ -71,7 +99,7 @@ impl World {
 }
 
 /// Scheduler picks up the next ready task (one message each).
-fn schedule_next(w: &mut World, sim: &mut Sim<World>) {
+fn schedule_next(w: &mut World<'_>, sim: &mut Sim<Ev>) {
     let Some(t) = w.ready.pop_front() else {
         return;
     };
@@ -87,22 +115,22 @@ fn schedule_next(w: &mut World, sim: &mut Sim<World>) {
         .expect("at least one worker");
     w.workers[wid].used = true;
     let dispatch = end + secs(w.dcfg.dispatch_latency_s);
-    sim.at(dispatch, move |w, sim| exec_on_worker(w, sim, wid, t));
+    sim.at(dispatch, Ev::Exec { wid, task: t });
     // Keep draining the ready queue.
     if !w.ready.is_empty() {
-        sim.at(end, |w, sim| schedule_next(w, sim));
+        sim.at(end, Ev::Schedule);
     }
 }
 
-fn exec_on_worker(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
+fn exec_on_worker(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     // Fetch missing inputs peer-to-peer (sequential transfers).
+    let dag = w.dag;
     let mut cursor = sim.now();
-    let parents = w.dag.task(t).parents.clone();
-    for p in parents {
+    for &p in dag.parents(t) {
         if w.workers[wid].holds[p as usize] {
             continue;
         }
-        let bytes = w.dag.task(p).out_bytes;
+        let bytes = dag.task(p).out_bytes;
         let src = w.loc[p as usize].expect("parent executed");
         let svc = secs(bytes as f64 / w.dcfg.worker_bw);
         let (_, src_end) = w.workers[src].nic.acquire(cursor, svc);
@@ -113,7 +141,7 @@ fn exec_on_worker(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
         w.workers[wid].holds[p as usize] = true;
     }
     // External partition: local by placement for leaves; remote otherwise.
-    let ext = w.dag.task(t).input_bytes;
+    let ext = dag.task(t).input_bytes;
     if ext > 0 && w.input_loc[t as usize] != wid {
         let src = w.input_loc[t as usize];
         let svc = secs(ext as f64 / w.dcfg.worker_bw);
@@ -129,10 +157,10 @@ fn exec_on_worker(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
     let (cstart, cend) = w.workers[wid].cores.acquire(cursor, d);
     w.busy.add(cstart, 1);
     w.busy.add(cend, -1);
-    sim.at(cend, move |w, sim| complete(w, sim, wid, t));
+    sim.at(cend, Ev::Done { wid, task: t });
 }
 
-fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
+fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     w.executed[t as usize] += 1;
     assert!(w.executed[t as usize] == 1, "task {t} executed twice");
     w.metrics.tasks_executed += 1;
@@ -142,9 +170,9 @@ fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
     // Completion message through the scheduler.
     let (_, end) = w.sched.acquire(sim.now(), secs(w.dcfg.effective_msg_s()));
     w.metrics.breakdown.publish_s += to_secs(end - sim.now());
-    let children = w.dag.task(t).children.clone();
+    let dag = w.dag;
     let mut newly = false;
-    for c in children {
+    for &c in dag.children(t) {
         w.remaining[c as usize] -= 1;
         if w.remaining[c as usize] == 0 {
             w.ready.push_back(c);
@@ -154,19 +182,25 @@ fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
     if w.done == w.dag.len() as u64 {
         w.finish = Some(end);
     } else if newly {
-        sim.at(end, |w, sim| schedule_next(w, sim));
+        sim.at(end, Ev::Schedule);
     }
 }
 
-/// Run a Dask job under the given cluster configuration.
-pub fn run_dask(dag: &Dag, cfg: &Config, dcfg: &DaskConfig, _seed: u64) -> RunMetrics {
+/// Run a Dask job under the given cluster configuration, with sim stats.
+pub fn run_dask_full(
+    dag: &Dag,
+    cfg: &Config,
+    dcfg: &DaskConfig,
+    _seed: u64,
+) -> BaselineReport {
     let n = dag.len();
     let mut w = World {
-        dcfg: dcfg.clone(),
-        dag: dag.clone(),
+        cfg,
+        dcfg,
+        dag,
         sched: FifoResource::new(),
-        ready: dag.leaves().into(),
-        remaining: dag.tasks().iter().map(|t| t.parents.len()).collect(),
+        ready: dag.leaves().iter().copied().collect(),
+        remaining: (0..n as TaskId).map(|t| dag.indegree(t)).collect(),
         executed: vec![0; n],
         loc: vec![None; n],
         input_loc: (0..n).map(|i| i % dcfg.n_workers).collect(),
@@ -182,13 +216,12 @@ pub fn run_dask(dag: &Dag, cfg: &Config, dcfg: &DaskConfig, _seed: u64) -> RunMe
         done: 0,
         finish: None,
         busy: crate::metrics::Timeline::default(),
-        cfg: cfg.clone(),
     };
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: Sim<Ev> = Sim::new();
     // Kick the scheduler once per initially-ready task.
     let initially_ready = w.ready.len();
     for _ in 0..initially_ready {
-        sim.at(0, |w, sim| schedule_next(w, sim));
+        sim.at(0, Ev::Schedule);
     }
     sim.run(&mut w);
 
@@ -211,7 +244,16 @@ pub fn run_dask(dag: &Dag, cfg: &Config, dcfg: &DaskConfig, _seed: u64) -> RunMe
     w.metrics
         .billing
         .charge_ec2(rate * vms_used as f64, makespan / 3600.0);
-    w.metrics
+    BaselineReport {
+        metrics: w.metrics,
+        sim_events: sim.processed(),
+        peak_pending: sim.peak_pending(),
+    }
+}
+
+/// Run a Dask job under the given cluster configuration.
+pub fn run_dask(dag: &Dag, cfg: &Config, dcfg: &DaskConfig, seed: u64) -> RunMetrics {
+    run_dask_full(dag, cfg, dcfg, seed).metrics
 }
 
 #[cfg(test)]
@@ -268,5 +310,14 @@ mod tests {
         let d125 = run_dask(&dag, &Config::default(), &DaskConfig::workers_125(), 1);
         assert!(d125.cpu_seconds > 0.0);
         assert_eq!(d125.tasks_executed, 10);
+    }
+
+    #[test]
+    fn full_report_carries_sim_stats() {
+        let dag = micro::serverless(16, 0);
+        let r = run_dask_full(&dag, &Config::default(), &DaskConfig::workers_125(), 1);
+        assert_eq!(r.metrics.tasks_executed, 16);
+        assert!(r.sim_events > 0);
+        assert!(r.peak_pending > 0);
     }
 }

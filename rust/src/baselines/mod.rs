@@ -9,11 +9,21 @@
 //! * [`dask`] — serverful Dask distributed: central scheduler over a VM
 //!   worker pool with data-local assignment (the paper's Dask-125 /
 //!   Dask-1000 configurations).
+//!
+//! Every baseline is simulator-backed; the `*_full` entry points expose
+//! the DES meters (`sim_events`, `peak_pending`) that `wukong bench` and
+//! the conformance determinism check consume, while the plain `run_*`
+//! wrappers return only [`crate::metrics::RunMetrics`] for the figure
+//! sweeps.
 
 pub mod dask;
 pub mod numpywren;
 pub mod pywren;
 
-pub use dask::run_dask;
-pub use numpywren::run_numpywren;
-pub use pywren::{pywren_launch_time, run_pywren};
+/// A baseline run's normalized meters plus DES statistics (the shared
+/// sim-report shape).
+pub type BaselineReport = crate::metrics::SimReport;
+
+pub use dask::{run_dask, run_dask_full};
+pub use numpywren::{run_numpywren, run_numpywren_full, run_numpywren_n};
+pub use pywren::{pywren_launch_time, run_pywren, run_pywren_full};

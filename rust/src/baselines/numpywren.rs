@@ -7,6 +7,10 @@
 //! → notify the scheduler, which updates dependency counts and enqueues
 //! newly-ready tasks. No state survives between tasks — the design whose
 //! read/write amplification Figs. 3–4 measure.
+//!
+//! Hot-path layout mirrors the Wukong engine: the world borrows the DAG
+//! and config, adjacency comes from the CSR slices, and the calendar
+//! carries typed events (no per-event allocation).
 
 use std::collections::VecDeque;
 
@@ -14,9 +18,11 @@ use crate::config::Config;
 use crate::dag::{Dag, TaskId, TaskNode};
 use crate::metrics::RunMetrics;
 use crate::platform::LambdaService;
-use crate::sim::{secs, to_secs, FifoResource, MultiResource, Sim, Time};
+use crate::sim::{secs, to_secs, FifoResource, Handler, MultiResource, Sim, Time};
 use crate::storage::KvsModel;
 use crate::util::Rng;
+
+use super::BaselineReport;
 
 struct Worker {
     started: Time,
@@ -24,9 +30,21 @@ struct Worker {
     ended: bool,
 }
 
-struct World {
-    cfg: Config,
-    dag: Dag,
+/// Typed calendar events.
+enum Ev {
+    /// Worker `wid` comes online: stamp its start, then poll.
+    Start(usize),
+    /// Worker `wid` polls the central queue.
+    Poll(usize),
+    /// Worker `wid` executes `task` (inputs → compute → output).
+    Exec { wid: usize, task: TaskId },
+    /// Worker `wid` finished `task`; scheduler-side dependency update.
+    Done { wid: usize, task: TaskId },
+}
+
+struct World<'a> {
+    cfg: &'a Config,
+    dag: &'a Dag,
     kvs: KvsModel,
     queue_srv: FifoResource,
     queue: VecDeque<TaskId>,
@@ -40,7 +58,24 @@ struct World {
     finish: Option<Time>,
 }
 
-impl World {
+impl Handler for World<'_> {
+    type Ev = Ev;
+
+    fn handle(&mut self, sim: &mut Sim<Ev>, ev: Ev) {
+        match ev {
+            Ev::Start(wid) => {
+                self.workers[wid].started = sim.now();
+                self.metrics.timeline.add(sim.now(), 1);
+                poll(self, sim, wid);
+            }
+            Ev::Poll(wid) => poll(self, sim, wid),
+            Ev::Exec { wid, task } => execute(self, sim, wid, task),
+            Ev::Done { wid, task } => complete(self, sim, wid, task),
+        }
+    }
+}
+
+impl World<'_> {
     fn queue_op(&mut self, now: Time) -> Time {
         let per = secs(1.0 / self.cfg.numpywren.queue_ops_per_sec.max(1.0));
         let (_, end) = self.queue_srv.acquire(now, per);
@@ -60,7 +95,7 @@ impl World {
 }
 
 /// Worker polls the queue for work.
-fn poll(w: &mut World, sim: &mut Sim<World>, wid: usize) {
+fn poll(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize) {
     if w.done == w.dag.len() as u64 {
         retire(w, sim, wid);
         return;
@@ -74,22 +109,22 @@ fn poll(w: &mut World, sim: &mut Sim<World>, wid: usize) {
     let t_op = w.queue_op(sim.now());
     match w.queue.pop_front() {
         Some(task) => {
-            sim.at(t_op, move |w, sim| execute(w, sim, wid, task));
+            sim.at(t_op, Ev::Exec { wid, task });
         }
         None => {
             let wait = secs(w.cfg.numpywren.poll_interval_s);
-            sim.at(t_op + wait, move |w, sim| poll(w, sim, wid));
+            sim.at(t_op + wait, Ev::Poll(wid));
         }
     }
 }
 
 /// Stateless task execution: read everything, compute, write everything.
-fn execute(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
+fn execute(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
+    let dag = w.dag;
     let mut cursor = sim.now();
-    let parents = w.dag.task(t).parents.clone();
     let net_bw = w.cfg.lambda.net_bw;
-    for p in parents {
-        let bytes = w.dag.task(p).out_bytes;
+    for &p in dag.parents(t) {
+        let bytes = dag.task(p).out_bytes;
         let shard_end = w.kvs.read(cursor, TaskNode::obj_key(p), bytes);
         let (_, nic_end) = w.workers[wid]
             .nic
@@ -100,7 +135,7 @@ fn execute(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
         w.metrics.breakdown.serde_s += to_secs(sd);
         cursor = end + sd;
     }
-    let ext = w.dag.task(t).input_bytes;
+    let ext = dag.task(t).input_bytes;
     if ext > 0 {
         let shard_end = w.kvs.read(cursor, TaskNode::input_key(t), ext);
         let (_, nic_end) = w.workers[wid]
@@ -114,7 +149,7 @@ fn execute(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
     w.metrics.breakdown.execute_s += to_secs(d);
     cursor += d;
     // Write the full output back (statelessness).
-    let out = w.dag.task(t).out_bytes;
+    let out = dag.task(t).out_bytes;
     let shard_end = w.kvs.write(cursor, TaskNode::obj_key(t), out);
     let (_, nic_end) = w.workers[wid]
         .nic
@@ -122,10 +157,10 @@ fn execute(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
     let end = shard_end.max(nic_end);
     w.metrics.breakdown.kvs_write_s += to_secs(end - cursor);
     cursor = end;
-    sim.at(cursor, move |w, sim| complete(w, sim, wid, t));
+    sim.at(cursor, Ev::Done { wid, task: t });
 }
 
-fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
+fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     w.executed[t as usize] += 1;
     assert!(w.executed[t as usize] == 1, "task {t} executed twice");
     w.metrics.tasks_executed += 1;
@@ -133,8 +168,8 @@ fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
     // Scheduler-side dependency update (one queue op per completion).
     let t_op = w.queue_op(sim.now());
     w.metrics.breakdown.publish_s += to_secs(t_op - sim.now());
-    let children = w.dag.task(t).children.clone();
-    for c in children {
+    let dag = w.dag;
+    for &c in dag.children(t) {
         w.remaining[c as usize] -= 1;
         if w.remaining[c as usize] == 0 {
             w.queue.push_back(c);
@@ -143,10 +178,10 @@ fn complete(w: &mut World, sim: &mut Sim<World>, wid: usize, t: TaskId) {
     if w.done == w.dag.len() as u64 {
         w.finish = Some(t_op);
     }
-    sim.at(t_op, move |w, sim| poll(w, sim, wid));
+    sim.at(t_op, Ev::Poll(wid));
 }
 
-fn retire(w: &mut World, sim: &mut Sim<World>, wid: usize) {
+fn retire(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize) {
     if std::mem::replace(&mut w.workers[wid].ended, true) {
         return;
     }
@@ -158,7 +193,7 @@ fn retire(w: &mut World, sim: &mut Sim<World>, wid: usize) {
     w.lambda.release();
 }
 
-fn respawn(w: &mut World, sim: &mut Sim<World>, wid: usize) {
+fn respawn(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize) {
     retire(w, sim, wid);
     let inv = w.lambda.invoke(sim.now());
     let nid = w.workers.len();
@@ -168,37 +203,39 @@ fn respawn(w: &mut World, sim: &mut Sim<World>, wid: usize) {
         ended: false,
     });
     w.metrics.executors_used += 1;
-    sim.at(inv.start_at, move |w, sim| {
-        w.workers[nid].started = sim.now();
-        w.metrics.timeline.add(sim.now(), 1);
-        poll(w, sim, nid);
-    });
+    sim.at(inv.start_at, Ev::Start(nid));
 }
 
-/// Run a numpywren job: `n_workers` stateless executors over the DAG.
-pub fn run_numpywren(dag: &Dag, cfg: &Config, seed: u64) -> RunMetrics {
+/// Run a numpywren job with an explicit worker count (the PyWren scaling
+/// knob) — no `Config` clone on the per-run path.
+pub fn run_numpywren_n(
+    dag: &Dag,
+    cfg: &Config,
+    n_workers: usize,
+    seed: u64,
+) -> BaselineReport {
     let mut rng = Rng::new(seed);
     let n = dag.len();
     let mut w = World {
-        dag: dag.clone(),
-        kvs: KvsModel::new(cfg.storage.clone()),
+        dag,
+        kvs: KvsModel::new(cfg.storage),
         queue_srv: FifoResource::new(),
-        queue: dag.leaves().into(),
-        remaining: dag.tasks().iter().map(|t| t.parents.len()).collect(),
+        queue: dag.leaves().iter().copied().collect(),
+        remaining: (0..n as TaskId).map(|t| dag.indegree(t)).collect(),
         executed: vec![0; n],
         done: 0,
         workers: Vec::new(),
-        lambda: LambdaService::new(cfg.lambda.clone(), rng.fork(1)),
+        lambda: LambdaService::new(cfg.lambda, rng.fork(1)),
         metrics: RunMetrics::default(),
         finish: None,
-        cfg: cfg.clone(),
+        cfg,
     };
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: Sim<Ev> = Sim::new();
 
     // Provision the initial worker fleet through the invoker threads.
     let mut invokers = MultiResource::new(cfg.numpywren.n_invoker_threads);
     let per = secs(cfg.lambda.invoke_latency_s);
-    for _ in 0..cfg.numpywren.n_workers {
+    for _ in 0..n_workers {
         let (_, end) = invokers.acquire(0, per);
         let inv = w.lambda.admit(end);
         let wid = w.workers.len();
@@ -208,11 +245,7 @@ pub fn run_numpywren(dag: &Dag, cfg: &Config, seed: u64) -> RunMetrics {
             ended: false,
         });
         w.metrics.executors_used += 1;
-        sim.at(inv.start_at, move |w, sim| {
-            w.workers[wid].started = sim.now();
-            w.metrics.timeline.add(sim.now(), 1);
-            poll(w, sim, wid);
-        });
+        sim.at(inv.start_at, Ev::Start(wid));
     }
     sim.run(&mut w);
 
@@ -231,7 +264,21 @@ pub fn run_numpywren(dag: &Dag, cfg: &Config, seed: u64) -> RunMetrics {
         w.metrics.billing.charge_elasticache(cfg.storage.n_shards, hours);
     }
     w.metrics.billing.charge_scheduler_vm(hours);
-    w.metrics
+    BaselineReport {
+        metrics: w.metrics,
+        sim_events: sim.processed(),
+        peak_pending: sim.peak_pending(),
+    }
+}
+
+/// Run a numpywren job with the configured worker count, with sim stats.
+pub fn run_numpywren_full(dag: &Dag, cfg: &Config, seed: u64) -> BaselineReport {
+    run_numpywren_n(dag, cfg, cfg.numpywren.n_workers, seed)
+}
+
+/// Run a numpywren job: `n_workers` stateless executors over the DAG.
+pub fn run_numpywren(dag: &Dag, cfg: &Config, seed: u64) -> RunMetrics {
+    run_numpywren_full(dag, cfg, seed).metrics
 }
 
 #[cfg(test)]
@@ -282,9 +329,11 @@ mod tests {
     fn deterministic() {
         let dag = micro::strong(100, 10, secs(0.01));
         let cfg = Config::default();
-        let a = run_numpywren(&dag, &cfg, 9);
-        let b = run_numpywren(&dag, &cfg, 9);
-        assert_eq!(a.makespan_s, b.makespan_s);
+        let a = run_numpywren_full(&dag, &cfg, 9);
+        let b = run_numpywren_full(&dag, &cfg, 9);
+        assert_eq!(a.metrics.makespan_s, b.metrics.makespan_s);
+        assert_eq!(a.sim_events, b.sim_events);
+        assert_eq!(a.peak_pending, b.peak_pending);
     }
 
     #[test]
@@ -294,5 +343,16 @@ mod tests {
         cfg.numpywren.n_workers = 50;
         let m = run_numpywren(&dag, &cfg, 4);
         assert_eq!(m.tasks_executed, 5);
+    }
+
+    #[test]
+    fn worker_count_override_equals_configured_count() {
+        let dag = micro::serverless(12, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 7;
+        let a = run_numpywren_full(&dag, &cfg, 5);
+        let b = run_numpywren_n(&dag, &Config::default(), 7, 5);
+        assert_eq!(a.metrics.makespan_s, b.metrics.makespan_s);
+        assert_eq!(a.sim_events, b.sim_events);
     }
 }

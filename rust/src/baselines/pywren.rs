@@ -4,21 +4,32 @@
 //! (64 in the paper) issuing ~50 ms Lambda invocations serially per
 //! thread, and its stateless executors pull tasks through the central
 //! queue. `run_pywren` is the numpywren engine with worker count = the
-//! scaling experiment's Lambda count; `pywren_launch_time` isolates the
-//! fleet-scale-out time of Fig. 2.
+//! scaling experiment's Lambda count (passed as an explicit override so
+//! no `Config` is cloned on the run path); `pywren_launch_time` isolates
+//! the fleet-scale-out time of Fig. 2.
 
 use crate::config::Config;
 use crate::dag::Dag;
 use crate::metrics::RunMetrics;
 use crate::sim::{secs, MultiResource};
 
-use super::numpywren::run_numpywren;
+use super::numpywren::run_numpywren_n;
+use super::BaselineReport;
+
+/// Run a (Num)PyWren scaling job with `n_workers` Lambda executors,
+/// with sim stats.
+pub fn run_pywren_full(
+    dag: &Dag,
+    cfg: &Config,
+    n_workers: usize,
+    seed: u64,
+) -> BaselineReport {
+    run_numpywren_n(dag, cfg, n_workers, seed)
+}
 
 /// Run a (Num)PyWren scaling job with `n_workers` Lambda executors.
 pub fn run_pywren(dag: &Dag, cfg: &Config, n_workers: usize, seed: u64) -> RunMetrics {
-    let mut cfg = cfg.clone();
-    cfg.numpywren.n_workers = n_workers;
-    run_numpywren(dag, &cfg, seed)
+    run_pywren_full(dag, cfg, n_workers, seed).metrics
 }
 
 /// Fig. 2: time (s) until all `n` Lambda executors have been invoked by

@@ -1,0 +1,318 @@
+//! `wukong bench` — the hot-path scale benchmark and perf-regression
+//! gate.
+//!
+//! Sweeps the sim-path engines over three DAG families at million-task
+//! scale — flat fan-out (serverless scaling), a single chain (pure
+//! "becomes" locality), and the paper's TSQR workload shape — and
+//! reports, per `(engine, workload)`: wall milliseconds, DES events
+//! processed, events/sec, peak pending-event calendar depth, and the
+//! simulated makespan. Results are written as `BENCH_PR2.json`; each PR
+//! appends a `BENCH_*.json` point so the perf trajectory is recorded and
+//! regressions are caught by comparing events/sec per engine (see
+//! ROADMAP.md §Performance & benchmarking).
+//!
+//! The decentralized Wukong engine runs the full 1,000,000-task DAGs;
+//! the centralized baselines get smaller budgets because their *models*
+//! are inherently heavier per decision (Dask's locality assignment scans
+//! every worker per task; numpywren/pywren hold per-worker state and
+//! poll a shared queue) — the point of the gate is events/sec per
+//! engine, not identical task counts.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::dag::Dag;
+#[allow(unused_imports)]
+use crate::engine::Engine;
+use crate::engine::select_engines;
+use crate::util::json::Json;
+use crate::workloads::{micro, tsqr};
+
+/// The trajectory point this build records. Bump once per PR that
+/// re-baselines perf — the JSON `pr` field and the default output
+/// filename both derive from it.
+pub const TRAJECTORY_POINT: &str = "PR2";
+
+/// Default output path: `BENCH_<point>.json` at the invocation cwd.
+pub fn default_out_path() -> String {
+    format!("BENCH_{TRAJECTORY_POINT}.json")
+}
+
+/// Options for one bench sweep (CLI flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Shrink every task budget ~100× (CI smoke mode).
+    pub quick: bool,
+    /// Engine names to exercise; empty = every sim-path engine.
+    pub engines: Vec<String>,
+    /// Run seed (the sweep itself is deterministic in virtual time; wall
+    /// time is not).
+    pub seed: u64,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            quick: false,
+            engines: Vec::new(),
+            seed: 42,
+        }
+    }
+}
+
+/// One `(engine, workload)` measurement.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub engine: &'static str,
+    pub workload: &'static str,
+    pub tasks: usize,
+    pub wall_ms: f64,
+    pub sim_events: u64,
+    pub events_per_sec: f64,
+    pub peak_pending: usize,
+    pub makespan_s: f64,
+}
+
+/// Per-engine task budget for the flat fan-out family.
+fn fanout_tasks(engine: &str, quick: bool) -> usize {
+    let full = match engine {
+        "wukong" => 1_000_000,
+        "numpywren" | "pywren" => 100_000,
+        _ => 50_000, // dask*: O(workers) scan per assignment
+    };
+    if quick {
+        (full / 100).max(64)
+    } else {
+        full
+    }
+}
+
+/// Per-engine task budget for the single-chain family.
+fn chain_tasks(engine: &str, quick: bool) -> usize {
+    let full = match engine {
+        "wukong" => 1_000_000,
+        "numpywren" | "pywren" => 50_000,
+        _ => 20_000,
+    };
+    if quick {
+        (full / 100).max(64)
+    } else {
+        full
+    }
+}
+
+/// Per-engine TSQR leaf count (tasks ≈ 4 × leaves in R-only mode).
+fn tsqr_leaves(engine: &str, quick: bool) -> usize {
+    let full = match engine {
+        "wukong" => 1 << 18, // 262144 leaves ⇒ ~1.05M tasks
+        _ => 1 << 12,        // the paper's 16.7M-row shape
+    };
+    if quick {
+        (full / 256).max(4)
+    } else {
+        full
+    }
+}
+
+fn tsqr_dag(leaves: usize) -> Dag {
+    tsqr::dag(tsqr::TsqrParams {
+        rows: leaves * 4096,
+        cols: 128,
+        block_rows: 4096,
+        with_q: false,
+    })
+}
+
+/// The bench workload families, in run order.
+const WORKLOADS: &[&str] = &["fanout", "chain", "tsqr"];
+
+/// Build one bench DAG lazily (one DAG alive at a time — a million-task
+/// DAG is ~10⁸ bytes of CSR + cost arrays, so eager construction of all
+/// three would triple peak memory and pollute the measurements).
+fn bench_dag(engine: &str, workload: &str, quick: bool) -> Dag {
+    match workload {
+        "fanout" => micro::serverless(fanout_tasks(engine, quick), 0),
+        "chain" => micro::chains(micro::MicroParams {
+            n_chains: 1,
+            chain_len: chain_tasks(engine, quick),
+            task_dur: 0,
+        }),
+        "tsqr" => tsqr_dag(tsqr_leaves(engine, quick)),
+        other => unreachable!("unknown bench workload {other}"),
+    }
+}
+
+/// The bench substrate config: paper defaults with the Lambda
+/// concurrency cap lifted so the fan-out family measures the calendar,
+/// not admission-throttle modeling.
+fn bench_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.lambda.concurrency_limit = 2_000_000;
+    cfg
+}
+
+/// Execute the sweep. Errors on unknown engine names or on a run that
+/// fails its completion sanity check (a broken engine must not produce a
+/// perf baseline).
+pub fn run_bench(opts: &BenchOptions) -> Result<Vec<BenchRecord>, String> {
+    let engines = select_engines(&opts.engines)?;
+    let cfg = bench_config();
+    let mut records = Vec::new();
+    for engine in &engines {
+        for &workload in WORKLOADS {
+            let dag = bench_dag(engine.name(), workload, opts.quick);
+            let t0 = Instant::now();
+            let rep = engine.run(&dag, &cfg, opts.seed);
+            let wall = t0.elapsed();
+            if rep.metrics.tasks_executed as usize != dag.len() {
+                return Err(format!(
+                    "bench [{} {workload}]: {}/{} tasks executed",
+                    engine.name(),
+                    rep.metrics.tasks_executed,
+                    dag.len()
+                ));
+            }
+            let sim_events = rep.sim_events.unwrap_or(0);
+            let wall_s = wall.as_secs_f64().max(1e-9);
+            records.push(BenchRecord {
+                engine: engine.name(),
+                workload,
+                tasks: dag.len(),
+                wall_ms: wall_s * 1e3,
+                sim_events,
+                events_per_sec: sim_events as f64 / wall_s,
+                peak_pending: rep.peak_pending.unwrap_or(0),
+                makespan_s: rep.metrics.makespan_s,
+            });
+        }
+    }
+    Ok(records)
+}
+
+/// Serialize a sweep to the `BENCH_*.json` schema (one object per
+/// record; top-level metadata for cross-PR comparison).
+pub fn to_json(records: &[BenchRecord], opts: &BenchOptions) -> String {
+    let recs: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("engine".to_string(), Json::Str(r.engine.to_string()));
+            m.insert("workload".to_string(), Json::Str(r.workload.to_string()));
+            m.insert("tasks".to_string(), Json::Num(r.tasks as f64));
+            m.insert("wall_ms".to_string(), Json::Num(r.wall_ms));
+            m.insert("sim_events".to_string(), Json::Num(r.sim_events as f64));
+            m.insert(
+                "events_per_sec".to_string(),
+                Json::Num(r.events_per_sec),
+            );
+            m.insert(
+                "peak_pending".to_string(),
+                Json::Num(r.peak_pending as f64),
+            );
+            m.insert("makespan_s".to_string(), Json::Num(r.makespan_s));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert(
+        "bench".to_string(),
+        Json::Str("wukong-sim-hotpath".to_string()),
+    );
+    top.insert(
+        "pr".to_string(),
+        Json::Str(TRAJECTORY_POINT.to_string()),
+    );
+    top.insert("quick".to_string(), Json::Bool(opts.quick));
+    top.insert("seed".to_string(), Json::Num(opts.seed as f64));
+    top.insert("records".to_string(), Json::Arr(recs));
+    Json::Obj(top).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_full_mode_hits_a_million_tasks_on_wukong() {
+        assert_eq!(fanout_tasks("wukong", false), 1_000_000);
+        assert_eq!(chain_tasks("wukong", false), 1_000_000);
+        // TSQR R-only: ~4 tasks per leaf ⇒ the 2^18-leaf shape crosses 1M.
+        assert!(tsqr_leaves("wukong", false) * 4 >= 1_000_000);
+        // Baselines get smaller (but still large) budgets.
+        assert!(fanout_tasks("dask125", false) >= 10_000);
+        assert!(fanout_tasks("numpywren", false) >= 50_000);
+    }
+
+    #[test]
+    fn quick_mode_shrinks_every_budget() {
+        for e in ["wukong", "numpywren", "pywren", "dask125", "dask1000"] {
+            assert!(fanout_tasks(e, true) * 10 < fanout_tasks(e, false));
+            assert!(chain_tasks(e, true) * 10 < chain_tasks(e, false));
+            assert!(tsqr_leaves(e, true) < tsqr_leaves(e, false));
+        }
+    }
+
+    #[test]
+    fn unknown_engine_is_an_error() {
+        let err = run_bench(&BenchOptions {
+            engines: vec!["warp-drive".into()],
+            ..BenchOptions::default()
+        })
+        .unwrap_err();
+        assert!(err.contains("unknown engine"), "{err}");
+    }
+
+    #[test]
+    fn default_out_path_tracks_the_trajectory_point() {
+        assert_eq!(
+            default_out_path(),
+            format!("BENCH_{TRAJECTORY_POINT}.json")
+        );
+        assert!(default_out_path().starts_with("BENCH_"));
+    }
+
+    #[test]
+    fn json_schema_round_trips() {
+        let rec = BenchRecord {
+            engine: "wukong",
+            workload: "fanout",
+            tasks: 1_000_000,
+            wall_ms: 1234.5,
+            sim_events: 5_000_000,
+            events_per_sec: 4.05e6,
+            peak_pending: 1_000_000,
+            makespan_s: 2.5,
+        };
+        let text = to_json(&[rec], &BenchOptions::default());
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("pr").unwrap().as_str(), Some(TRAJECTORY_POINT));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].get("engine").unwrap().as_str(), Some("wukong"));
+        assert_eq!(recs[0].get("tasks").unwrap().as_u64(), Some(1_000_000));
+        assert_eq!(
+            recs[0].get("peak_pending").unwrap().as_u64(),
+            Some(1_000_000)
+        );
+    }
+
+    #[test]
+    fn quick_smoke_on_the_wukong_engine() {
+        // A tiny end-to-end sweep: completion-checked runs over all three
+        // workload families (debug-build friendly sizes).
+        let recs = run_bench(&BenchOptions {
+            quick: true,
+            engines: vec!["wukong".into()],
+            seed: 7,
+        })
+        .unwrap();
+        assert_eq!(recs.len(), 3);
+        for r in &recs {
+            assert!(r.sim_events > 0, "{:?}", r);
+            assert!(r.events_per_sec > 0.0);
+            assert!(r.peak_pending > 0);
+            assert!(r.tasks >= 64);
+        }
+    }
+}

@@ -8,7 +8,8 @@
 use std::collections::BTreeMap;
 
 /// Options that take a value (everything else after `--` is a flag).
-pub const VALUED: &[&str] = &["config", "runs", "seed", "out", "engine"];
+pub const VALUED: &[&str] =
+    &["config", "runs", "seed", "out", "engine", "threads"];
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -67,10 +68,14 @@ pub const USAGE: &str = "\
 wukong — serverless parallel computing (SoCC '20 reproduction)
 
 USAGE:
-  wukong figure <id|all> [--quick] [--set a.b=c ...]   regenerate a paper figure
+  wukong figure <id|all> [--quick] [--threads N] [--set a.b=c ...]
+                                                       regenerate a paper figure (id=all fans
+                                                       the sweeps out across a thread pool;
+                                                       tables are identical to --threads 1)
   wukong run <workload> [--engine <name>] [--set a.b=c ...]
                                                        run one workload on the simulator
-  wukong verify [--engine a,b,...] [--runs N] [--seed S] [--verbose]
+  wukong verify [--engine a,b,...] [--runs N] [--seed S] [--threads N]
+                [--large] [--verbose]
                                                        cross-engine differential conformance:
                                                        sweeps generated DAGs (incl. irregular
                                                        shapes) through every registered engine
@@ -78,7 +83,18 @@ USAGE:
                                                        exactly-once, completion, per-seed
                                                        determinism and the locality ordering
                                                        (Wukong KVS bytes <= stateless bytes);
-                                                       exits non-zero on any violation
+                                                       cases fan out across --threads workers
+                                                       with case-ordered (byte-identical)
+                                                       aggregation; --large switches to the
+                                                       scale corpus tier; exits non-zero on
+                                                       any violation
+  wukong bench [--quick] [--engine a,b,...] [--seed S] [--out FILE]
+                                                       million-task hot-path benchmark: sweeps
+                                                       the sim engines over fan-out/chain/TSQR
+                                                       DAGs, reports wall-ms, events/sec and
+                                                       peak pending-event depth, and writes
+                                                       BENCH_PR2.json (the perf-trajectory
+                                                       point + regression baseline)
   wukong dag <workload>                                print a workload DAG (DOT)
   wukong list                                          list figures + workloads
   wukong serve [--quick]                               real-engine demo (PJRT compute)
@@ -95,8 +111,12 @@ OPTIONS:
   --set a.b=c       override any config key (repeatable)
   --runs <n>        repetitions (figures) / DAG cases (verify)
   --seed <s>        base RNG seed
-  --quick           shrunk problem sizes (tests/smoke)
-  --verbose         per-case progress (verify)
+  --threads <n>     worker threads for figure/verify sweeps (0 = auto)
+  --out <file>      output path (bench JSON)
+  --quick           shrunk problem sizes (tests/smoke/bench)
+  --large           scale-tier corpus (verify)
+  --verbose         per-case lines (verify; streamed live with
+                    --threads 1, printed in case order otherwise)
 ";
 
 #[cfg(test)]

@@ -12,7 +12,7 @@ use std::path::Path;
 use crate::sim::{secs, Time};
 
 /// AWS-Lambda-like platform model parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct LambdaConfig {
     /// Function memory (GB); AWS scales CPU linearly with memory.
     pub memory_gb: f64,
@@ -67,7 +67,7 @@ pub enum KvsMode {
 }
 
 /// Storage-cluster model parameters (KVS + MDS + proxy).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct StorageConfig {
     pub mode: KvsMode,
     /// Number of KVS shards (Fargate tasks). Paper uses 75.
@@ -130,7 +130,7 @@ impl StorageConfig {
 }
 
 /// Wukong scheduler/executor policy knobs (§3.3–§3.4).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct WukongConfig {
     /// Output-size threshold `t` above which fan-out targets are clustered.
     pub clustering_threshold: u64,
@@ -163,7 +163,7 @@ impl Default for WukongConfig {
 }
 
 /// Serverful Dask-distributed model parameters (§4.1 comparisons).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct DaskConfig {
     pub n_workers: usize,
     pub cores_per_worker: usize,
@@ -224,7 +224,7 @@ impl DaskConfig {
 }
 
 /// numpywren/PyWren baseline model parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct NumpywrenConfig {
     /// Initial executor (worker) count — a user-tuned knob in numpywren.
     pub n_workers: usize,
@@ -251,7 +251,7 @@ impl Default for NumpywrenConfig {
 }
 
 /// Task-compute cost model shared by all engines.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct ComputeConfig {
     /// Fixed per-task runtime overhead (s): deserialize + dispatch.
     pub task_overhead_s: f64,

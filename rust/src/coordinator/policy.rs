@@ -61,7 +61,7 @@ pub fn plan_dispatch(
     knobs: &PolicyKnobs,
     classify: impl Fn(TaskId) -> ChildClass,
 ) -> DispatchPlan {
-    let children = &dag.task(t).children;
+    let children = dag.children(t);
     let mut plan = DispatchPlan::default();
     if children.is_empty() {
         // Sink: final results are always stored + published.
@@ -133,8 +133,7 @@ pub fn holdout_ready(avail_others: u32, indegree: usize) -> bool {
 /// simulator and the real engine elect identically without coordination.
 pub fn should_hold(dag: &Dag, t: TaskId, child: TaskId) -> bool {
     let mine = (dag.task(t).out_bytes, t);
-    dag.task(child)
-        .parents
+    dag.parents(child)
         .iter()
         .all(|&p| p == t || (dag.task(p).out_bytes, p) <= mine)
 }

@@ -35,8 +35,8 @@ impl StaticSchedule {
 /// Generate one static schedule per DAG leaf.
 pub fn generate_schedules(dag: &Dag) -> Vec<StaticSchedule> {
     dag.leaves()
-        .into_iter()
-        .map(|leaf| StaticSchedule {
+        .iter()
+        .map(|&leaf| StaticSchedule {
             leaf,
             tasks: dag.reachable_from(leaf),
         })

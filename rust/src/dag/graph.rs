@@ -1,5 +1,13 @@
 //! The [`Dag`] container: builder, validation, topology queries, DOT
 //! export.
+//!
+//! Adjacency is stored in CSR (compressed sparse row) form — one flat
+//! `parents` array and one flat `children` array, each indexed by a
+//! per-task offset range — and task names are interned into a single
+//! string arena. A million-task DAG is therefore a handful of large
+//! allocations instead of millions of per-node `Vec`s/`String`s, and
+//! `parents(t)`/`children(t)` are contiguous slices the engines iterate
+//! without cloning. Leaves and sinks are computed once at build time.
 
 use std::collections::VecDeque;
 use std::fmt::Write as _;
@@ -7,11 +15,26 @@ use std::fmt::Write as _;
 use super::task::{OpKind, TaskId, TaskNode};
 use crate::sim::Time;
 
-/// A validated directed acyclic task graph.
+/// A validated directed acyclic task graph (CSR adjacency layout).
 #[derive(Debug, Clone)]
 pub struct Dag {
     pub name: String,
     tasks: Vec<TaskNode>,
+    /// Flat parent lists: task `t`'s parents are
+    /// `parents[parent_off[t] .. parent_off[t + 1]]`.
+    parents: Vec<TaskId>,
+    parent_off: Vec<u32>,
+    /// Flat child lists, same offset scheme.
+    children: Vec<TaskId>,
+    child_off: Vec<u32>,
+    /// Interned task names: task `t`'s name is
+    /// `names[name_off[t] .. name_off[t + 1]]`.
+    names: String,
+    name_off: Vec<u32>,
+    /// Cached at build: tasks with no parents, ascending id.
+    leaves: Vec<TaskId>,
+    /// Cached at build: tasks with no children, ascending id.
+    sinks: Vec<TaskId>,
 }
 
 impl Dag {
@@ -23,6 +46,13 @@ impl Dag {
         &self.tasks[id as usize]
     }
 
+    /// The task's interned human-readable name.
+    pub fn task_name(&self, id: TaskId) -> &str {
+        let a = self.name_off[id as usize] as usize;
+        let b = self.name_off[id as usize + 1] as usize;
+        &self.names[a..b]
+    }
+
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
@@ -31,22 +61,44 @@ impl Dag {
         self.tasks.is_empty()
     }
 
+    /// Parent ids of `id`, in edge-insertion order.
+    pub fn parents(&self, id: TaskId) -> &[TaskId] {
+        let a = self.parent_off[id as usize] as usize;
+        let b = self.parent_off[id as usize + 1] as usize;
+        &self.parents[a..b]
+    }
+
+    /// Child ids of `id`, in edge-insertion order.
+    pub fn children(&self, id: TaskId) -> &[TaskId] {
+        let a = self.child_off[id as usize] as usize;
+        let b = self.child_off[id as usize + 1] as usize;
+        &self.children[a..b]
+    }
+
+    /// In-degree (fan-in width) — an O(1) offset subtraction.
+    pub fn indegree(&self, id: TaskId) -> usize {
+        (self.parent_off[id as usize + 1] - self.parent_off[id as usize]) as usize
+    }
+
+    /// Out-degree (fan-out width).
+    pub fn outdegree(&self, id: TaskId) -> usize {
+        (self.child_off[id as usize + 1] - self.child_off[id as usize]) as usize
+    }
+
     /// Tasks with no parents — the static schedules' roots (§3.2).
-    pub fn leaves(&self) -> Vec<TaskId> {
-        (0..self.tasks.len() as TaskId)
-            .filter(|&t| self.tasks[t as usize].parents.is_empty())
-            .collect()
+    /// Cached at build time (ascending id).
+    pub fn leaves(&self) -> &[TaskId] {
+        &self.leaves
     }
 
     /// Tasks with no children — final results, published to the client.
-    pub fn sinks(&self) -> Vec<TaskId> {
-        (0..self.tasks.len() as TaskId)
-            .filter(|&t| self.tasks[t as usize].children.is_empty())
-            .collect()
+    /// Cached at build time (ascending id).
+    pub fn sinks(&self) -> &[TaskId] {
+        &self.sinks
     }
 
     pub fn n_edges(&self) -> usize {
-        self.tasks.iter().map(|t| t.children.len()).sum()
+        self.children.len()
     }
 
     pub fn total_flops(&self) -> f64 {
@@ -61,14 +113,12 @@ impl Dag {
     /// acyclicity).
     pub fn topo_order(&self) -> Vec<TaskId> {
         let mut indeg: Vec<usize> =
-            self.tasks.iter().map(|t| t.parents.len()).collect();
-        let mut q: VecDeque<TaskId> = (0..self.tasks.len() as TaskId)
-            .filter(|&t| indeg[t as usize] == 0)
-            .collect();
+            (0..self.tasks.len() as TaskId).map(|t| self.indegree(t)).collect();
+        let mut q: VecDeque<TaskId> = self.leaves.iter().copied().collect();
         let mut order = Vec::with_capacity(self.tasks.len());
         while let Some(t) = q.pop_front() {
             order.push(t);
-            for &c in &self.tasks[t as usize].children {
+            for &c in self.children(t) {
                 indeg[c as usize] -= 1;
                 if indeg[c as usize] == 0 {
                     q.push_back(c);
@@ -90,7 +140,7 @@ impl Dag {
             }
             out.push(t);
             // push children in reverse so DFS visits them in order
-            for &c in self.tasks[t as usize].children.iter().rev() {
+            for &c in self.children(t).iter().rev() {
                 if !seen[c as usize] {
                     stack.push(c);
                 }
@@ -106,14 +156,13 @@ impl Dag {
         let mut finish = vec![0 as Time; self.tasks.len()];
         let mut best = 0;
         for &t in &order {
-            let node = &self.tasks[t as usize];
-            let start = node
-                .parents
+            let start = self
+                .parents(t)
                 .iter()
                 .map(|&p| finish[p as usize])
                 .max()
                 .unwrap_or(0);
-            finish[t as usize] = start + dur(node);
+            finish[t as usize] = start + dur(self.task(t));
             best = best.max(finish[t as usize]);
         }
         best
@@ -123,12 +172,12 @@ impl Dag {
     pub fn to_dot(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "digraph \"{}\" {{", self.name);
-        for (i, t) in self.tasks.iter().enumerate() {
-            let _ = writeln!(s, "  t{} [label=\"{}\"];", i, t.name);
+        for t in 0..self.tasks.len() as TaskId {
+            let _ = writeln!(s, "  t{} [label=\"{}\"];", t, self.task_name(t));
         }
-        for (i, t) in self.tasks.iter().enumerate() {
-            for &c in &t.children {
-                let _ = writeln!(s, "  t{} -> t{};", i, c);
+        for t in 0..self.tasks.len() as TaskId {
+            for &c in self.children(t) {
+                let _ = writeln!(s, "  t{t} -> t{c};");
             }
         }
         s.push_str("}\n");
@@ -136,11 +185,23 @@ impl Dag {
     }
 }
 
-/// Incremental DAG constructor; `build()` validates.
-#[derive(Debug, Default)]
+/// Incremental DAG constructor; `build()` validates and freezes the CSR
+/// layout. Edges are collected as a flat list and converted with one
+/// stable counting sort, so building a million-task DAG never allocates
+/// per-node adjacency vectors.
+#[derive(Debug)]
 pub struct DagBuilder {
     name: String,
     tasks: Vec<TaskNode>,
+    edges: Vec<(TaskId, TaskId)>,
+    names: String,
+    name_off: Vec<u32>,
+}
+
+impl Default for DagBuilder {
+    fn default() -> Self {
+        DagBuilder::new("")
+    }
 }
 
 impl DagBuilder {
@@ -148,27 +209,30 @@ impl DagBuilder {
         DagBuilder {
             name: name.to_string(),
             tasks: Vec::new(),
+            edges: Vec::new(),
+            names: String::new(),
+            name_off: vec![0],
         }
     }
 
-    /// Add a task; returns its id.
+    /// Add a task; returns its id. The name is appended to the arena —
+    /// no per-task `String` is retained.
     pub fn task(
         &mut self,
-        name: impl Into<String>,
+        name: impl AsRef<str>,
         op: OpKind,
         flops: f64,
         out_bytes: u64,
     ) -> TaskId {
         let id = self.tasks.len() as TaskId;
+        self.names.push_str(name.as_ref());
+        self.name_off.push(self.names.len() as u32);
         self.tasks.push(TaskNode {
-            name: name.into(),
             op,
             flops,
             out_bytes,
             input_bytes: 0,
             dur_override: None,
-            parents: Vec::new(),
-            children: Vec::new(),
         });
         id
     }
@@ -192,34 +256,83 @@ impl DagBuilder {
             "edge references unknown task"
         );
         assert_ne!(from, to, "self-loop");
-        self.tasks[from as usize].children.push(to);
-        self.tasks[to as usize].parents.push(from);
+        self.edges.push((from, to));
         self
     }
 
-    /// Validate and freeze.
+    /// Validate and freeze into the CSR layout.
     pub fn build(self) -> Result<Dag, String> {
+        let n = self.tasks.len();
+        let n_edges = self.edges.len();
+
+        // CSR construction: count, prefix-sum, stable fill (edge-insertion
+        // order is preserved per node — engines depend on it for
+        // deterministic dispatch order).
+        let mut child_off = vec![0u32; n + 1];
+        let mut parent_off = vec![0u32; n + 1];
+        for &(f, t) in &self.edges {
+            child_off[f as usize + 1] += 1;
+            parent_off[t as usize + 1] += 1;
+        }
+        for i in 0..n {
+            child_off[i + 1] += child_off[i];
+            parent_off[i + 1] += parent_off[i];
+        }
+        let mut children = vec![0 as TaskId; n_edges];
+        let mut parents = vec![0 as TaskId; n_edges];
+        let mut ccur: Vec<u32> = child_off[..n].to_vec();
+        let mut pcur: Vec<u32> = parent_off[..n].to_vec();
+        for &(f, t) in &self.edges {
+            children[ccur[f as usize] as usize] = t;
+            ccur[f as usize] += 1;
+            parents[pcur[t as usize] as usize] = f;
+            pcur[t as usize] += 1;
+        }
+
+        // Duplicate edges would break dependency counting. The CSR fill
+        // already grouped each node's out-edges, so scan per-node slices
+        // (O(E log max_degree), one reused scratch buffer) instead of
+        // clone-sorting the whole edge list.
+        let mut scratch: Vec<TaskId> = Vec::new();
+        for v in 0..n {
+            let s = &children[child_off[v] as usize..child_off[v + 1] as usize];
+            if s.len() > 1 {
+                scratch.clear();
+                scratch.extend_from_slice(s);
+                scratch.sort_unstable();
+                if scratch.windows(2).any(|w| w[0] == w[1]) {
+                    return Err(format!("task {v} has duplicate out-edges"));
+                }
+            }
+        }
+
+        let leaves: Vec<TaskId> = (0..n as TaskId)
+            .filter(|&t| parent_off[t as usize] == parent_off[t as usize + 1])
+            .collect();
+        let sinks: Vec<TaskId> = (0..n as TaskId)
+            .filter(|&t| child_off[t as usize] == child_off[t as usize + 1])
+            .collect();
+
         let dag = Dag {
             name: self.name,
             tasks: self.tasks,
+            parents,
+            parent_off,
+            children,
+            child_off,
+            names: self.names,
+            name_off: self.name_off,
+            leaves,
+            sinks,
         };
         // acyclicity: Kahn must consume every node
         let order = dag.topo_order();
-        if order.len() != dag.tasks.len() {
+        if order.len() != n {
             return Err(format!(
                 "cycle detected: topo order covers {}/{} tasks",
                 order.len(),
-                dag.tasks.len()
+                n
             ));
-        }
-        // duplicate edges would break dependency counting
-        for (i, t) in dag.tasks.iter().enumerate() {
-            let mut c = t.children.clone();
-            c.sort_unstable();
-            c.dedup();
-            if c.len() != t.children.len() {
-                return Err(format!("task {i} has duplicate out-edges"));
-            }
         }
         Ok(dag)
     }
@@ -243,9 +356,34 @@ mod tests {
     #[test]
     fn leaves_and_sinks() {
         let d = diamond();
-        assert_eq!(d.leaves(), vec![0]);
-        assert_eq!(d.sinks(), vec![3]);
+        assert_eq!(d.leaves().to_vec(), vec![0]);
+        assert_eq!(d.sinks().to_vec(), vec![3]);
         assert_eq!(d.n_edges(), 4);
+    }
+
+    #[test]
+    fn csr_adjacency_matches_edge_insertion_order() {
+        let d = diamond();
+        assert_eq!(d.children(0), &[1, 2]);
+        assert_eq!(d.children(1), &[3]);
+        assert_eq!(d.parents(3), &[1, 2]);
+        assert_eq!(d.parents(0), &[] as &[TaskId]);
+        assert_eq!(d.indegree(3), 2);
+        assert_eq!(d.outdegree(0), 2);
+        assert_eq!(d.indegree(0), 0);
+    }
+
+    #[test]
+    fn names_are_interned_and_addressable() {
+        let d = diamond();
+        assert_eq!(d.task_name(0), "a");
+        assert_eq!(d.task_name(3), "d");
+        let mut b = DagBuilder::new("named");
+        let long = b.task(format!("t{}", 123), OpKind::Generic, 1.0, 1);
+        let empty = b.task("", OpKind::Generic, 1.0, 1);
+        let dag = b.build().unwrap();
+        assert_eq!(dag.task_name(long), "t123");
+        assert_eq!(dag.task_name(empty), "");
     }
 
     #[test]
@@ -294,9 +432,10 @@ mod tests {
     }
 
     #[test]
-    fn dot_contains_all_edges() {
+    fn dot_contains_all_edges_and_names() {
         let d = diamond();
         let dot = d.to_dot();
         assert_eq!(dot.matches("->").count(), 4);
+        assert!(dot.contains("label=\"a\""));
     }
 }

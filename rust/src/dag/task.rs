@@ -1,4 +1,9 @@
-//! Task nodes: op kind, cost model inputs, and adjacency.
+//! Task nodes: op kind and cost-model inputs.
+//!
+//! Adjacency (parents/children) and task names live in the [`super::Dag`]
+//! container's CSR arrays and name arena — a `TaskNode` is pure per-task
+//! cost data, so a million-task DAG is one flat `Vec<TaskNode>` with no
+//! per-node heap allocations.
 
 use crate::sim::Time;
 
@@ -46,11 +51,10 @@ pub enum OpKind {
     Generic,
 }
 
-/// One node of the workload DAG.
-#[derive(Debug, Clone)]
+/// One node of the workload DAG (cost annotations only; adjacency and
+/// the interned name are queried through [`super::Dag`]).
+#[derive(Debug, Clone, Copy)]
 pub struct TaskNode {
-    /// Human-readable name (stable across runs; used for object keys).
-    pub name: String,
     pub op: OpKind,
     /// Floating-point work (sim compute model: `flops / gflops`).
     pub flops: f64,
@@ -61,21 +65,9 @@ pub struct TaskNode {
     pub input_bytes: u64,
     /// Fixed-duration override (microbenchmarks / injected delays).
     pub dur_override: Option<Time>,
-    pub parents: Vec<TaskId>,
-    pub children: Vec<TaskId>,
 }
 
 impl TaskNode {
-    /// In-degree (fan-in width).
-    pub fn indegree(&self) -> usize {
-        self.parents.len()
-    }
-
-    /// Out-degree (fan-out width).
-    pub fn outdegree(&self) -> usize {
-        self.children.len()
-    }
-
     /// Stable KVS key for this task's output object.
     pub fn obj_key(id: TaskId) -> u64 {
         // task-id → key namespace distinct from external inputs

@@ -69,11 +69,12 @@ impl TaskComputer {
         ext: Option<Arc<Obj>>,
     ) -> Result<Obj> {
         let node = dag.task(t);
+        let name = dag.task_name(t);
         let one = |i: usize| -> Result<&Tensor> {
             parent_objs
                 .get(i)
                 .and_then(|o| o.first())
-                .ok_or_else(|| anyhow!("{}: missing parent {i}", node.name))
+                .ok_or_else(|| anyhow!("{name}: missing parent {i}"))
         };
         match node.op {
             OpKind::Noop | OpKind::Sleep => {
@@ -157,7 +158,7 @@ impl TaskComputer {
                     let (rows, cols) = (qm.shape[0], qm.shape[1]);
                     let half = rows / 2;
                     // which half: task names end in _0 (top) / _1 (bottom)
-                    let bottom = node.name.ends_with("_1");
+                    let bottom = name.ends_with("_1");
                     let start = if bottom { half * cols } else { 0 };
                     Ok(vec![Tensor::new(
                         vec![half, cols],
@@ -208,7 +209,7 @@ pub fn input_key(dag: &Dag, t: TaskId) -> Option<String> {
     }
     // GEMM partials share input blocks: mul_{i}_{j}_{k} reads A:i:k, B:k:j
     // (resolved in `seed_inputs` as a combined bundle per task).
-    Some(format!("in:{}", node.name))
+    Some(format!("in:{}", dag.task_name(t)))
 }
 
 /// Seed external input partitions for a real run. Returns the RNG-backed
@@ -233,7 +234,7 @@ pub fn seed_inputs(dag: &Dag, kvs: &RealKvs, seed: u64) -> Vec<(String, Obj)> {
             ],
             OpKind::GemmBlock => {
                 // name: mul_{i}_{j}_{k} → A[i,k], B[k,j]
-                let parts: Vec<&str> = node.name.split('_').collect();
+                let parts: Vec<&str> = dag.task_name(t).split('_').collect();
                 let (i, j, k) = (parts[1], parts[2], parts[3]);
                 let a = gemm_pool
                     .entry(format!("A:{i}:{k}"))

@@ -18,7 +18,7 @@ pub use compute::{seed_inputs, TaskComputer};
 pub use real_numpywren::run_real_numpywren;
 pub use real_wukong::{run_real_wukong, RealConfig, RealReport};
 pub use traits::{
-    engine_by_name, sim_engine_names, sim_registry, Engine, EngineCaps,
-    EngineReport, RealNumpywrenEngine, RealWukongEngine, SimDask,
+    engine_by_name, select_engines, sim_engine_names, sim_registry, Engine,
+    EngineCaps, EngineReport, RealNumpywrenEngine, RealWukongEngine, SimDask,
     SimNumpywren, SimPywren, SimWukong,
 };

@@ -47,10 +47,9 @@ fn worker(sh: &Arc<Shared>) {
             continue;
         };
         // Stateless: read every input from the KVS.
-        let node = sh.dag.task(t);
-        let mut parent_objs = Vec::with_capacity(node.parents.len());
+        let mut parent_objs = Vec::with_capacity(sh.dag.indegree(t));
         let mut ok = true;
-        for &p in &node.parents {
+        for &p in sh.dag.parents(t) {
             match sh
                 .kvs
                 .get_blocking(&obj_key(p), Duration::from_secs(60))
@@ -59,7 +58,10 @@ fn worker(sh: &Arc<Shared>) {
             {
                 Ok(o) => parent_objs.push(Arc::new(o)),
                 Err(e) => {
-                    sh.errors.lock().unwrap().push(format!("{}: {e}", node.name));
+                    sh.errors
+                        .lock()
+                        .unwrap()
+                        .push(format!("{}: {e}", sh.dag.task_name(t)));
                     ok = false;
                     break;
                 }
@@ -81,11 +83,14 @@ fn worker(sh: &Arc<Shared>) {
                 );
                 // Stateless: write the full output back.
                 sh.kvs.put(&obj_key(t), obj_to_bytes(&out));
-                if node.children.is_empty() {
-                    sh.outputs.lock().unwrap().insert(node.name.clone(), out);
+                if sh.dag.children(t).is_empty() {
+                    sh.outputs
+                        .lock()
+                        .unwrap()
+                        .insert(sh.dag.task_name(t).to_string(), out);
                 }
                 let mut q = sh.queue.lock().unwrap();
-                for &c in &node.children {
+                for &c in sh.dag.children(t) {
                     if sh.remaining[c as usize].fetch_sub(1, Ordering::SeqCst)
                         == 1
                     {
@@ -96,7 +101,10 @@ fn worker(sh: &Arc<Shared>) {
                 sh.done.fetch_add(1, Ordering::SeqCst);
             }
             Err(e) => {
-                sh.errors.lock().unwrap().push(format!("{}: {e}", node.name));
+                sh.errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("{}: {e}", sh.dag.task_name(t)));
             }
         }
     }
@@ -115,11 +123,9 @@ pub fn run_real_numpywren(
         dag: dag.clone(),
         kvs,
         computer: TaskComputer { rt },
-        queue: Mutex::new(dag.leaves().into()),
-        remaining: dag
-            .tasks()
-            .iter()
-            .map(|t| AtomicU32::new(t.parents.len() as u32))
+        queue: Mutex::new(dag.leaves().iter().copied().collect()),
+        remaining: (0..n as u32)
+            .map(|t| AtomicU32::new(dag.indegree(t) as u32))
             .collect(),
         executed: (0..n).map(|_| AtomicU32::new(0)).collect(),
         done: AtomicU64::new(0),

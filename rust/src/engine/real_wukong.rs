@@ -141,7 +141,7 @@ fn executor_body(
                 if sh.claimed[c as usize].load(Ordering::SeqCst) {
                     continue;
                 }
-                let indeg = sh.dag.task(c).indegree() as u32;
+                let indeg = sh.dag.indegree(c) as u32;
                 let avail = sh.counters[c as usize].load(Ordering::SeqCst);
                 if avail == indeg - 1 && sh.claim(c) {
                     queue.push_back(c); // became the fan-in's executor
@@ -163,10 +163,9 @@ fn executor_body(
         };
 
         // ---- fetch inputs ----
-        let node = sh.dag.task(t);
-        let mut parent_objs = Vec::with_capacity(node.parents.len());
+        let mut parent_objs = Vec::with_capacity(sh.dag.indegree(t));
         let mut failed = false;
-        for &p in &node.parents {
+        for &p in sh.dag.parents(t) {
             let obj = match cache.get(&p) {
                 Some(o) => Arc::clone(o),
                 None => match sh.fetch_obj(p) {
@@ -175,7 +174,10 @@ fn executor_body(
                         o
                     }
                     Err(e) => {
-                        sh.errors.lock().unwrap().push(format!("{}: {e}", node.name));
+                        sh.errors
+                            .lock()
+                            .unwrap()
+                            .push(format!("{}: {e}", sh.dag.task_name(t)));
                         failed = true;
                         break;
                     }
@@ -196,7 +198,10 @@ fn executor_body(
         let out = match sh.computer.compute(&sh.dag, t, &parent_objs, ext) {
             Ok(o) => Arc::new(o),
             Err(e) => {
-                sh.errors.lock().unwrap().push(format!("{}: {e}", node.name));
+                sh.errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("{}: {e}", sh.dag.task_name(t)));
                 continue;
             }
         };
@@ -208,12 +213,12 @@ fn executor_body(
         cache.insert(t, Arc::clone(&out));
 
         // ---- dispatch (§3.3) ----
-        if node.children.is_empty() {
+        if sh.dag.children(t).is_empty() {
             sh.store_obj(t, &out);
             sh.outputs
                 .lock()
                 .unwrap()
-                .insert(node.name.clone(), (*out).clone());
+                .insert(sh.dag.task_name(t).to_string(), (*out).clone());
             continue;
         }
         let out_bytes: u64 = out.iter().map(|x| x.bytes()).sum();
@@ -221,11 +226,11 @@ fn executor_body(
         let mut ready = Vec::new();
 
         if big {
-            for &c in &node.children {
+            for &c in sh.dag.children(t) {
                 if sh.claimed[c as usize].load(Ordering::SeqCst) {
                     continue;
                 }
-                let indeg = sh.dag.task(c).indegree() as u32;
+                let indeg = sh.dag.indegree(c) as u32;
                 if indeg <= 1 {
                     if sh.claim(c) {
                         ready.push(c);
@@ -260,11 +265,11 @@ fn executor_body(
             // (its blocking read tolerates the store landing after the
             // increment) or invoked executors can't take the object inline.
             let mut any_unready = false;
-            for &c in &node.children {
+            for &c in sh.dag.children(t) {
                 if sh.claimed[c as usize].load(Ordering::SeqCst) {
                     continue;
                 }
-                let indeg = sh.dag.task(c).indegree() as u32;
+                let indeg = sh.dag.indegree(c) as u32;
                 if indeg <= 1 {
                     if sh.claim(c) {
                         ready.push(c);
@@ -329,7 +334,7 @@ pub fn run_real_wukong(
     });
     let pool = Arc::new(ThreadPool::new(sh.cfg.n_threads));
     let start = Instant::now();
-    for leaf in dag.leaves() {
+    for &leaf in dag.leaves() {
         sh.claimed[leaf as usize].store(true, Ordering::SeqCst);
         let sh2 = Arc::clone(&sh);
         let pool2 = Arc::clone(&pool);

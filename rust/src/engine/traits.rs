@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use crate::baselines::{run_dask, run_numpywren, run_pywren};
+use crate::baselines::{run_dask_full, run_numpywren_full, run_pywren_full};
 use crate::config::{Config, DaskConfig};
 use crate::coordinator::sim_engine::run_wukong_faulty;
 use crate::dag::Dag;
@@ -65,7 +65,7 @@ impl Default for EngineCaps {
 }
 
 /// Normalized result of one engine run: the shared [`RunMetrics`] plus
-/// engine-specific extras that matter for conformance.
+/// engine-specific extras that matter for conformance and `wukong bench`.
 #[derive(Debug, Clone)]
 pub struct EngineReport {
     /// Registry name of the engine that produced this report.
@@ -73,8 +73,12 @@ pub struct EngineReport {
     /// Normalized meters (makespan, KVS bytes, per-task counts, ...).
     pub metrics: RunMetrics,
     /// DES events processed, when the engine is simulator-backed (used by
-    /// the determinism check: same seed ⇒ same event count).
+    /// the determinism check: same seed ⇒ same event count, and by
+    /// `wukong bench`: events/sec).
     pub sim_events: Option<u64>,
+    /// High-water mark of the pending-event calendar depth, when the
+    /// engine is simulator-backed (`wukong bench` memory-pressure proxy).
+    pub peak_pending: Option<usize>,
 }
 
 /// A DAG execution engine. `run` must be a deterministic function of
@@ -115,11 +119,12 @@ impl Engine for SimWukong {
     }
 
     fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
-        let r = run_wukong_faulty(dag, cfg, seed, self.faults.clone());
+        let r = run_wukong_faulty(dag, cfg, seed, self.faults);
         EngineReport {
             engine: self.name(),
             metrics: r.metrics,
             sim_events: Some(r.sim_events),
+            peak_pending: Some(r.peak_pending),
         }
     }
 }
@@ -138,10 +143,12 @@ impl Engine for SimNumpywren {
     }
 
     fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        let r = run_numpywren_full(dag, cfg, seed);
         EngineReport {
             engine: self.name(),
-            metrics: run_numpywren(dag, cfg, seed),
-            sim_events: None,
+            metrics: r.metrics,
+            sim_events: Some(r.sim_events),
+            peak_pending: Some(r.peak_pending),
         }
     }
 }
@@ -166,10 +173,12 @@ impl Engine for SimPywren {
 
     fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
         let n = self.n_workers.unwrap_or_else(|| dag.leaves().len().max(1));
+        let r = run_pywren_full(dag, cfg, n, seed);
         EngineReport {
             engine: self.name(),
-            metrics: run_pywren(dag, cfg, n, seed),
-            sim_events: None,
+            metrics: r.metrics,
+            sim_events: Some(r.sim_events),
+            peak_pending: Some(r.peak_pending),
         }
     }
 }
@@ -217,10 +226,12 @@ impl Engine for SimDask {
     }
 
     fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
+        let r = run_dask_full(dag, cfg, &self.dcfg, seed);
         EngineReport {
             engine: self.name(),
-            metrics: run_dask(dag, cfg, &self.dcfg, seed),
-            sim_events: None,
+            metrics: r.metrics,
+            sim_events: Some(r.sim_events),
+            peak_pending: Some(r.peak_pending),
         }
     }
 }
@@ -288,6 +299,7 @@ impl Engine for RealWukongEngine {
             engine: self.name(),
             metrics: real_metrics(&rep),
             sim_events: None,
+            peak_pending: None,
         }
     }
 }
@@ -330,6 +342,7 @@ impl Engine for RealNumpywrenEngine {
             engine: self.name(),
             metrics: real_metrics(&rep),
             sim_events: None,
+            peak_pending: None,
         }
     }
 }
@@ -354,6 +367,26 @@ pub fn sim_engine_names() -> Vec<&'static str> {
 /// Look up a sim-path engine by registry name.
 pub fn engine_by_name(name: &str) -> Option<Box<dyn Engine>> {
     sim_registry().into_iter().find(|e| e.name() == name)
+}
+
+/// Resolve a CLI engine selection against the sim registry: empty =
+/// every sim-path engine; an unknown name is an error listing the known
+/// ones. Shared by `wukong verify` and `wukong bench`.
+pub fn select_engines(names: &[String]) -> Result<Vec<Box<dyn Engine>>, String> {
+    if names.is_empty() {
+        return Ok(sim_registry());
+    }
+    names
+        .iter()
+        .map(|n| {
+            engine_by_name(n).ok_or_else(|| {
+                format!(
+                    "unknown engine {n:?} (known: {})",
+                    sim_engine_names().join(" ")
+                )
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -404,6 +437,20 @@ mod tests {
                 e.name()
             );
             assert_eq!(r.metrics.tasks_executed as usize, dag.len(), "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn every_sim_engine_reports_des_stats() {
+        // All five sim engines are simulator-backed: `wukong bench` and
+        // the determinism check rely on their event counters being
+        // present.
+        let dag = diamond();
+        let cfg = Config::default();
+        for e in sim_registry() {
+            let r = e.run(&dag, &cfg, 3);
+            assert!(r.sim_events.unwrap_or(0) > 0, "{}", e.name());
+            assert!(r.peak_pending.unwrap_or(0) > 0, "{}", e.name());
         }
     }
 

@@ -35,16 +35,15 @@ pub(crate) fn s3(cfg: &Config) -> Config {
 /// busy core; the paper's Dask-1000 (3 GB workers) dies on the large
 /// SVD2 problems while Dask-125 (24 GB) survives (Fig. 11's crosses).
 pub(crate) fn dask_oom(dag: &Dag, dcfg: &DaskConfig) -> bool {
-    let peak_ws = dag
-        .tasks()
-        .iter()
+    let peak_ws = (0..dag.len() as u32)
         .map(|t| {
-            let parents: u64 = t
-                .parents
+            let node = dag.task(t);
+            let parents: u64 = dag
+                .parents(t)
                 .iter()
                 .map(|&p| dag.task(p).out_bytes)
                 .sum();
-            t.input_bytes + parents + t.out_bytes
+            node.input_bytes + parents + node.out_bytes
         })
         .max()
         .unwrap_or(0);

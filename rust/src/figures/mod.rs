@@ -63,6 +63,32 @@ pub fn run(id: &str, cfg: &Config, quick: bool) -> Option<Figure> {
     }
 }
 
+/// Run several figures concurrently across
+/// [`crate::util::threadpool::ordered_map`], returning them in input
+/// order. Every figure sweep is a pure function of `(cfg, quick)`, so
+/// the fan-out changes wall time only — the rendered tables are
+/// identical to a sequential `threads = 1` run (index-ordered
+/// aggregation). A panic inside a figure is re-raised on the calling
+/// thread after the pool drains.
+pub fn run_many(
+    ids: &[&'static str],
+    cfg: &Config,
+    quick: bool,
+    threads: usize,
+) -> Vec<Figure> {
+    for id in ids {
+        assert!(
+            all_ids().contains(id),
+            "unknown figure id {id:?} (validate before run_many)"
+        );
+    }
+    let ids: Vec<&'static str> = ids.to_vec();
+    let cfg = cfg.clone();
+    crate::util::threadpool::ordered_map(ids.len(), threads, move |i| {
+        run(ids[i], &cfg, quick).expect("id validated above")
+    })
+}
+
 /// Mean of `runs` repetitions of `f(seed)`.
 pub(crate) fn avg(cfg: &Config, quick: bool, mut f: impl FnMut(u64) -> f64) -> f64 {
     let runs = if quick { 1 } else { cfg.runs.max(1) };
@@ -93,5 +119,18 @@ mod tests {
     #[test]
     fn unknown_id_is_none() {
         assert!(run("fig99", &Config::default(), true).is_none());
+    }
+
+    #[test]
+    fn run_many_matches_sequential_output() {
+        let cfg = Config::default();
+        let ids = ["fig2", "fig3", "fig22"];
+        let par = run_many(&ids, &cfg, true, 3);
+        let seq = run_many(&ids, &cfg, true, 1);
+        assert_eq!(par.len(), 3);
+        for (p, s) in par.iter().zip(&seq) {
+            assert_eq!(p.id, s.id);
+            assert_eq!(p.table.render(), s.table.render());
+        }
     }
 }

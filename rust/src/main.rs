@@ -4,6 +4,7 @@
 use std::path::Path;
 use std::process::ExitCode;
 
+use wukong::bench::{run_bench, to_json, BenchOptions};
 use wukong::cli::{Args, USAGE};
 use wukong::config::{apply_overrides, Config};
 use wukong::dag::Dag;
@@ -11,6 +12,24 @@ use wukong::engine::{engine_by_name, sim_engine_names, Engine as _};
 use wukong::verify::{run_verify, VerifyOptions};
 use wukong::workloads::{gemm, svc, svd, tr, tsqr};
 use wukong::{figures, util};
+
+fn parse_threads(args: &Args) -> Result<usize, String> {
+    match args.opt("threads") {
+        Some(t) => t.parse().map_err(|e| format!("--threads: {e}")),
+        None => Ok(0), // auto: one worker per available core
+    }
+}
+
+fn parse_engine_list(args: &Args) -> Vec<String> {
+    args.opt("engine")
+        .map(|list| {
+            list.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+        .unwrap_or_default()
+}
 
 fn build_workload(name: &str) -> Option<Dag> {
     Some(match name {
@@ -79,8 +98,10 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                         format!("unknown figure {id:?} (try `wukong list`)")
                     })?]
             };
-            for id in ids {
-                let fig = figures::run(id, &cfg, quick).expect("registered id");
+            // Figure sweeps are pure per id: fan out across the pool and
+            // print in id order (identical output to a sequential run).
+            let threads = parse_threads(&args)?;
+            for fig in figures::run_many(&ids, &cfg, quick, threads) {
                 println!("== {} — {}", fig.id, fig.caption);
                 println!("{}", fig.table.render());
             }
@@ -146,19 +167,15 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         }
         "verify" => {
             let mut opts = VerifyOptions::default();
-            if let Some(list) = args.opt("engine") {
-                opts.engines = list
-                    .split(',')
-                    .map(|s| s.trim().to_string())
-                    .filter(|s| !s.is_empty())
-                    .collect();
-            }
+            opts.engines = parse_engine_list(&args);
             if let Some(runs) = args.opt("runs") {
                 opts.runs = runs.parse().map_err(|e| format!("--runs: {e}"))?;
             }
             if let Some(seed) = args.opt("seed") {
                 opts.seed = seed.parse().map_err(|e| format!("--seed: {e}"))?;
             }
+            opts.threads = parse_threads(&args)?;
+            opts.large = args.flag("large");
             opts.verbose = args.flag("verbose");
             let summary = run_verify(&opts)?;
             let mut t = util::table::Table::new(vec!["metric", "value"]);
@@ -186,6 +203,48 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                     summary.violations.len()
                 ))
             }
+        }
+        "bench" => {
+            let mut opts = BenchOptions {
+                quick: args.flag("quick"),
+                engines: parse_engine_list(&args),
+                ..BenchOptions::default()
+            };
+            if let Some(seed) = args.opt("seed") {
+                opts.seed = seed.parse().map_err(|e| format!("--seed: {e}"))?;
+            }
+            let records = run_bench(&opts)?;
+            let mut t = util::table::Table::new(vec![
+                "engine",
+                "workload",
+                "tasks",
+                "wall (ms)",
+                "events",
+                "events/sec",
+                "peak pending",
+                "makespan (s)",
+            ]);
+            for r in &records {
+                t.row(vec![
+                    r.engine.to_string(),
+                    r.workload.to_string(),
+                    r.tasks.to_string(),
+                    format!("{:.1}", r.wall_ms),
+                    r.sim_events.to_string(),
+                    format!("{:.3}M", r.events_per_sec / 1e6),
+                    r.peak_pending.to_string(),
+                    format!("{:.2}", r.makespan_s),
+                ]);
+            }
+            println!("{}", t.render());
+            let path = args
+                .opt("out")
+                .map(String::from)
+                .unwrap_or_else(wukong::bench::default_out_path);
+            std::fs::write(&path, to_json(&records, &opts))
+                .map_err(|e| format!("{path}: {e}"))?;
+            println!("wrote {path}");
+            Ok(())
         }
         "serve" => {
             let quick = args.flag("quick");

@@ -79,6 +79,19 @@ impl RunMetrics {
     }
 }
 
+/// Normalized metrics plus DES meters for one simulator-backed run —
+/// shared by the Wukong engine (`coordinator::WukongReport`) and every
+/// baseline (`baselines::BaselineReport`), so a meter added for
+/// `wukong bench` is plumbed exactly once.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub metrics: RunMetrics,
+    /// Events processed by the DES (L3 perf: events/sec).
+    pub sim_events: u64,
+    /// High-water mark of the pending-event calendar depth.
+    pub peak_pending: usize,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,7 +10,9 @@
 use crate::util::Rng;
 
 /// Fault model: each executor run fails independently with `p_fail`.
-#[derive(Debug, Clone)]
+/// `Copy`: two scalars — engines pass it by value instead of cloning per
+/// executor start.
+#[derive(Debug, Clone, Copy)]
 pub struct FaultPlan {
     pub p_fail: f64,
     pub max_retries: u32,

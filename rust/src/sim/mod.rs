@@ -1,15 +1,16 @@
 //! Deterministic discrete-event simulation (DES) substrate.
 //!
 //! Every paper figure is regenerated on this simulator: virtual time in
-//! microseconds, a closure event calendar with FIFO tie-breaking, and
-//! queueing-resource helpers used to model KVS shards, NICs, invoker
-//! pools and Dask worker cores. Determinism contract: same seed + same
-//! config ⇒ identical event trace (tested in `rust/tests/`).
+//! microseconds, a typed-event calendar with FIFO tie-breaking (no
+//! per-event allocation — see [`engine::Handler`]), and queueing-resource
+//! helpers used to model KVS shards, NICs, invoker pools and Dask worker
+//! cores. Determinism contract: same seed + same config ⇒ identical
+//! event trace (tested in `rust/tests/`).
 
 pub mod engine;
 pub mod resource;
 pub mod time;
 
-pub use engine::Sim;
+pub use engine::{Handler, Sim};
 pub use resource::{FifoResource, MultiResource};
 pub use time::{secs, to_secs, Time, MICROS_PER_SEC};

@@ -98,6 +98,61 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Run `f(0..n)` across a pool of `threads` workers (0 = one per
+/// available core), collecting results in index order — the shared
+/// scaffolding behind the parallel `wukong verify` case sweep and
+/// `figures::run_many`. With one worker (or one item) the pool is
+/// skipped entirely and `f` runs inline, in order. Worker-side panics
+/// are caught per item (so a panicking job can never wedge `join`) and
+/// re-raised on the calling thread after the pool drains; output is
+/// identical to a sequential run regardless of thread count.
+pub fn ordered_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    let threads = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|x| x.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    };
+    let threads = threads.min(n).max(1);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    type Slot<T> = Option<std::thread::Result<T>>;
+    let slots: Arc<Mutex<Vec<Slot<T>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let f = Arc::new(f);
+    let pool = ThreadPool::new(threads);
+    for i in 0..n {
+        let slots = Arc::clone(&slots);
+        let f = Arc::clone(&f);
+        pool.spawn(move || {
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| f(i)),
+            );
+            slots.lock().unwrap()[i] = Some(r);
+        });
+    }
+    pool.join();
+    drop(pool); // workers exit; every job's Arc clones are dropped
+    Arc::try_unwrap(slots)
+        .ok()
+        .expect("pool joined; no worker holds the slots")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| match s.expect("every item produced a result") {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +207,32 @@ mod tests {
         }
         pool.join();
         assert_eq!(*log.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ordered_map_preserves_index_order() {
+        for threads in [1, 4] {
+            let out = ordered_map(50, threads, |i| i * 3);
+            assert_eq!(out, (0..50).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn ordered_map_handles_empty_and_single() {
+        assert_eq!(ordered_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(ordered_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn ordered_map_rethrows_worker_panics_without_wedging() {
+        let r = std::panic::catch_unwind(|| {
+            ordered_map(8, 4, |i| {
+                if i == 5 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        });
+        assert!(r.is_err(), "panic must propagate to the caller");
     }
 }

@@ -23,6 +23,20 @@ use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
 use crate::util::prop::gen;
 use crate::util::Rng;
 
+/// Corpus size tier. `Standard` draws the same DAGs (same RNG stream)
+/// the harness always used; `Large` widens every shape's primary
+/// dimensions by 1–2 orders of magnitude for scale smoke sweeps
+/// (`wukong verify --large`). A case seed reproduces its DAG exactly
+/// *within* a tier (generation is a pure function of seed + tier); the
+/// two tiers' RNG streams diverge after the first sized draw, so seeds
+/// are not comparable across tiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CorpusSize {
+    #[default]
+    Standard,
+    Large,
+}
+
 /// Output sizes straddling the inline (256 KB) and clustering (200 MB /
 /// 1 MB knob values) thresholds, including zero-byte edges.
 pub const SIZES: &[u64] = &[
@@ -50,14 +64,23 @@ fn maybe_input(b: &mut DagBuilder, rng: &mut Rng, t: TaskId) {
 /// Random layered DAG: 1–5 ranks, forward-only random edges (the shape
 /// the seed property tests used).
 pub fn layered(rng: &mut Rng) -> Dag {
-    let layers = gen::usize_in(rng, 1, 5);
+    layered_sized(rng, CorpusSize::Standard)
+}
+
+/// [`layered`] with a size tier.
+pub fn layered_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (lmin, lmax, wmin, wmax) = match size {
+        CorpusSize::Standard => (1, 5, 1, 6),
+        CorpusSize::Large => (6, 10, 40, 200),
+    };
+    let layers = gen::usize_in(rng, lmin, lmax);
     let mut b = DagBuilder::new("layered");
     let mut prev: Vec<TaskId> = Vec::new();
     let mut all: Vec<TaskId> = Vec::new();
     let mut edges: std::collections::HashSet<(TaskId, TaskId)> =
         std::collections::HashSet::new();
     for layer in 0..layers {
-        let width = gen::usize_in(rng, 1, 6);
+        let width = gen::usize_in(rng, wmin, wmax);
         let mut cur = Vec::new();
         for i in 0..width {
             let t = add_task(&mut b, rng, format!("t{layer}_{i}"));
@@ -89,7 +112,16 @@ pub fn layered(rng: &mut Rng) -> Dag {
 /// threshold, with chains of uneven depth under some children, all joined
 /// by one sink (a wide, partially-deep fan-in).
 pub fn skewed_fanout(rng: &mut Rng) -> Dag {
-    let width = gen::usize_in(rng, 8, 32);
+    skewed_fanout_sized(rng, CorpusSize::Standard)
+}
+
+/// [`skewed_fanout`] with a size tier.
+pub fn skewed_fanout_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (wmin, wmax) = match size {
+        CorpusSize::Standard => (8, 32),
+        CorpusSize::Large => (512, 2048),
+    };
+    let width = gen::usize_in(rng, wmin, wmax);
     let mut b = DagBuilder::new("skewed");
     let root = add_task(&mut b, rng, "root".into());
     maybe_input(&mut b, rng, root);
@@ -121,12 +153,21 @@ pub fn skewed_fanout(rng: &mut Rng) -> Dag {
 /// Stacked fork/join diamonds: top → w mids → bottom, repeated 1–5 times
 /// (fan-in ownership must hand over cleanly at every join).
 pub fn diamond_stack(rng: &mut Rng) -> Dag {
-    let depth = gen::usize_in(rng, 1, 5);
+    diamond_stack_sized(rng, CorpusSize::Standard)
+}
+
+/// [`diamond_stack`] with a size tier.
+pub fn diamond_stack_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (dmin, dmax, wmin, wmax) = match size {
+        CorpusSize::Standard => (1, 5, 2, 4),
+        CorpusSize::Large => (4, 8, 32, 96),
+    };
+    let depth = gen::usize_in(rng, dmin, dmax);
     let mut b = DagBuilder::new("diamonds");
     let mut top = add_task(&mut b, rng, "d0_top".into());
     maybe_input(&mut b, rng, top);
     for d in 0..depth {
-        let width = gen::usize_in(rng, 2, 4);
+        let width = gen::usize_in(rng, wmin, wmax);
         let bottom = add_task(&mut b, rng, format!("d{d}_bot"));
         for i in 0..width {
             let mid = add_task(&mut b, rng, format!("d{d}_m{i}"));
@@ -141,7 +182,16 @@ pub fn diamond_stack(rng: &mut Rng) -> Dag {
 /// A long chain (16–80 tasks): one static schedule, zero fan-out — the
 /// pure "becomes" path.
 pub fn long_chain(rng: &mut Rng) -> Dag {
-    let len = gen::usize_in(rng, 16, 80);
+    long_chain_sized(rng, CorpusSize::Standard)
+}
+
+/// [`long_chain`] with a size tier.
+pub fn long_chain_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (lmin, lmax) = match size {
+        CorpusSize::Standard => (16, 80),
+        CorpusSize::Large => (2_000, 6_000),
+    };
+    let len = gen::usize_in(rng, lmin, lmax);
     let mut b = DagBuilder::new("chain");
     let mut prev = add_task(&mut b, rng, "c0".into());
     maybe_input(&mut b, rng, prev);
@@ -156,7 +206,16 @@ pub fn long_chain(rng: &mut Rng) -> Dag {
 /// Multiple independent sinks: the job only completes when *every* sink
 /// publishes (the n_sinks bookkeeping the engines must get right).
 pub fn multi_sink(rng: &mut Rng) -> Dag {
-    let n_roots = gen::usize_in(rng, 2, 6);
+    multi_sink_sized(rng, CorpusSize::Standard)
+}
+
+/// [`multi_sink`] with a size tier.
+pub fn multi_sink_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (rmin, rmax) = match size {
+        CorpusSize::Standard => (2, 6),
+        CorpusSize::Large => (48, 128),
+    };
+    let n_roots = gen::usize_in(rng, rmin, rmax);
     let mut b = DagBuilder::new("multisink");
     let mut roots = Vec::with_capacity(n_roots);
     for i in 0..n_roots {
@@ -181,7 +240,16 @@ pub fn multi_sink(rng: &mut Rng) -> Dag {
 /// Wide fan-in: 4–24 parents feeding one child (atomic-counter stress),
 /// followed by a short tail chain.
 pub fn wide_fanin(rng: &mut Rng) -> Dag {
-    let width = gen::usize_in(rng, 4, 24);
+    wide_fanin_sized(rng, CorpusSize::Standard)
+}
+
+/// [`wide_fanin`] with a size tier.
+pub fn wide_fanin_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (wmin, wmax) = match size {
+        CorpusSize::Standard => (4, 24),
+        CorpusSize::Large => (1_024, 4_096),
+    };
+    let width = gen::usize_in(rng, wmin, wmax);
     let mut b = DagBuilder::new("fanin");
     let mut parents = Vec::with_capacity(width);
     for i in 0..width {
@@ -204,13 +272,18 @@ pub fn wide_fanin(rng: &mut Rng) -> Dag {
 
 /// Draw one DAG from the whole corpus, shape chosen by the seed.
 pub fn random_dag(rng: &mut Rng) -> Dag {
+    random_dag_sized(rng, CorpusSize::Standard)
+}
+
+/// Draw one DAG from the whole corpus at the given size tier.
+pub fn random_dag_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
     match rng.below(6) {
-        0 => layered(rng),
-        1 => skewed_fanout(rng),
-        2 => diamond_stack(rng),
-        3 => long_chain(rng),
-        4 => multi_sink(rng),
-        _ => wide_fanin(rng),
+        0 => layered_sized(rng, size),
+        1 => skewed_fanout_sized(rng, size),
+        2 => diamond_stack_sized(rng, size),
+        3 => long_chain_sized(rng, size),
+        4 => multi_sink_sized(rng, size),
+        _ => wide_fanin_sized(rng, size),
     }
 }
 
@@ -289,6 +362,47 @@ mod tests {
             }
         }
         assert!(zero && straddle && huge, "{zero} {straddle} {huge}");
+    }
+
+    #[test]
+    fn large_tier_scales_every_shape_up() {
+        let shapes: [fn(&mut Rng, CorpusSize) -> Dag; 6] = [
+            layered_sized,
+            skewed_fanout_sized,
+            diamond_stack_sized,
+            long_chain_sized,
+            multi_sink_sized,
+            wide_fanin_sized,
+        ];
+        for (i, f) in shapes.iter().enumerate() {
+            let small = f(&mut Rng::new(31 + i as u64), CorpusSize::Standard);
+            let large = f(&mut Rng::new(31 + i as u64), CorpusSize::Large);
+            // Guaranteed by the tier bounds: every large minimum exceeds
+            // twice the corresponding standard maximum, and no large
+            // shape is smaller than ~90 tasks.
+            assert!(
+                large.len() > 2 * small.len(),
+                "shape {i}: large {} vs standard {}",
+                large.len(),
+                small.len()
+            );
+            assert!(large.len() >= 90, "shape {i}: large only {}", large.len());
+            assert_eq!(large.topo_order().len(), large.len());
+        }
+    }
+
+    #[test]
+    fn standard_tier_is_the_default_corpus() {
+        // `random_dag` must keep drawing the exact DAGs the replay seeds
+        // printed by older sweeps refer to.
+        let mut a = Rng::new(0x5EED);
+        let mut b = Rng::new(0x5EED);
+        for _ in 0..10 {
+            let da = random_dag(&mut a);
+            let db = random_dag_sized(&mut b, CorpusSize::Standard);
+            assert_eq!(da.len(), db.len());
+            assert_eq!(da.n_edges(), db.n_edges());
+        }
     }
 
     #[test]

@@ -22,10 +22,10 @@ use crate::engine::EngineReport;
 pub fn stateless_bytes(dag: &Dag) -> (u64, u64) {
     let mut read = 0u64;
     let mut written = 0u64;
-    for t in dag.tasks() {
+    for (i, t) in dag.tasks().iter().enumerate() {
         written += t.out_bytes;
         read += t.input_bytes;
-        for &p in &t.parents {
+        for &p in dag.parents(i as u32) {
             read += dag.task(p).out_bytes;
         }
     }
@@ -62,7 +62,7 @@ pub fn check_exactly_once(dag: &Dag, rep: &EngineReport) -> Result<(), String> {
             return Err(format!(
                 "[{}] exactly-once: task {t} ({}) executed {c} times",
                 rep.engine,
-                dag.task(t as u32).name
+                dag.task_name(t as u32)
             ));
         }
     }

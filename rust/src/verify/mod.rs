@@ -9,10 +9,16 @@
 //! This is the regression gate for every scaling/perf refactor: it runs
 //! artifact-free under plain `cargo test -q` (`rust/tests/conformance.rs`)
 //! and interactively via `wukong verify [--engine ...] [--runs N]
-//! [--seed S]`. Engine panics (an engine's internal exactly-once assert,
-//! an index bug mid-refactor) are caught per run and reported as
-//! violations with the case seed, so one bad case never hides the rest
-//! of the matrix.
+//! [--seed S] [--threads N] [--large]`. Engine panics (an engine's
+//! internal exactly-once assert, an index bug mid-refactor) are caught
+//! per run and reported as violations with the case seed, so one bad
+//! case never hides the rest of the matrix.
+//!
+//! Cases are independent pure functions of their case seed, so the sweep
+//! fans out across [`crate::util::threadpool::ordered_map`] workers and
+//! aggregates in case-index order — the summary (cases, engine_runs,
+//! violations, verbose lines) is byte-identical to a `--threads 1` run
+//! (which additionally streams the verbose lines live).
 
 pub mod corpus;
 pub mod diff;
@@ -21,8 +27,11 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::config::Config;
 use crate::dag::Dag;
-use crate::engine::{engine_by_name, sim_engine_names, sim_registry, Engine, EngineReport};
+use crate::engine::{select_engines, Engine, EngineReport};
+use crate::util::threadpool::ordered_map;
 use crate::util::Rng;
+
+use self::corpus::CorpusSize;
 
 /// Options for one verify sweep (CLI flags map 1:1).
 #[derive(Debug, Clone)]
@@ -35,6 +44,10 @@ pub struct VerifyOptions {
     pub seed: u64,
     /// Print one line per case.
     pub verbose: bool,
+    /// Worker threads for the case sweep; 0 = one per available core.
+    pub threads: usize,
+    /// Use the large corpus size tier (scale smoke sweeps).
+    pub large: bool,
 }
 
 impl Default for VerifyOptions {
@@ -44,12 +57,14 @@ impl Default for VerifyOptions {
             runs: 25,
             seed: 7,
             verbose: false,
+            threads: 0,
+            large: false,
         }
     }
 }
 
 /// Aggregate result of a verify sweep.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct VerifySummary {
     /// DAG cases generated and executed.
     pub cases: u64,
@@ -67,6 +82,16 @@ impl VerifySummary {
     pub fn ok(&self) -> bool {
         self.violations.is_empty()
     }
+}
+
+/// One case's result, produced by a (possibly pooled) worker and merged
+/// in case-index order.
+struct CaseResult {
+    case_seed: u64,
+    total_tasks: u64,
+    engine_runs: u64,
+    violations: Vec<String>,
+    verbose_line: String,
 }
 
 /// The exhaustive Wukong policy-knob matrix swept per case: clustering ×
@@ -111,126 +136,175 @@ fn run_guarded(
     })
 }
 
-/// Resolve the engine selection against the sim registry.
-fn select_engines(names: &[String]) -> Result<Vec<Box<dyn Engine>>, String> {
-    if names.is_empty() {
-        return Ok(sim_registry());
+/// Derive the replayable seed of case `case` (same derivation as
+/// `util::prop::check`, so printed seeds replay).
+fn case_seed_of(base: u64, case: u64) -> u64 {
+    base.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(case)
+}
+
+/// Execute one case end to end: generate the DAG + config, sweep the
+/// engine × knob matrix, collect violations. Pure function of
+/// `(opts, case)` — the parallel sweep depends on it.
+fn run_case(opts: &VerifyOptions, case: u64) -> CaseResult {
+    let case_seed = case_seed_of(opts.seed, case);
+    let mut rng = Rng::new(case_seed);
+    let size = if opts.large {
+        CorpusSize::Large
+    } else {
+        CorpusSize::Standard
+    };
+    let dag = corpus::random_dag_sized(&mut rng, size);
+    let base = corpus::random_config(&mut rng);
+    let run_seed = rng.next_u64();
+    // Engine names were validated before the sweep started.
+    let engines = select_engines(&opts.engines).expect("engines pre-validated");
+
+    let mut engine_runs = 0u64;
+    let mut violations = Vec::new();
+    for engine in &engines {
+        // Wukong sweeps the full knob matrix; other engines ignore
+        // the Wukong knobs, so one base config suffices.
+        let configs = if engine.caps().decentralized {
+            knob_matrix(&base)
+        } else {
+            vec![("base".to_string(), base.clone())]
+        };
+        for (label, cfg) in &configs {
+            engine_runs += 1;
+            let rep = match run_guarded(engine.as_ref(), &dag, cfg, run_seed) {
+                Ok(r) => r,
+                Err(v) => {
+                    violations.push(format!("{v} ({label})"));
+                    continue;
+                }
+            };
+            engine_runs += 1; // determinism re-run
+            let rerun = match run_guarded(engine.as_ref(), &dag, cfg, run_seed)
+            {
+                Ok(r) => r,
+                Err(v) => {
+                    violations.push(format!("{v} ({label}, rerun)"));
+                    continue;
+                }
+            };
+
+            for check in [
+                diff::check_completion(&dag, &rep),
+                diff::check_exactly_once(&dag, &rep),
+                diff::check_determinism(&rep, &rerun),
+            ] {
+                if let Err(v) = check {
+                    violations.push(format!("{v} ({label})"));
+                }
+            }
+            if engine.caps().meters_kvs {
+                // Locality ordering: metered engines never move more
+                // bytes than the stateless closed form; stateful ones
+                // (Wukong) are the paper's headline ≤ claim, and the
+                // stateless baselines must *equal* the closed form.
+                let check = if engine.caps().stateful_executors {
+                    diff::check_locality(&dag, &rep)
+                } else {
+                    diff::check_stateless_model(&dag, &rep)
+                };
+                if let Err(v) = check {
+                    violations.push(format!("{v} ({label})"));
+                }
+            }
+        }
     }
-    names
-        .iter()
-        .map(|n| {
-            engine_by_name(n).ok_or_else(|| {
-                format!(
-                    "unknown engine {n:?} (known: {})",
-                    sim_engine_names().join(" ")
-                )
-            })
-        })
-        .collect()
+
+    let verbose_line = format!(
+        "case {case:>3}  seed {case_seed:#018x}  dag {:<10} {:>3} tasks \
+         {:>3} edges  {}",
+        dag.name,
+        dag.len(),
+        dag.n_edges(),
+        if violations.is_empty() {
+            "ok".to_string()
+        } else {
+            format!("{} VIOLATIONS", violations.len())
+        }
+    );
+    CaseResult {
+        case_seed,
+        total_tasks: dag.len() as u64,
+        engine_runs,
+        violations,
+        verbose_line,
+    }
+}
+
+/// `run_case` with panics (outside the guarded engine runs — e.g. a
+/// corpus-generator bug) converted into a reported violation, so a
+/// pooled worker never dies holding the join counter.
+fn run_case_guarded(opts: &VerifyOptions, case: u64) -> CaseResult {
+    let case_seed = case_seed_of(opts.seed, case);
+    catch_unwind(AssertUnwindSafe(|| run_case(opts, case))).unwrap_or_else(
+        |err| CaseResult {
+            case_seed,
+            total_tasks: 0,
+            engine_runs: 0,
+            violations: vec![format!(
+                "case worker panicked: {}",
+                crate::util::prop::panic_message(err.as_ref())
+            )],
+            verbose_line: format!(
+                "case {case:>3}  seed {case_seed:#018x}  PANICKED"
+            ),
+        },
+    )
 }
 
 /// Execute the differential conformance sweep.
 ///
 /// Errors only on invalid options (unknown engine name); invariant
 /// violations are *returned in the summary*, not errors, so callers can
-/// report all of them.
+/// report all of them. Cases run across a thread pool (`opts.threads`,
+/// 0 = auto); aggregation is case-index-ordered, so the summary is
+/// byte-identical regardless of thread count. `--verbose` lines stream
+/// live under `--threads 1` (inline execution) and print in case order
+/// after the pooled sweep otherwise.
 pub fn run_verify(opts: &VerifyOptions) -> Result<VerifySummary, String> {
+    // Validate the selection up front (workers re-resolve by name).
     let engines = select_engines(&opts.engines)?;
+    let engine_names: Vec<String> =
+        engines.iter().map(|e| e.name().to_string()).collect();
+    drop(engines);
+
+    // `ordered_map` runs inline (streaming the per-case progress lines
+    // as they happen) for threads <= 1, pooled otherwise.
+    let streaming = opts.verbose && opts.threads == 1;
+    let worker_opts = opts.clone();
+    let results: Vec<CaseResult> =
+        ordered_map(opts.runs as usize, opts.threads, move |case| {
+            let r = run_case_guarded(&worker_opts, case as u64);
+            if streaming {
+                println!("{}", r.verbose_line);
+            }
+            r
+        });
+
+    // Deterministic, case-index-ordered aggregation.
     let mut summary = VerifySummary {
         cases: 0,
-        engines: engines.iter().map(|e| e.name().to_string()).collect(),
+        engines: engine_names,
         engine_runs: 0,
         total_tasks: 0,
         violations: Vec::new(),
     };
-
-    for case in 0..opts.runs {
-        // Same derivation as util::prop::check, so failing cases can be
-        // replayed with the printed seed.
-        let case_seed = opts
-            .seed
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(case);
-        let mut rng = Rng::new(case_seed);
-        let dag = corpus::random_dag(&mut rng);
-        let base = corpus::random_config(&mut rng);
-        let run_seed = rng.next_u64();
+    for (case, r) in results.into_iter().enumerate() {
         summary.cases += 1;
-        summary.total_tasks += dag.len() as u64;
-
-        let mut case_violations = Vec::new();
-        for engine in &engines {
-            // Wukong sweeps the full knob matrix; other engines ignore
-            // the Wukong knobs, so one base config suffices.
-            let configs = if engine.caps().decentralized {
-                knob_matrix(&base)
-            } else {
-                vec![("base".to_string(), base.clone())]
-            };
-            for (label, cfg) in &configs {
-                summary.engine_runs += 1;
-                let rep = match run_guarded(engine.as_ref(), &dag, cfg, run_seed)
-                {
-                    Ok(r) => r,
-                    Err(v) => {
-                        case_violations.push(format!("{v} ({label})"));
-                        continue;
-                    }
-                };
-                summary.engine_runs += 1; // determinism re-run
-                let rerun =
-                    match run_guarded(engine.as_ref(), &dag, cfg, run_seed) {
-                        Ok(r) => r,
-                        Err(v) => {
-                            case_violations.push(format!("{v} ({label}, rerun)"));
-                            continue;
-                        }
-                    };
-
-                for check in [
-                    diff::check_completion(&dag, &rep),
-                    diff::check_exactly_once(&dag, &rep),
-                    diff::check_determinism(&rep, &rerun),
-                ] {
-                    if let Err(v) = check {
-                        case_violations.push(format!("{v} ({label})"));
-                    }
-                }
-                if engine.caps().meters_kvs {
-                    // Locality ordering: metered engines never move more
-                    // bytes than the stateless closed form; stateful ones
-                    // (Wukong) are the paper's headline ≤ claim, and the
-                    // stateless baselines must *equal* the closed form.
-                    let check = if engine.caps().stateful_executors {
-                        diff::check_locality(&dag, &rep)
-                    } else {
-                        diff::check_stateless_model(&dag, &rep)
-                    };
-                    if let Err(v) = check {
-                        case_violations.push(format!("{v} ({label})"));
-                    }
-                }
-            }
+        summary.engine_runs += r.engine_runs;
+        summary.total_tasks += r.total_tasks;
+        if opts.verbose && !streaming {
+            println!("{}", r.verbose_line);
         }
-
-        if opts.verbose {
-            println!(
-                "case {case:>3}  seed {case_seed:#018x}  dag {:<10} {:>3} tasks \
-                 {:>3} edges  {}",
-                dag.name,
-                dag.len(),
-                dag.n_edges(),
-                if case_violations.is_empty() {
-                    "ok".to_string()
-                } else {
-                    format!("{} VIOLATIONS", case_violations.len())
-                }
-            );
-        }
-        for v in case_violations {
-            summary
-                .violations
-                .push(format!("case {case} (replay seed {case_seed:#x}): {v}"));
+        for v in r.violations {
+            summary.violations.push(format!(
+                "case {case} (replay seed {:#x}): {v}",
+                r.case_seed
+            ));
         }
     }
     Ok(summary)
@@ -253,6 +327,26 @@ mod tests {
         assert!(s.violations.is_empty(), "{:#?}", s.violations);
         // wukong knob matrix (8×2) + 4 baselines ×2, per case
         assert_eq!(s.engine_runs, 4 * (16 + 8));
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree_byte_for_byte() {
+        let base = VerifyOptions {
+            runs: 6,
+            seed: 23,
+            ..VerifyOptions::default()
+        };
+        let seq = run_verify(&VerifyOptions {
+            threads: 1,
+            ..base.clone()
+        })
+        .unwrap();
+        let par = run_verify(&VerifyOptions {
+            threads: 4,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(seq, par);
     }
 
     #[test]

@@ -62,7 +62,7 @@ mod tests {
         let dag = b.build().unwrap();
         // 8 leaves + 7 internal nodes
         assert_eq!(dag.len(), 15);
-        assert_eq!(dag.sinks(), vec![root]);
+        assert_eq!(dag.sinks().to_vec(), vec![root]);
         assert_eq!(dag.leaves().len(), 8);
     }
 
@@ -75,6 +75,6 @@ mod tests {
         let root = reduction_tree(&mut b, leaves, OpKind::BlockAdd, 1.0, 8, "r");
         let dag = b.build().unwrap();
         assert_eq!(dag.len(), 9); // 5 + 4 internal
-        assert_eq!(dag.sinks(), vec![root]);
+        assert_eq!(dag.sinks().to_vec(), vec![root]);
     }
 }

@@ -113,12 +113,10 @@ mod tests {
             iters: 2,
         };
         let d = dag(p);
-        let u0 = d
-            .tasks()
-            .iter()
-            .position(|t| t.name == "update_0")
-            .unwrap() as u32;
-        assert_eq!(d.task(u0).children.len(), 4);
+        let u0 = (0..d.len() as u32)
+            .find(|&t| d.task_name(t) == "update_0")
+            .unwrap();
+        assert_eq!(d.children(u0).len(), 4);
     }
 
     #[test]

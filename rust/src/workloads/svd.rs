@@ -294,12 +294,10 @@ mod tests {
             block_rows: 1024,
         };
         let d = svd1(p);
-        let finish = d
-            .tasks()
-            .iter()
-            .position(|t| t.name == "svd1_finish")
+        let finish = (0..d.len() as u32)
+            .find(|&t| d.task_name(t) == "svd1_finish")
             .unwrap();
-        assert_eq!(d.task(finish as u32).children.len(), 4);
+        assert_eq!(d.children(finish).len(), 4);
     }
 
     #[test]
@@ -321,7 +319,8 @@ mod tests {
     fn svd2_b_partials_are_large() {
         let p = Svd2Params::paper(50);
         let d = svd2(p);
-        let bpart = d.tasks().iter().find(|t| t.name == "b_0").unwrap();
+        let b0 = (0..d.len() as u32).find(|&t| d.task_name(t) == "b_0").unwrap();
+        let bpart = d.task(b0);
         // 128 × 50 000 × 4 B ≈ 25.6 MB
         assert!(bpart.out_bytes > 20_000_000);
     }

@@ -118,7 +118,7 @@ mod tests {
     #[test]
     fn leaves_read_external_input() {
         let d = dag(TrParams::default());
-        for &l in &d.leaves() {
+        for &l in d.leaves() {
             assert_eq!(d.task(l).input_bytes, 2 * ELEM);
         }
     }

@@ -266,9 +266,9 @@ mod tests {
     #[test]
     fn every_apply_depends_on_path_products() {
         let d = dag(params(8, true));
-        for t in d.tasks() {
-            if t.name.starts_with("applyq_") {
-                assert_eq!(t.parents.len(), 2, "{}", t.name);
+        for t in 0..d.len() as u32 {
+            if d.task_name(t).starts_with("applyq_") {
+                assert_eq!(d.parents(t).len(), 2, "{}", d.task_name(t));
             }
         }
     }

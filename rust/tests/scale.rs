@@ -1,0 +1,80 @@
+//! Scale smoke tests (tier-1, artifact-free): a ~100k-task DAG completes
+//! exactly-once on Wukong and on a centralized baseline, and DES event
+//! counts grow linearly — not quadratically — with task count. This is
+//! the `cargo test`-runnable guard for the million-task regimes `wukong
+//! bench` sweeps (which are release-build only).
+
+use wukong::baselines::run_numpywren_full;
+use wukong::config::Config;
+use wukong::coordinator::run_wukong;
+use wukong::workloads::micro;
+
+fn scale_cfg() -> Config {
+    let mut cfg = Config::default();
+    // Lift the Lambda cap so the 100k fan-out measures the engine, not
+    // admission-throttle modeling.
+    cfg.lambda.concurrency_limit = 200_000;
+    cfg
+}
+
+#[test]
+fn wukong_100k_task_fanout_completes_exactly_once() {
+    let dag = micro::serverless(100_000, 0);
+    let r = run_wukong(&dag, &scale_cfg(), 1);
+    assert_eq!(r.metrics.tasks_executed, 100_000);
+    assert_eq!(r.metrics.per_task_exec.len(), 100_000);
+    assert!(r.metrics.per_task_exec.iter().all(|&c| c == 1));
+    assert_eq!(r.metrics.executors_used, 100_000);
+    assert!(r.sim_events >= 100_000);
+}
+
+#[test]
+fn numpywren_100k_task_fanout_completes_exactly_once() {
+    let dag = micro::serverless(100_000, 0);
+    let mut cfg = scale_cfg();
+    cfg.numpywren.n_workers = 512;
+    let r = run_numpywren_full(&dag, &cfg, 1);
+    assert_eq!(r.metrics.tasks_executed, 100_000);
+    assert!(r.metrics.per_task_exec.iter().all(|&c| c == 1));
+    assert!(r.sim_events >= 100_000);
+}
+
+#[test]
+fn wukong_sim_events_grow_linearly_with_task_count() {
+    // 4x the tasks must cost ~4x the events (linear); a quadratic hot
+    // path (e.g. per-dispatch child-list clones feeding re-scans) would
+    // show ~16x. Allow 2x slack over linear for constant terms.
+    let cfg = scale_cfg();
+    let small = run_wukong(&micro::serverless(25_000, 0), &cfg, 1);
+    let large = run_wukong(&micro::serverless(100_000, 0), &cfg, 1);
+    assert_eq!(small.metrics.tasks_executed, 25_000);
+    assert_eq!(large.metrics.tasks_executed, 100_000);
+    let ratio = large.sim_events as f64 / small.sim_events as f64;
+    assert!(
+        ratio < 8.0,
+        "events grew superlinearly: {} -> {} ({ratio:.2}x for 4x tasks)",
+        small.sim_events,
+        large.sim_events
+    );
+    assert!(ratio > 2.0, "suspiciously sublinear: {ratio:.2}x");
+}
+
+#[test]
+fn wukong_long_chain_events_stay_linear() {
+    // The pure "becomes" path: one executor, zero invocations — events
+    // must be a small constant per task.
+    let cfg = Config::default();
+    let dag = micro::chains(micro::MicroParams {
+        n_chains: 1,
+        chain_len: 50_000,
+        task_dur: 0,
+    });
+    let r = run_wukong(&dag, &cfg, 1);
+    assert_eq!(r.metrics.tasks_executed, 50_000);
+    assert_eq!(r.metrics.executors_used, 1);
+    assert!(
+        r.sim_events < 10 * 50_000,
+        "chain events blew up: {}",
+        r.sim_events
+    );
+}
