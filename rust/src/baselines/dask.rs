@@ -16,7 +16,8 @@ use std::collections::VecDeque;
 
 use crate::config::{Config, DaskConfig};
 use crate::dag::{Dag, TaskId};
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, TaskOutcome};
+use crate::platform::faults::{propagate_failures, FaultStream};
 use crate::sim::{secs, to_secs, FifoResource, Handler, MultiResource, Sim, Time};
 
 use super::BaselineReport;
@@ -56,6 +57,17 @@ struct World<'a> {
     done: u64,
     finish: Option<Time>,
     busy: crate::metrics::Timeline,
+    /// Dedicated fault RNG stream (§3.6); Dask has no other randomness,
+    /// so fault-free runs stay seed-independent and bit-identical.
+    faults: FaultStream,
+    /// Per-task attempt counters (failed executions + the effective one).
+    attempts: Vec<u32>,
+    /// Failed attempts so far per task (retry-budget bookkeeping).
+    fail_count: Vec<u32>,
+    /// Live terminal outcomes; failures cascade in as budgets exhaust.
+    outcome: Vec<TaskOutcome>,
+    /// Tasks resolved Failed so far; termination is `done + n_failed == n`.
+    n_failed: u64,
 }
 
 impl Handler for World<'_> {
@@ -123,6 +135,30 @@ fn schedule_next(w: &mut World<'_>, sim: &mut Sim<Ev>) {
 }
 
 fn exec_on_worker(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
+    w.attempts[t as usize] += 1;
+    if w.faults.attempt_fails() {
+        // The worker process died on this task (§3.6): the scheduler
+        // hears about it (one message), re-queues the task while its
+        // retry budget lasts, else reports it — and everything
+        // downstream — failed.
+        let attempt = w.fail_count[t as usize];
+        w.fail_count[t as usize] += 1;
+        let (_, end) =
+            w.sched.acquire(sim.now(), secs(w.dcfg.effective_msg_s()));
+        w.metrics.breakdown.publish_s += to_secs(end - sim.now());
+        if w.cfg.faults.can_retry(attempt) {
+            w.ready.push_back(t);
+            sim.at(end, Ev::Schedule);
+        } else {
+            w.metrics.failed_executors += 1;
+            let dag = w.dag;
+            w.n_failed += propagate_failures(dag, &[t], &mut w.outcome);
+            if w.done + w.n_failed == dag.len() as u64 {
+                w.finish = Some(end);
+            }
+        }
+        return;
+    }
     // Fetch missing inputs peer-to-peer (sequential transfers).
     let dag = w.dag;
     let mut cursor = sim.now();
@@ -179,7 +215,7 @@ fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
             newly = true;
         }
     }
-    if w.done == w.dag.len() as u64 {
+    if w.done + w.n_failed == w.dag.len() as u64 {
         w.finish = Some(end);
     } else if newly {
         sim.at(end, Ev::Schedule);
@@ -191,7 +227,7 @@ pub fn run_dask_full(
     dag: &Dag,
     cfg: &Config,
     dcfg: &DaskConfig,
-    _seed: u64,
+    seed: u64,
 ) -> BaselineReport {
     let n = dag.len();
     let mut w = World {
@@ -216,6 +252,14 @@ pub fn run_dask_full(
         done: 0,
         finish: None,
         busy: crate::metrics::Timeline::default(),
+        // The seed feeds *only* the fault stream: fault-free Dask runs
+        // stay identical across seeds (the engine is otherwise
+        // deterministic by construction).
+        faults: FaultStream::for_run(cfg.faults, seed),
+        attempts: vec![0; n],
+        fail_count: vec![0; n],
+        outcome: vec![TaskOutcome::Completed; n],
+        n_failed: 0,
     };
     let mut sim: Sim<Ev> = Sim::new();
     // Kick the scheduler once per initially-ready task.
@@ -228,6 +272,9 @@ pub fn run_dask_full(
     let makespan = to_secs(w.finish.unwrap_or(sim.now()));
     w.metrics.makespan_s = makespan;
     w.metrics.per_task_exec = w.executed.clone();
+    w.metrics.failed_tasks = w.n_failed;
+    w.metrics.per_task_attempts = w.attempts.clone();
+    w.metrics.per_task_outcome = w.outcome.clone();
     w.metrics.invocations = w.metrics.tasks_executed; // dispatches
     let used = w.workers.iter().filter(|wk| wk.used).count();
     w.metrics.executors_used = used as u64;
@@ -319,5 +366,42 @@ mod tests {
         assert_eq!(r.metrics.tasks_executed, 16);
         assert!(r.sim_events > 0);
         assert!(r.peak_pending > 0);
+    }
+
+    #[test]
+    fn zero_rate_runs_stay_seed_independent_and_identical() {
+        let dag = micro::strong(40, 8, secs(0.01));
+        let cfg = Config::default();
+        let a = run_dask_full(&dag, &cfg, &DaskConfig::workers_125(), 1);
+        let b = run_dask_full(&dag, &cfg, &DaskConfig::workers_125(), 99);
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.sim_events, b.sim_events);
+    }
+
+    #[test]
+    fn exhausted_budget_reports_every_task_failed() {
+        use crate::platform::faults::FaultPlan;
+        let mut cfg = Config::default();
+        cfg.faults = FaultPlan::with_retries(1.0, 0);
+        let dag = micro::serverless(12, secs(0.01));
+        let m = run_dask(&dag, &cfg, &DaskConfig::workers_125(), 3);
+        assert_eq!(m.tasks_executed, 0);
+        assert_eq!(m.failed_tasks, 12);
+        assert!(m.per_task_attempts.iter().all(|&a| a == 1));
+        assert!(m
+            .per_task_outcome
+            .iter()
+            .all(|&o| o == TaskOutcome::Failed));
+    }
+
+    #[test]
+    fn fault_outcomes_partition_the_dag() {
+        use crate::platform::faults::FaultPlan;
+        let mut cfg = Config::default();
+        cfg.faults = FaultPlan::with_failure_rate(0.3);
+        let dag = micro::strong(40, 8, secs(0.01));
+        let m = run_dask(&dag, &cfg, &DaskConfig::workers_1000(), 7);
+        assert_eq!(m.tasks_executed + m.failed_tasks, dag.len() as u64);
+        assert!(m.per_task_attempts.iter().all(|&a| a <= 3));
     }
 }

@@ -16,7 +16,8 @@ use std::collections::VecDeque;
 
 use crate::config::Config;
 use crate::dag::{Dag, TaskId, TaskNode};
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, TaskOutcome};
+use crate::platform::faults::{propagate_failures, FaultStream};
 use crate::platform::LambdaService;
 use crate::sim::{secs, to_secs, FifoResource, Handler, MultiResource, Sim, Time};
 use crate::storage::KvsModel;
@@ -56,6 +57,18 @@ struct World<'a> {
     lambda: LambdaService,
     metrics: RunMetrics,
     finish: Option<Time>,
+    /// Dedicated fault RNG stream (§3.6): failure draws never touch the
+    /// main run RNG, so `p_fail = 0` runs are bit-identical to fault-free.
+    faults: FaultStream,
+    /// Per-task attempt counters (failed executions + the effective one).
+    attempts: Vec<u32>,
+    /// Failed attempts so far per task (retry-budget bookkeeping).
+    fail_count: Vec<u32>,
+    /// Live terminal outcomes; failures cascade in as budgets exhaust.
+    outcome: Vec<TaskOutcome>,
+    /// Tasks resolved Failed so far (direct + cascaded); termination is
+    /// `done + n_failed == dag.len()` — failed jobs must still drain.
+    n_failed: u64,
 }
 
 impl Handler for World<'_> {
@@ -96,7 +109,7 @@ impl World<'_> {
 
 /// Worker polls the queue for work.
 fn poll(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize) {
-    if w.done == w.dag.len() as u64 {
+    if w.done + w.n_failed == w.dag.len() as u64 {
         retire(w, sim, wid);
         return;
     }
@@ -118,8 +131,35 @@ fn poll(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize) {
     }
 }
 
+/// A worker's execution attempt died (§3.6): the scheduler learns via
+/// the queue service, re-enqueues the task while its retry budget lasts
+/// (else reports the task — and its reachable set — failed), and the
+/// platform replaces the crashed worker.
+fn fail_attempt(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
+    let attempt = w.fail_count[t as usize];
+    w.fail_count[t as usize] += 1;
+    let t_op = w.queue_op(sim.now());
+    w.metrics.breakdown.publish_s += to_secs(t_op - sim.now());
+    if w.faults.plan().can_retry(attempt) {
+        w.queue.push_back(t);
+    } else {
+        w.metrics.failed_executors += 1;
+        let dag = w.dag;
+        w.n_failed += propagate_failures(dag, &[t], &mut w.outcome);
+        if w.done + w.n_failed == dag.len() as u64 {
+            w.finish = Some(t_op);
+        }
+    }
+    respawn(w, sim, wid);
+}
+
 /// Stateless task execution: read everything, compute, write everything.
 fn execute(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
+    w.attempts[t as usize] += 1;
+    if w.faults.attempt_fails() {
+        fail_attempt(w, sim, wid, t);
+        return;
+    }
     let dag = w.dag;
     let mut cursor = sim.now();
     let net_bw = w.cfg.lambda.net_bw;
@@ -175,7 +215,7 @@ fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
             w.queue.push_back(c);
         }
     }
-    if w.done == w.dag.len() as u64 {
+    if w.done + w.n_failed == w.dag.len() as u64 {
         w.finish = Some(t_op);
     }
     sim.at(t_op, Ev::Poll(wid));
@@ -228,6 +268,11 @@ pub fn run_numpywren_n(
         lambda: LambdaService::new(cfg.lambda, rng.fork(1)),
         metrics: RunMetrics::default(),
         finish: None,
+        faults: FaultStream::for_run(cfg.faults, seed),
+        attempts: vec![0; n],
+        fail_count: vec![0; n],
+        outcome: vec![TaskOutcome::Completed; n],
+        n_failed: 0,
         cfg,
     };
     let mut sim: Sim<Ev> = Sim::new();
@@ -252,6 +297,9 @@ pub fn run_numpywren_n(
     let makespan = to_secs(w.finish.unwrap_or(sim.now()));
     w.metrics.makespan_s = makespan;
     w.metrics.per_task_exec = w.executed.clone();
+    w.metrics.failed_tasks = w.n_failed;
+    w.metrics.per_task_attempts = w.attempts.clone();
+    w.metrics.per_task_outcome = w.outcome.clone();
     w.metrics.kvs = w.kvs.metrics;
     w.metrics.invocations = w.lambda.total_invocations();
     w.metrics.peak_concurrency = w.lambda.peak_active();
@@ -354,5 +402,47 @@ mod tests {
         let b = run_numpywren_n(&dag, &Config::default(), 7, 5);
         assert_eq!(a.metrics.makespan_s, b.metrics.makespan_s);
         assert_eq!(a.sim_events, b.sim_events);
+    }
+
+    #[test]
+    fn zero_rate_plan_is_bit_identical_to_fault_free() {
+        use crate::platform::faults::FaultPlan;
+        let dag = micro::strong(60, 6, secs(0.01));
+        let mut zero = Config::default();
+        zero.faults = FaultPlan::with_retries(0.0, 0);
+        let a = run_numpywren_full(&dag, &Config::default(), 9);
+        let b = run_numpywren_full(&dag, &zero, 9);
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.sim_events, b.sim_events);
+    }
+
+    #[test]
+    fn exhausted_budget_reports_every_task_failed() {
+        use crate::platform::faults::FaultPlan;
+        let dag = micro::serverless(8, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 3;
+        cfg.faults = FaultPlan::with_retries(1.0, 0);
+        let m = run_numpywren(&dag, &cfg, 6);
+        assert_eq!(m.tasks_executed, 0);
+        assert_eq!(m.failed_tasks, 8);
+        assert_eq!(m.failed_executors, 8);
+        assert!(m.per_task_attempts.iter().all(|&a| a == 1));
+        assert!(m
+            .per_task_outcome
+            .iter()
+            .all(|&o| o == TaskOutcome::Failed));
+    }
+
+    #[test]
+    fn fault_outcomes_partition_the_dag() {
+        use crate::platform::faults::FaultPlan;
+        let dag = micro::strong(40, 8, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 6;
+        cfg.faults = FaultPlan::with_failure_rate(0.2);
+        let m = run_numpywren(&dag, &cfg, 11);
+        assert_eq!(m.tasks_executed + m.failed_tasks, dag.len() as u64);
+        assert!(m.per_task_attempts.iter().all(|&a| a <= 3));
     }
 }

@@ -75,7 +75,7 @@ USAGE:
   wukong run <workload> [--engine <name>] [--set a.b=c ...]
                                                        run one workload on the simulator
   wukong verify [--engine a,b,...] [--runs N] [--seed S] [--threads N]
-                [--large] [--verbose]
+                [--large] [--verbose] [--faults]
                                                        cross-engine differential conformance:
                                                        sweeps generated DAGs (incl. irregular
                                                        shapes) through every registered engine
@@ -83,6 +83,11 @@ USAGE:
                                                        exactly-once, completion, per-seed
                                                        determinism and the locality ordering
                                                        (Wukong KVS bytes <= stateless bytes);
+                                                       --faults adds the Sec 3.6 fault axis
+                                                       (p_fail x max_retries per engine):
+                                                       attempts <= 1+max_retries, every task
+                                                       completed xor reported-failed, and
+                                                       p_fail=0 bit-identical to fault-free;
                                                        cases fan out across --threads workers
                                                        with case-ordered (byte-identical)
                                                        aggregation; --large switches to the
@@ -115,6 +120,8 @@ OPTIONS:
   --out <file>      output path (bench JSON)
   --quick           shrunk problem sizes (tests/smoke/bench)
   --large           scale-tier corpus (verify)
+  --faults          sweep the fault axis (verify; see faults.p_fail /
+                    faults.max_retries under --set for single runs)
   --verbose         per-case lines (verify; streamed live with
                     --threads 1, printed in case order otherwise)
 ";

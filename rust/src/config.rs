@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::platform::faults::FaultPlan;
 use crate::sim::{secs, Time};
 
 /// AWS-Lambda-like platform model parameters.
@@ -276,6 +277,10 @@ pub struct Config {
     pub wukong: WukongConfig,
     pub numpywren: NumpywrenConfig,
     pub compute: ComputeConfig,
+    /// Fault-injection plan (§3.6): every sim engine consumes it. The
+    /// default injects nothing, and draws come from a dedicated RNG
+    /// stream, so fault-free runs are unaffected by its presence.
+    pub faults: FaultPlan,
     /// Simulation seed (same seed + config ⇒ identical trace).
     pub seed: u64,
     /// Repetitions per data point (paper averages ten runs).
@@ -290,6 +295,7 @@ impl Default for Config {
             wukong: WukongConfig::default(),
             numpywren: NumpywrenConfig::default(),
             compute: ComputeConfig::default(),
+            faults: FaultPlan::default(),
             seed: 42,
             runs: 3,
         }
@@ -383,6 +389,8 @@ impl Config {
             }
             "compute.task_overhead_s" => self.compute.task_overhead_s = f()?,
             "compute.serde_bw" => self.compute.serde_bw = f()?,
+            "faults.p_fail" => self.faults.p_fail = f()?,
+            "faults.max_retries" => self.faults.max_retries = f()? as u32,
             other => return Err(format!("unknown config key {other:?}")),
         }
         Ok(())
@@ -450,9 +458,12 @@ mod tests {
         c.set("lambda.invoke_latency_s", "0.1").unwrap();
         c.set("storage.mode", "s3").unwrap();
         c.set("wukong.use_clustering", "false").unwrap();
+        c.set("faults.p_fail", "0.25").unwrap();
+        c.set("faults.max_retries", "1").unwrap();
         assert_eq!(c.lambda.invoke_latency_s, 0.1);
         assert_eq!(c.storage.mode, KvsMode::S3);
         assert!(!c.wukong.use_clustering);
+        assert_eq!(c.faults, FaultPlan::with_retries(0.25, 1));
     }
 
     #[test]

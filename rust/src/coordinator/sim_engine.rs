@@ -21,8 +21,8 @@ use std::collections::{HashSet, VecDeque};
 
 use crate::config::Config;
 use crate::dag::{Dag, TaskId, TaskNode};
-use crate::metrics::RunMetrics;
-use crate::platform::faults::FaultPlan;
+use crate::metrics::{RunMetrics, TaskOutcome};
+use crate::platform::faults::{propagate_failures, FaultPlan, FaultStream};
 use crate::platform::LambdaService;
 use crate::sim::{secs, to_secs, FifoResource, Handler, Sim, Time};
 use crate::storage::{InvokerPool, KvsModel, MdsModel};
@@ -96,8 +96,14 @@ struct World<'a> {
     sinks_done: usize,
     n_sinks: usize,
     finish: Option<Time>,
-    rng: Rng,
-    faults: FaultPlan,
+    /// Dedicated fault RNG stream: failure draws never touch the main
+    /// run RNG, so `p_fail = 0` runs are bit-identical to fault-free.
+    faults: FaultStream,
+    /// Per-task attempt counters: failed begins + the effective run.
+    attempts: Vec<u32>,
+    /// Tasks whose own retry budget was exhausted (§3.6 failure report);
+    /// everything downstream cascades to `Failed` at finalize.
+    direct_failed: Vec<TaskId>,
 }
 
 impl Handler for World<'_> {
@@ -200,18 +206,18 @@ fn begin(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
     w.metrics.timeline.add(sim.now(), 1);
     // Fault injection: a failing attempt dies immediately after start and
     // is retried by the platform (§3.6), up to the retry budget.
-    let plan = w.faults;
-    let fails = plan.p_fail > 0.0 && plan.attempt_fails(&mut w.rng);
-    if fails {
+    if w.faults.attempt_fails() {
         let attempt = w.execs[eid].attempt;
         let task = w.execs[eid].first_task;
+        w.attempts[task as usize] += 1;
         let inline: Vec<TaskId> = w.execs[eid].cache.iter().copied().collect();
         end_exec(w, sim, eid);
-        if w.faults.can_retry(attempt) {
+        if w.faults.plan().can_retry(attempt) {
             let inv = w.lambda.invoke(sim.now());
             spawn(w, sim, task, inline, inv.start_at, attempt + 1);
         } else {
             w.metrics.failed_executors += 1; // job is failed (§3.6)
+            w.direct_failed.push(task);
         }
         return;
     }
@@ -232,6 +238,7 @@ fn process(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
         return;
     };
     w.execs[eid].idle = false;
+    w.attempts[t as usize] += 1;
 
     // Fetch phase: sequential reads of non-resident parent outputs.
     // (`dag` is an independent shared borrow: the CSR parent slice is
@@ -527,9 +534,10 @@ fn end_exec(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
     w.lambda.release();
 }
 
-/// Run a full Wukong job on the simulator.
+/// Run a full Wukong job on the simulator, with `cfg.faults` as the
+/// fault plan (the default plan injects nothing).
 pub fn run_wukong(dag: &Dag, cfg: &Config, seed: u64) -> WukongReport {
-    run_wukong_faulty(dag, cfg, seed, FaultPlan::default())
+    run_wukong_faulty(dag, cfg, seed, cfg.faults)
 }
 
 /// Run with fault injection (§3.6 retry contract).
@@ -565,8 +573,9 @@ pub fn run_wukong_faulty(
         sinks_done: 0,
         n_sinks,
         finish: None,
-        rng: rng.fork(2),
-        faults,
+        faults: FaultStream::for_run(faults, seed),
+        attempts: vec![0; n],
+        direct_failed: Vec::new(),
         cfg,
     };
     let mut sim: Sim<Ev> = Sim::new();
@@ -588,6 +597,14 @@ pub fn run_wukong_faulty(
     let makespan = to_secs(w.finish.unwrap_or(sim.now()));
     w.metrics.makespan_s = makespan;
     w.metrics.per_task_exec = w.executed.clone();
+    // Terminal outcomes: directly-failed tasks plus their reachable sets
+    // resolve to Failed; everything else completed (cross-checked against
+    // per_task_exec by `wukong verify --faults`).
+    let mut outcome = vec![TaskOutcome::Completed; n];
+    w.metrics.failed_tasks =
+        propagate_failures(dag, &w.direct_failed, &mut outcome);
+    w.metrics.per_task_attempts = w.attempts.clone();
+    w.metrics.per_task_outcome = outcome;
     w.metrics.kvs = w.kvs.metrics;
     w.metrics.invocations = w.lambda.total_invocations();
     w.metrics.peak_concurrency = w.lambda.peak_active();
@@ -700,5 +717,55 @@ mod tests {
             FaultPlan::with_failure_rate(0.3),
         );
         assert_eq!(r.metrics.tasks_executed, 4);
+        assert_eq!(r.metrics.failed_tasks, 0);
+        assert!(r
+            .metrics
+            .per_task_outcome
+            .iter()
+            .all(|&o| o == TaskOutcome::Completed));
+        assert!(r.metrics.per_task_attempts.iter().all(|&a| (1..=3).contains(&a)));
+    }
+
+    #[test]
+    fn zero_rate_plan_is_bit_identical_to_fault_free() {
+        // The regression the dedicated fault stream exists for: enabling
+        // a (zero-rate) fault plan must not shift the main RNG, so the
+        // whole report — metrics, event counts — is byte-identical.
+        let dag = diamond();
+        let cfg = Config::default();
+        let base = run_wukong(&dag, &cfg, 7);
+        for &retries in &[0u32, 2] {
+            let f = run_wukong_faulty(
+                &dag,
+                &cfg,
+                7,
+                FaultPlan::with_retries(0.0, retries),
+            );
+            assert_eq!(base.metrics, f.metrics);
+            assert_eq!(base.sim_events, f.sim_events);
+            assert_eq!(base.peak_pending, f.peak_pending);
+        }
+    }
+
+    #[test]
+    fn exhausted_budget_reports_the_whole_reachable_set_failed() {
+        // p=1: the single leaf executor fails all 1+2 attempts; the job
+        // is reported failed and the cascade covers the entire diamond.
+        let dag = diamond();
+        let r = run_wukong_faulty(
+            &dag,
+            &Config::default(),
+            5,
+            FaultPlan::with_retries(1.0, 2),
+        );
+        assert_eq!(r.metrics.tasks_executed, 0);
+        assert_eq!(r.metrics.failed_tasks, 4);
+        assert_eq!(r.metrics.failed_executors, 1);
+        assert_eq!(r.metrics.per_task_attempts[0], 3);
+        assert!(r
+            .metrics
+            .per_task_outcome
+            .iter()
+            .all(|&o| o == TaskOutcome::Failed));
     }
 }

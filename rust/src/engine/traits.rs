@@ -21,10 +21,9 @@ use std::sync::Arc;
 
 use crate::baselines::{run_dask_full, run_numpywren_full, run_pywren_full};
 use crate::config::{Config, DaskConfig};
-use crate::coordinator::sim_engine::run_wukong_faulty;
+use crate::coordinator::run_wukong;
 use crate::dag::Dag;
-use crate::metrics::RunMetrics;
-use crate::platform::faults::FaultPlan;
+use crate::metrics::{RunMetrics, TaskOutcome};
 use crate::runtime::SharedRuntime;
 use crate::storage::real_kvs::RealKvs;
 
@@ -48,7 +47,9 @@ pub struct EngineCaps {
     /// Intermediate objects flow through the metered KVS, so the report's
     /// `kvs` byte counters are meaningful and byte-exact.
     pub meters_kvs: bool,
-    /// Supports fault injection (§3.6 retry contract).
+    /// Consumes `Config::faults` (§3.6 retry contract): the fault axis of
+    /// `wukong verify --faults` only sweeps engines that set this. All
+    /// sim-path engines do; the wall-clock real engines do not.
     pub supports_faults: bool,
 }
 
@@ -59,7 +60,7 @@ impl Default for EngineCaps {
             stateful_executors: false,
             serverless: true,
             meters_kvs: true,
-            supports_faults: false,
+            supports_faults: true,
         }
     }
 }
@@ -97,11 +98,10 @@ pub trait Engine {
 }
 
 /// The decentralized Wukong engine on the discrete-event simulator.
-#[derive(Debug, Clone, Default)]
-pub struct SimWukong {
-    /// Optional fault injection (§3.6); default = no faults.
-    pub faults: FaultPlan,
-}
+/// Fault injection (§3.6) is carried by `Config::faults`, like every
+/// other sim engine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimWukong;
 
 impl Engine for SimWukong {
     fn name(&self) -> &'static str {
@@ -119,7 +119,7 @@ impl Engine for SimWukong {
     }
 
     fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
-        let r = run_wukong_faulty(dag, cfg, seed, self.faults);
+        let r = run_wukong(dag, cfg, seed);
         EngineReport {
             engine: self.name(),
             metrics: r.metrics,
@@ -221,7 +221,7 @@ impl Engine for SimDask {
             // Dask moves data peer-to-peer between workers, not through
             // the metered KVS; its kvs counters stay 0.
             meters_kvs: false,
-            supports_faults: false,
+            supports_faults: true,
         }
     }
 
@@ -236,7 +236,9 @@ impl Engine for SimDask {
     }
 }
 
-/// Convert a wall-clock [`RealReport`] into normalized metrics.
+/// Convert a wall-clock [`RealReport`] into normalized metrics. The real
+/// engines run fault-free, so their attempt/outcome vectors mirror the
+/// execution counts (every task one attempt, all completed).
 fn real_metrics(rep: &RealReport) -> RunMetrics {
     RunMetrics {
         makespan_s: rep.makespan.as_secs_f64(),
@@ -249,6 +251,11 @@ fn real_metrics(rep: &RealReport) -> RunMetrics {
             reads: rep.kvs_reads,
             writes: rep.kvs_writes,
         },
+        per_task_attempts: rep.per_task_exec.clone(),
+        per_task_outcome: vec![
+            TaskOutcome::Completed;
+            rep.per_task_exec.len()
+        ],
         per_task_exec: rep.per_task_exec.clone(),
         ..RunMetrics::default()
     }
@@ -330,7 +337,11 @@ impl Engine for RealNumpywrenEngine {
     }
 
     fn caps(&self) -> EngineCaps {
-        EngineCaps::default()
+        EngineCaps {
+            // Wall-clock engine: no fault injection.
+            supports_faults: false,
+            ..EngineCaps::default()
+        }
     }
 
     fn run(&self, dag: &Dag, cfg: &Config, seed: u64) -> EngineReport {
@@ -451,6 +462,41 @@ mod tests {
             let r = e.run(&dag, &cfg, 3);
             assert!(r.sim_events.unwrap_or(0) > 0, "{}", e.name());
             assert!(r.peak_pending.unwrap_or(0) > 0, "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn every_sim_engine_supports_faults() {
+        for e in sim_registry() {
+            assert!(e.caps().supports_faults, "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn every_sim_engine_honors_config_faults() {
+        // p=1 with no retries: nothing executes and every task is
+        // reported failed — through the shared trait, on each engine.
+        use crate::platform::faults::FaultPlan;
+        let dag = diamond();
+        let mut cfg = Config::default();
+        cfg.faults = FaultPlan::with_retries(1.0, 0);
+        for e in sim_registry() {
+            let r = e.run(&dag, &cfg, 11);
+            assert_eq!(r.metrics.tasks_executed, 0, "{}", e.name());
+            assert_eq!(
+                r.metrics.failed_tasks,
+                dag.len() as u64,
+                "{}",
+                e.name()
+            );
+            assert!(
+                r.metrics
+                    .per_task_outcome
+                    .iter()
+                    .all(|&o| o == TaskOutcome::Failed),
+                "{}",
+                e.name()
+            );
         }
     }
 

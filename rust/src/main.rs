@@ -177,6 +177,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             opts.threads = parse_threads(&args)?;
             opts.large = args.flag("large");
             opts.verbose = args.flag("verbose");
+            opts.faults = args.flag("faults");
             let summary = run_verify(&opts)?;
             let mut t = util::table::Table::new(vec!["metric", "value"]);
             t.row(vec!["engines".into(), summary.engines.join(" ")]);
@@ -191,7 +192,14 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             if summary.ok() {
                 println!(
                     "conformance OK: exactly-once, completion, determinism \
-                     and locality ordering hold on every case"
+                     and locality ordering hold on every case{}",
+                    if opts.faults {
+                        ", incl. the §3.6 fault axis (retry bounds, \
+                         completed-xor-failed totality, fault-free \
+                         bit-identity)"
+                    } else {
+                        ""
+                    }
                 );
                 Ok(())
             } else {

@@ -7,6 +7,19 @@ use crate::platform::{Billing, Prices};
 use crate::storage::KvsMetrics;
 pub use timeline::Timeline;
 
+/// Terminal per-task resolution under a fault plan (§3.6). Every task
+/// ends in exactly one of these states — the conformance harness
+/// asserts the partition is total (nothing silently lost) and that
+/// `Completed` tasks executed effectively-once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskOutcome {
+    /// The task's body ran to completion (exactly one effective run).
+    Completed,
+    /// The task was reported failed: its own retry budget was exhausted,
+    /// or an ancestor's was — either way it never produced output.
+    Failed,
+}
+
 /// Aggregate seconds per activity category (paper Fig. 22's bars).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Breakdown {
@@ -70,6 +83,16 @@ pub struct RunMetrics {
     /// this (len == DAG size); the conformance harness asserts each entry
     /// is exactly 1 (the paper's exactly-once claim, §3.3).
     pub per_task_exec: Vec<u32>,
+    /// Tasks whose terminal outcome is [`TaskOutcome::Failed`] — directly
+    /// failed tasks plus everything downstream of them. Fault-free runs
+    /// report 0; `tasks_executed + failed_tasks == dag.len()` always.
+    pub failed_tasks: u64,
+    /// Per-task execution *attempts* (incl. failed ones), indexed by
+    /// `TaskId`. Bounded by `1 + max_retries` under any fault plan;
+    /// equal to `per_task_exec` when no faults fire.
+    pub per_task_attempts: Vec<u32>,
+    /// Terminal per-task outcome, indexed by `TaskId` (len == DAG size).
+    pub per_task_outcome: Vec<TaskOutcome>,
 }
 
 impl RunMetrics {

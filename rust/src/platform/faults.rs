@@ -1,18 +1,35 @@
 //! Fault injection: executor crashes + the AWS retry-twice contract (§3.6).
 //!
 //! The paper relies on Lambda's automatic retry (up to two) for fault
-//! tolerance. The simulator can kill a configurable fraction of executor
-//! runs; a killed run is retried from its static-schedule start with the
-//! platform's invocation latency, up to `retries` times. Tests assert the
-//! job still completes and every task still executes effectively-once
-//! (results are idempotent because task outputs are keyed).
+//! tolerance. Every sim engine consumes a [`FaultPlan`] (from
+//! `Config::faults` or an explicit argument): a configurable fraction of
+//! execution attempts fail; a failed attempt is retried with the
+//! platform's invocation latency up to `max_retries` times, and an
+//! exhausted budget *reports* the task (and, by cascade, everything
+//! downstream of it) as failed — never silently lost. The `wukong
+//! verify --faults` matrix asserts this contract differentially across
+//! all engines.
+//!
+//! Fault draws come from a [`FaultStream`] — a dedicated RNG stream
+//! derived from a salted split of the run seed — so toggling `p_fail`
+//! can never shift the main simulation RNG (invocation jitter etc.):
+//! a `p_fail = 0` run is bit-identical to a run with no fault plan at
+//! all, and enabling faults perturbs only the attempts it actually
+//! kills.
 
+use crate::dag::{Dag, TaskId};
+use crate::metrics::TaskOutcome;
 use crate::util::Rng;
 
-/// Fault model: each executor run fails independently with `p_fail`.
-/// `Copy`: two scalars — engines pass it by value instead of cloning per
-/// executor start.
-#[derive(Debug, Clone, Copy)]
+/// Salt XORed into the run seed to derive the dedicated fault stream.
+/// Any constant works; it only has to be fixed so runs replay, and
+/// distinct from the plain run seed so the streams never alias.
+const FAULT_STREAM_SALT: u64 = 0xFA17_57E4_A06B_1D2C;
+
+/// Fault model: each execution attempt fails independently with
+/// `p_fail`. `Copy`: two scalars — engines pass it by value instead of
+/// cloning per executor start.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultPlan {
     pub p_fail: f64,
     pub max_retries: u32,
@@ -35,48 +52,177 @@ impl FaultPlan {
         }
     }
 
-    /// Decide whether a given attempt fails.
-    pub fn attempt_fails(&self, rng: &mut Rng) -> bool {
-        self.p_fail > 0.0 && rng.f64() < self.p_fail
+    pub fn with_retries(p_fail: f64, max_retries: u32) -> FaultPlan {
+        FaultPlan {
+            p_fail,
+            max_retries,
+        }
     }
 
-    /// Whether another retry is allowed after `attempt` failures.
+    /// Whether another retry is allowed after the failed attempt with
+    /// index `attempt` (0-based: the first try is attempt 0).
     pub fn can_retry(&self, attempt: u32) -> bool {
         attempt < self.max_retries
     }
+
+    /// Upper bound on attempts per task: the first try + every retry.
+    pub fn max_attempts(&self) -> u32 {
+        1 + self.max_retries
+    }
+}
+
+/// The dedicated fault RNG stream for one run: all failure draws come
+/// from here and *only* from here, so the main simulation streams
+/// (invocation jitter, corpus generation, ...) are identical whether
+/// faults are enabled or not.
+#[derive(Debug, Clone)]
+pub struct FaultStream {
+    plan: FaultPlan,
+    rng: Rng,
+}
+
+impl FaultStream {
+    /// Derive the fault stream for a run from its seed (salted split —
+    /// independent of `Rng::new(seed)` and every fork engines take
+    /// from it).
+    pub fn for_run(plan: FaultPlan, seed: u64) -> FaultStream {
+        FaultStream {
+            plan,
+            rng: Rng::new(seed ^ FAULT_STREAM_SALT),
+        }
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    /// Decide whether the next execution attempt fails. Draws from the
+    /// stream only when `p_fail > 0`, so a zero-rate plan consumes
+    /// nothing (and `{p_fail: 0, max_retries: r}` is bit-identical for
+    /// every `r`).
+    pub fn attempt_fails(&mut self) -> bool {
+        self.plan.p_fail > 0.0 && self.rng.f64() < self.plan.p_fail
+    }
+}
+
+/// Cascade a set of directly-failed tasks (retry budget exhausted) over
+/// the DAG: every task reachable from a failed task can never become
+/// ready (it is missing that ancestor's output), so it resolves to
+/// [`TaskOutcome::Failed`] too. Marks `outcome` in place and returns
+/// how many tasks *newly* resolved to failed (idempotent: already-
+/// failed tasks are skipped, so engines can call this incrementally).
+pub fn propagate_failures(
+    dag: &Dag,
+    direct: &[TaskId],
+    outcome: &mut [TaskOutcome],
+) -> u64 {
+    let mut newly = 0u64;
+    let mut stack: Vec<TaskId> = direct.to_vec();
+    while let Some(t) = stack.pop() {
+        if outcome[t as usize] == TaskOutcome::Failed {
+            continue;
+        }
+        outcome[t as usize] = TaskOutcome::Failed;
+        newly += 1;
+        for &c in dag.children(t) {
+            if outcome[c as usize] != TaskOutcome::Failed {
+                stack.push(c);
+            }
+        }
+    }
+    newly
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dag::{DagBuilder, OpKind};
+
+    fn stream(p: f64, seed: u64) -> FaultStream {
+        FaultStream::for_run(FaultPlan::with_failure_rate(p), seed)
+    }
 
     #[test]
     fn zero_rate_never_fails() {
-        let plan = FaultPlan::default();
-        let mut rng = Rng::new(1);
-        assert!((0..1000).all(|_| !plan.attempt_fails(&mut rng)));
+        let mut s = stream(0.0, 1);
+        assert!((0..1000).all(|_| !s.attempt_fails()));
     }
 
     #[test]
     fn full_rate_always_fails() {
-        let plan = FaultPlan::with_failure_rate(1.0);
-        let mut rng = Rng::new(2);
-        assert!((0..100).all(|_| plan.attempt_fails(&mut rng)));
+        let mut s = stream(1.0, 2);
+        assert!((0..100).all(|_| s.attempt_fails()));
     }
 
     #[test]
-    fn retry_budget_is_two() {
+    fn retry_budget_is_two_by_default() {
         let plan = FaultPlan::default();
         assert!(plan.can_retry(0));
         assert!(plan.can_retry(1));
         assert!(!plan.can_retry(2));
+        assert_eq!(plan.max_attempts(), 3);
+        assert_eq!(FaultPlan::with_retries(0.5, 0).max_attempts(), 1);
     }
 
     #[test]
     fn rate_is_roughly_respected() {
-        let plan = FaultPlan::with_failure_rate(0.3);
-        let mut rng = Rng::new(3);
-        let fails = (0..10_000).filter(|_| plan.attempt_fails(&mut rng)).count();
+        let mut s = stream(0.3, 3);
+        let fails = (0..10_000).filter(|_| s.attempt_fails()).count();
         assert!((2_700..3_300).contains(&fails), "fails={fails}");
+    }
+
+    #[test]
+    fn stream_is_deterministic_per_seed() {
+        let mut a = stream(0.5, 7);
+        let mut b = stream(0.5, 7);
+        let xs: Vec<bool> = (0..100).map(|_| a.attempt_fails()).collect();
+        let ys: Vec<bool> = (0..100).map(|_| b.attempt_fails()).collect();
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn stream_differs_from_the_main_seed_stream() {
+        // The salted derivation must not alias the plain run stream:
+        // drawing failures must not replay the jitter stream.
+        let mut main = Rng::new(7);
+        let mut fault = FaultStream::for_run(FaultPlan::with_failure_rate(0.5), 7);
+        let main_draws: Vec<u64> = (0..8).map(|_| main.next_u64()).collect();
+        let fault_draws: Vec<u64> = (0..8).map(|_| fault.rng.next_u64()).collect();
+        assert_ne!(main_draws, fault_draws);
+    }
+
+    fn diamond() -> crate::dag::Dag {
+        let mut b = DagBuilder::new("diamond");
+        let a = b.task("a", OpKind::Generic, 1.0, 8);
+        let x = b.task("x", OpKind::Generic, 1.0, 8);
+        let y = b.task("y", OpKind::Generic, 1.0, 8);
+        let d = b.task("d", OpKind::Generic, 1.0, 8);
+        b.edge(a, x).edge(a, y).edge(x, d).edge(y, d);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn propagation_covers_the_reachable_set() {
+        let dag = diamond();
+        let mut outcome = vec![TaskOutcome::Completed; 4];
+        let newly = propagate_failures(&dag, &[0], &mut outcome);
+        assert_eq!(newly, 4);
+        assert!(outcome.iter().all(|&o| o == TaskOutcome::Failed));
+    }
+
+    #[test]
+    fn propagation_is_partial_and_idempotent() {
+        let dag = diamond();
+        let mut outcome = vec![TaskOutcome::Completed; 4];
+        // x failed: only x and the join d are lost; a and y are fine.
+        let newly = propagate_failures(&dag, &[1], &mut outcome);
+        assert_eq!(newly, 2);
+        assert_eq!(outcome[0], TaskOutcome::Completed);
+        assert_eq!(outcome[1], TaskOutcome::Failed);
+        assert_eq!(outcome[2], TaskOutcome::Completed);
+        assert_eq!(outcome[3], TaskOutcome::Failed);
+        // Re-propagating the overlapping set marks only what is new.
+        assert_eq!(propagate_failures(&dag, &[1, 2], &mut outcome), 1);
+        assert_eq!(outcome[2], TaskOutcome::Failed);
     }
 }

@@ -20,6 +20,7 @@
 
 use crate::config::{Config, StorageConfig};
 use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+use crate::platform::faults::FaultPlan;
 use crate::util::prop::gen;
 use crate::util::Rng;
 
@@ -287,6 +288,27 @@ pub fn random_dag_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
     }
 }
 
+/// Failure rates swept by `wukong verify --faults`: none, the rare-crash
+/// regime, the Raptor-style stress regime, and an extreme rate where
+/// retry budgets are routinely exhausted.
+pub const FAULT_RATES: &[f64] = &[0.0, 0.01, 0.1, 0.5];
+
+/// Retry budgets swept by the fault axis: none vs AWS's retry-twice.
+pub const FAULT_RETRIES: &[u32] = &[0, 2];
+
+/// The fault knob matrix (§3.6): every failure rate × retry budget.
+/// `p_fail = 0` combos double as the bit-identity regression against the
+/// fault-free baseline.
+pub fn fault_matrix() -> Vec<FaultPlan> {
+    let mut out = Vec::new();
+    for &p_fail in FAULT_RATES {
+        for &max_retries in FAULT_RETRIES {
+            out.push(FaultPlan::with_retries(p_fail, max_retries));
+        }
+    }
+    out
+}
+
 /// Random policy-knob + substrate configuration (the per-case baseline;
 /// the harness additionally sweeps the exhaustive knob matrix on top).
 pub fn random_config(rng: &mut Rng) -> Config {
@@ -403,6 +425,14 @@ mod tests {
             assert_eq!(da.len(), db.len());
             assert_eq!(da.n_edges(), db.n_edges());
         }
+    }
+
+    #[test]
+    fn fault_matrix_covers_rates_times_budgets() {
+        let m = fault_matrix();
+        assert_eq!(m.len(), FAULT_RATES.len() * FAULT_RETRIES.len());
+        assert_eq!(m.iter().filter(|p| p.p_fail == 0.0).count(), 2);
+        assert_eq!(m.iter().filter(|p| p.max_retries == 2).count(), 4);
     }
 
     #[test]

@@ -10,10 +10,17 @@
 //!   the stateless bound (what a numpywren-style engine must move), the
 //!   paper's Figs. 3–4 claim;
 //! * **stateless model** — a stateless engine's measured bytes equal the
-//!   closed form exactly (byte-exact metering, not modeling).
+//!   closed form exactly (byte-exact metering, not modeling);
+//! * **fault contract** (§3.6) — under any fault plan, every task is
+//!   either completed or reported-failed (never silently lost), attempts
+//!   never exceed `1 + max_retries`, completed tasks executed
+//!   effectively-once, and `p_fail = 0` runs are bit-identical to the
+//!   fault-free baseline.
 
 use crate::dag::Dag;
 use crate::engine::EngineReport;
+use crate::metrics::TaskOutcome;
+use crate::platform::faults::FaultPlan;
 
 /// The closed-form KVS traffic of a fully-stateless engine on `dag`:
 /// every task writes its output once; every dependency edge reads the
@@ -132,6 +139,125 @@ pub fn check_stateless_model(dag: &Dag, rep: &EngineReport) -> Result<(), String
     Ok(())
 }
 
+/// The §3.6 retry contract, checked structurally on one report:
+///
+/// * the per-task attempt/outcome/exec vectors cover the DAG;
+/// * `attempts ≤ 1 + max_retries` for every task;
+/// * completed ⊕ reported-failed partitions the DAG totally — a
+///   completed task executed exactly once after ≥ 1 attempt, a failed
+///   task never executed, and the aggregate counters agree with the
+///   per-task vectors (no task silently lost);
+/// * a failed job carries at least one §3.6 failure report
+///   (`failed_executors > 0`).
+pub fn check_fault_contract(
+    dag: &Dag,
+    rep: &EngineReport,
+    plan: FaultPlan,
+) -> Result<(), String> {
+    let m = &rep.metrics;
+    let n = dag.len();
+    if m.per_task_outcome.len() != n
+        || m.per_task_attempts.len() != n
+        || m.per_task_exec.len() != n
+    {
+        return Err(format!(
+            "[{}] fault-contract: per-task vectors {}/{}/{} for a {n}-task \
+             DAG",
+            rep.engine,
+            m.per_task_exec.len(),
+            m.per_task_attempts.len(),
+            m.per_task_outcome.len()
+        ));
+    }
+    let max_attempts = plan.max_attempts();
+    let mut n_failed = 0u64;
+    for t in 0..n {
+        let attempts = m.per_task_attempts[t];
+        let execs = m.per_task_exec[t];
+        if attempts > max_attempts {
+            return Err(format!(
+                "[{}] fault-contract: task {t} attempted {attempts} times > \
+                 1 + max_retries = {max_attempts}",
+                rep.engine
+            ));
+        }
+        match m.per_task_outcome[t] {
+            TaskOutcome::Completed => {
+                if execs != 1 {
+                    return Err(format!(
+                        "[{}] fault-contract: completed task {t} executed \
+                         {execs} times (effectively-once violated)",
+                        rep.engine
+                    ));
+                }
+                if attempts == 0 {
+                    return Err(format!(
+                        "[{}] fault-contract: completed task {t} reports \
+                         zero attempts",
+                        rep.engine
+                    ));
+                }
+            }
+            TaskOutcome::Failed => {
+                n_failed += 1;
+                if execs != 0 {
+                    return Err(format!(
+                        "[{}] fault-contract: reported-failed task {t} \
+                         executed {execs} times",
+                        rep.engine
+                    ));
+                }
+            }
+        }
+    }
+    if m.failed_tasks != n_failed {
+        return Err(format!(
+            "[{}] fault-contract: failed_tasks={} but {} per-task outcomes \
+             are Failed",
+            rep.engine, m.failed_tasks, n_failed
+        ));
+    }
+    if m.tasks_executed + m.failed_tasks != n as u64 {
+        return Err(format!(
+            "[{}] fault-contract: {} executed + {} failed != {n} tasks \
+             (silent loss)",
+            rep.engine, m.tasks_executed, m.failed_tasks
+        ));
+    }
+    if m.failed_tasks > 0 && m.failed_executors == 0 {
+        return Err(format!(
+            "[{}] fault-contract: {} tasks failed without a §3.6 failure \
+             report",
+            rep.engine, m.failed_tasks
+        ));
+    }
+    Ok(())
+}
+
+/// A `p_fail = 0` fault-plan run must be bit-identical to the plain
+/// fault-free run — enabling the fault machinery without faults cannot
+/// perturb the event stream (the dedicated-fault-RNG regression).
+pub fn check_fault_free_baseline(
+    reference: &EngineReport,
+    rep: &EngineReport,
+) -> Result<(), String> {
+    if reference.sim_events != rep.sim_events {
+        return Err(format!(
+            "[{}] fault-free-baseline: p_fail=0 event count {:?} != \
+             fault-free {:?}",
+            rep.engine, rep.sim_events, reference.sim_events
+        ));
+    }
+    if reference.metrics != rep.metrics {
+        return Err(format!(
+            "[{}] fault-free-baseline: p_fail=0 metrics differ from the \
+             fault-free run",
+            rep.engine
+        ));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +310,60 @@ mod tests {
         rep.metrics.per_task_exec[1] = 2;
         let err = check_exactly_once(&dag, &rep).unwrap_err();
         assert!(err.contains("numpywren") && err.contains("task 1"), "{err}");
+    }
+
+    #[test]
+    fn fault_contract_accepts_clean_and_faulty_runs() {
+        let dag = chain2();
+        let cfg = Config::default();
+        let rep = SimWukong.run(&dag, &cfg, 1);
+        check_fault_contract(&dag, &rep, cfg.faults).unwrap();
+
+        let mut faulty = Config::default();
+        faulty.faults = FaultPlan::with_retries(1.0, 1);
+        let rep = SimWukong.run(&dag, &faulty, 1);
+        assert_eq!(rep.metrics.failed_tasks, 2);
+        check_fault_contract(&dag, &rep, faulty.faults).unwrap();
+    }
+
+    #[test]
+    fn fault_contract_rejects_silent_loss_and_overruns() {
+        let dag = chain2();
+        let cfg = Config::default();
+        let clean = SimWukong.run(&dag, &cfg, 1);
+
+        // A completed task that never executed = silent loss.
+        let mut rep = clean.clone();
+        rep.metrics.per_task_exec[1] = 0;
+        rep.metrics.tasks_executed = 1;
+        let err = check_fault_contract(&dag, &rep, cfg.faults).unwrap_err();
+        assert!(err.contains("effectively-once"), "{err}");
+
+        // Attempts beyond the retry budget.
+        let mut rep = clean.clone();
+        rep.metrics.per_task_attempts[0] = 9;
+        let err = check_fault_contract(&dag, &rep, cfg.faults).unwrap_err();
+        assert!(err.contains("max_retries"), "{err}");
+
+        // Failed outcome without a failure report.
+        let mut rep = clean.clone();
+        rep.metrics.per_task_outcome[1] = TaskOutcome::Failed;
+        rep.metrics.per_task_exec[1] = 0;
+        rep.metrics.failed_tasks = 1;
+        rep.metrics.tasks_executed = 1;
+        let err = check_fault_contract(&dag, &rep, cfg.faults).unwrap_err();
+        assert!(err.contains("failure"), "{err}");
+    }
+
+    #[test]
+    fn fault_free_baseline_flags_any_divergence() {
+        let dag = chain2();
+        let cfg = Config::default();
+        let a = SimWukong.run(&dag, &cfg, 1);
+        let b = SimWukong.run(&dag, &cfg, 1);
+        check_fault_free_baseline(&a, &b).unwrap();
+        let mut c = b.clone();
+        c.metrics.makespan_s += 1.0;
+        assert!(check_fault_free_baseline(&a, &c).is_err());
     }
 }

@@ -48,6 +48,10 @@ pub struct VerifyOptions {
     pub threads: usize,
     /// Use the large corpus size tier (scale smoke sweeps).
     pub large: bool,
+    /// Sweep the §3.6 fault axis (`corpus::fault_matrix`) on top of the
+    /// base matrix. Opt-in so fault-free sweeps (and their pinned run
+    /// counts) stay byte-identical to pre-fault-axis behavior.
+    pub faults: bool,
 }
 
 impl Default for VerifyOptions {
@@ -59,6 +63,7 @@ impl Default for VerifyOptions {
             verbose: false,
             threads: 0,
             large: false,
+            faults: false,
         }
     }
 }
@@ -192,6 +197,9 @@ fn run_case(opts: &VerifyOptions, case: u64) -> CaseResult {
                 diff::check_completion(&dag, &rep),
                 diff::check_exactly_once(&dag, &rep),
                 diff::check_determinism(&rep, &rerun),
+                // Fault-free runs must still satisfy the §3.6 contract
+                // shape: all-completed outcomes, one attempt per task.
+                diff::check_fault_contract(&dag, &rep, cfg.faults),
             ] {
                 if let Err(v) = check {
                     violations.push(format!("{v} ({label})"));
@@ -209,6 +217,75 @@ fn run_case(opts: &VerifyOptions, case: u64) -> CaseResult {
                 };
                 if let Err(v) = check {
                     violations.push(format!("{v} ({label})"));
+                }
+            }
+        }
+
+        // Opt-in §3.6 fault axis: p_fail × max_retries on top of the
+        // base config. One fault-free reference run anchors the
+        // bit-identity check for the p_fail=0 plans.
+        if opts.faults && engine.caps().supports_faults {
+            engine_runs += 1;
+            let reference =
+                match run_guarded(engine.as_ref(), &dag, &base, run_seed) {
+                    Ok(r) => Some(r),
+                    Err(v) => {
+                        violations.push(format!("{v} (fault reference)"));
+                        None
+                    }
+                };
+            for plan in corpus::fault_matrix() {
+                let label = format!(
+                    "faults p={} r={}",
+                    plan.p_fail, plan.max_retries
+                );
+                let mut cfg = base.clone();
+                cfg.faults = plan;
+                engine_runs += 1;
+                let rep =
+                    match run_guarded(engine.as_ref(), &dag, &cfg, run_seed) {
+                        Ok(r) => r,
+                        Err(v) => {
+                            violations.push(format!("{v} ({label})"));
+                            continue;
+                        }
+                    };
+                engine_runs += 1; // determinism re-run
+                let rerun =
+                    match run_guarded(engine.as_ref(), &dag, &cfg, run_seed) {
+                        Ok(r) => r,
+                        Err(v) => {
+                            violations
+                                .push(format!("{v} ({label}, rerun)"));
+                            continue;
+                        }
+                    };
+
+                let mut checks = vec![
+                    diff::check_fault_contract(&dag, &rep, plan),
+                    diff::check_determinism(&rep, &rerun),
+                ];
+                if rep.metrics.failed_tasks == 0 {
+                    // With no terminal failures the classic invariants
+                    // must hold verbatim — retries are invisible to
+                    // completion and effectively-once execution.
+                    checks.push(diff::check_completion(&dag, &rep));
+                    checks.push(diff::check_exactly_once(&dag, &rep));
+                }
+                if plan.p_fail == 0.0 {
+                    // A zero-rate plan must be bit-identical to the
+                    // fault-free run: enabling the knob draws nothing
+                    // from the fault stream.
+                    if let Some(reference) = &reference {
+                        checks.push(diff::check_fault_free_baseline(
+                            reference, &rep,
+                        ));
+                    }
+                }
+                for check in checks {
+                    if let Err(v) = check {
+                        violations.push(format!("{v} ({label})"));
+                    }
                 }
             }
         }
@@ -327,6 +404,43 @@ mod tests {
         assert!(s.violations.is_empty(), "{:#?}", s.violations);
         // wukong knob matrix (8×2) + 4 baselines ×2, per case
         assert_eq!(s.engine_runs, 4 * (16 + 8));
+    }
+
+    #[test]
+    fn faulty_sweep_is_clean_and_counts_the_fault_axis() {
+        let s = run_verify(&VerifyOptions {
+            runs: 3,
+            seed: 17,
+            faults: true,
+            ..VerifyOptions::default()
+        })
+        .unwrap();
+        assert_eq!(s.cases, 3);
+        assert!(s.violations.is_empty(), "{:#?}", s.violations);
+        // Base matrix (16 + 8) plus, per sim engine, one fault-free
+        // reference and 8 fault plans × 2 (run + determinism re-run).
+        assert_eq!(s.engine_runs, 3 * (16 + 8 + 5 * (1 + 8 * 2)));
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree_under_faults() {
+        let base = VerifyOptions {
+            runs: 4,
+            seed: 29,
+            faults: true,
+            ..VerifyOptions::default()
+        };
+        let seq = run_verify(&VerifyOptions {
+            threads: 1,
+            ..base.clone()
+        })
+        .unwrap();
+        let par = run_verify(&VerifyOptions {
+            threads: 4,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(seq, par);
     }
 
     #[test]

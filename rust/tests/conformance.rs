@@ -38,6 +38,54 @@ fn differential_matrix_runs_clean() {
     assert_eq!(summary.engine_runs, 25 * 24);
 }
 
+/// The §3.6 fault axis (`wukong verify --faults`): on top of the base
+/// matrix, every fault-capable engine sweeps `corpus::fault_matrix()`
+/// (p_fail × max_retries) with a fault-free reference run, asserting
+/// retry bounds, completed-⊕-failed totality, determinism under faults
+/// and p_fail=0 bit-identity to fault-free.
+#[test]
+fn faulty_matrix_runs_clean() {
+    let summary = run_verify(&VerifyOptions {
+        runs: 8,
+        seed: 7,
+        faults: true,
+        ..VerifyOptions::default()
+    })
+    .expect("default options are valid");
+    assert_eq!(summary.cases, 8);
+    assert!(
+        summary.violations.is_empty(),
+        "fault-axis violations:\n{}",
+        summary.violations.join("\n")
+    );
+    // base 24 + 5 engines × (1 reference + 8 fault plans × 2), per case
+    assert_eq!(summary.engine_runs, 8 * (24 + 5 * 17));
+}
+
+/// Satellite: the pooled sweep stays byte-identical to `--threads 1`
+/// when the fault axis is on (fault streams are per-run state, so no
+/// cross-case leakage through worker reuse).
+#[test]
+fn faulty_sweep_is_thread_count_invariant() {
+    let base = VerifyOptions {
+        runs: 5,
+        seed: 13,
+        faults: true,
+        ..VerifyOptions::default()
+    };
+    let seq = run_verify(&VerifyOptions {
+        threads: 1,
+        ..base.clone()
+    })
+    .unwrap();
+    let par = run_verify(&VerifyOptions {
+        threads: 3,
+        ..base
+    })
+    .unwrap();
+    assert_eq!(seq, par);
+}
+
 /// Satellite: same seed ⇒ byte-identical `RunMetrics` across two runs of
 /// each sim-path engine (catches accidental HashMap-iteration
 /// nondeterminism introduced during engine refactors).

@@ -112,6 +112,12 @@ fn faults_never_lose_tasks() {
                 "failure reported but all tasks executed"
             );
         }
+        // Totality: every task is completed ⊕ reported-failed; the
+        // shortfall above is exactly the failed set, never silent loss.
+        assert_eq!(
+            r.metrics.tasks_executed + r.metrics.failed_tasks,
+            dag.len() as u64
+        );
     });
 }
 
@@ -142,8 +148,121 @@ fn moderate_fault_rates_with_retries_mostly_complete() {
                 "failure reported but all tasks executed"
             );
         }
+        assert_eq!(
+            r.metrics.tasks_executed + r.metrics.failed_tasks,
+            dag.len() as u64
+        );
     }
     assert!(complete >= total - 2, "only {complete}/{total} completed");
+}
+
+#[test]
+fn fault_attempts_and_outcomes_partition_every_engine() {
+    use wukong::engine::select_engines;
+    use wukong::metrics::TaskOutcome;
+    // §3.6 contract, property-swept over every sim engine with a random
+    // fault plan: attempts are bounded by the retry budget, completed
+    // tasks executed effectively-once with ≥1 attempt, failed tasks
+    // never executed, and completed ⊕ failed partitions the DAG.
+    check(0xFA19, 12, |rng| {
+        let dag = random_dag(rng);
+        let mut cfg = random_config(rng);
+        cfg.faults = FaultPlan::with_retries(
+            rng.f64() * 0.5,
+            gen::usize_in(rng, 0, 3) as u32,
+        );
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_faults {
+                continue;
+            }
+            let m = engine.run(&dag, &cfg, seed).metrics;
+            let name = engine.name();
+            assert_eq!(m.per_task_attempts.len(), dag.len(), "[{name}]");
+            assert_eq!(m.per_task_outcome.len(), dag.len(), "[{name}]");
+            assert_eq!(
+                m.tasks_executed + m.failed_tasks,
+                dag.len() as u64,
+                "[{name}] completed + failed must cover the DAG"
+            );
+            for t in 0..dag.len() {
+                let attempts = m.per_task_attempts[t];
+                assert!(
+                    attempts <= cfg.faults.max_attempts(),
+                    "[{name}] task {t}: {attempts} attempts > budget {}",
+                    cfg.faults.max_attempts()
+                );
+                match m.per_task_outcome[t] {
+                    TaskOutcome::Completed => {
+                        assert!(attempts >= 1, "[{name}] task {t}");
+                        assert_eq!(
+                            m.per_task_exec[t], 1,
+                            "[{name}] task {t}: effectively-once violated"
+                        );
+                    }
+                    TaskOutcome::Failed => {
+                        assert_eq!(
+                            m.per_task_exec[t], 0,
+                            "[{name}] task {t}: failed yet executed"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn certain_failure_with_exhausted_budget_reports_every_task() {
+    use wukong::engine::select_engines;
+    // p_fail=1.0: no attempt ever succeeds, so once the retry budget is
+    // exhausted every scheduled task fails directly and the structural
+    // cascade must cover the entire DAG — nothing executes, nothing is
+    // silently dropped.
+    check(0xFA20, 8, |rng| {
+        let dag = random_dag(rng);
+        let mut cfg = random_config(rng);
+        cfg.faults =
+            FaultPlan::with_retries(1.0, gen::usize_in(rng, 0, 2) as u32);
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_faults {
+                continue;
+            }
+            let m = engine.run(&dag, &cfg, seed).metrics;
+            let name = engine.name();
+            assert_eq!(m.tasks_executed, 0, "[{name}]");
+            assert_eq!(m.failed_tasks, dag.len() as u64, "[{name}]");
+            assert!(m.failed_executors > 0, "[{name}] no failure report");
+        }
+    });
+}
+
+#[test]
+fn zero_rate_fault_plans_are_invisible() {
+    use wukong::engine::select_engines;
+    // Regression for the RNG-coupling bug: a p_fail=0 plan draws nothing
+    // from the fault stream, so enabling the knob (any retry budget)
+    // must leave every engine's report bit-identical to fault-free.
+    check(0xFA21, 10, |rng| {
+        let dag = random_dag(rng);
+        let base = random_config(rng);
+        let mut faulty = base.clone();
+        faulty.faults =
+            FaultPlan::with_retries(0.0, gen::usize_in(rng, 0, 5) as u32);
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_faults {
+                continue;
+            }
+            let a = engine.run(&dag, &base, seed);
+            let b = engine.run(&dag, &faulty, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
 }
 
 #[test]
