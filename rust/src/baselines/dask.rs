@@ -262,6 +262,7 @@ pub fn run_dask_full(
         n_failed: 0,
     };
     let mut sim: Sim<Ev> = Sim::new();
+    sim.set_event_budget(cfg.event_budget);
     // Kick the scheduler once per initially-ready task.
     let initially_ready = w.ready.len();
     for _ in 0..initially_ready {

@@ -258,7 +258,7 @@ pub fn run_numpywren_n(
     let n = dag.len();
     let mut w = World {
         dag,
-        kvs: KvsModel::new(cfg.storage),
+        kvs: KvsModel::with_crashes(cfg.storage, cfg.crashes, seed),
         queue_srv: FifoResource::new(),
         queue: dag.leaves().iter().copied().collect(),
         remaining: (0..n as TaskId).map(|t| dag.indegree(t)).collect(),
@@ -276,6 +276,7 @@ pub fn run_numpywren_n(
         cfg,
     };
     let mut sim: Sim<Ev> = Sim::new();
+    sim.set_event_budget(cfg.event_budget);
 
     // Provision the initial worker fleet through the invoker threads.
     let mut invokers = MultiResource::new(cfg.numpywren.n_invoker_threads);
@@ -301,6 +302,7 @@ pub fn run_numpywren_n(
     w.metrics.per_task_attempts = w.attempts.clone();
     w.metrics.per_task_outcome = w.outcome.clone();
     w.metrics.kvs = w.kvs.metrics;
+    w.metrics.durability = w.kvs.durability;
     w.metrics.invocations = w.lambda.total_invocations();
     w.metrics.peak_concurrency = w.lambda.peak_active();
     w.metrics.cpu_seconds =
@@ -382,6 +384,36 @@ mod tests {
         assert_eq!(a.metrics.makespan_s, b.metrics.makespan_s);
         assert_eq!(a.sim_events, b.sim_events);
         assert_eq!(a.peak_pending, b.peak_pending);
+    }
+
+    #[test]
+    fn shard_crashes_perturb_only_the_recovery_meters() {
+        // numpywren is the KVS-heaviest engine (stateless: every
+        // intermediate written + read back), so it is the strongest
+        // unit-level check of time-decoupled recovery.
+        let dag = micro::strong(50, 10, secs(0.01));
+        let cfg = Config::default();
+        let base = run_numpywren_full(&dag, &cfg, 9);
+        let mut crashy_cfg = cfg.clone();
+        crashy_cfg.crashes =
+            crate::platform::faults::ShardCrashPlan::with_crashes(1.0, 3);
+        let r = run_numpywren_full(&dag, &crashy_cfg, 9);
+        assert_eq!(r.metrics.durability.recoveries, 3);
+        assert_eq!(base.sim_events, r.sim_events);
+        assert_eq!(base.metrics.makespan_s, r.metrics.makespan_s);
+        assert_eq!(base.metrics.kvs, r.metrics.kvs);
+        let mut scrubbed = r.metrics.clone();
+        scrubbed.durability.recoveries = 0;
+        scrubbed.durability.replayed_ops = 0;
+        scrubbed.durability.stall_s = 0.0;
+        assert_eq!(base.metrics, scrubbed);
+        // Zero-rate plan: bit-identical, durability meters included.
+        let mut zero_cfg = cfg.clone();
+        zero_cfg.crashes =
+            crate::platform::faults::ShardCrashPlan::with_crashes(0.0, 8);
+        let z = run_numpywren_full(&dag, &zero_cfg, 9);
+        assert_eq!(base.metrics, z.metrics);
+        assert_eq!(base.sim_events, z.sim_events);
     }
 
     #[test]

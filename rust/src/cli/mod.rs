@@ -75,7 +75,7 @@ USAGE:
   wukong run <workload> [--engine <name>] [--set a.b=c ...]
                                                        run one workload on the simulator
   wukong verify [--engine a,b,...] [--runs N] [--seed S] [--threads N]
-                [--large] [--verbose] [--faults]
+                [--large] [--verbose] [--faults] [--crashes]
                                                        cross-engine differential conformance:
                                                        sweeps generated DAGs (incl. irregular
                                                        shapes) through every registered engine
@@ -88,6 +88,14 @@ USAGE:
                                                        attempts <= 1+max_retries, every task
                                                        completed xor reported-failed, and
                                                        p_fail=0 bit-identical to fault-free;
+                                                       --crashes adds the durable-KVS axis
+                                                       (shard-crash plans x WAL/snapshot
+                                                       profiles): a crashed-and-recovered run
+                                                       must be byte-identical to the
+                                                       uninterrupted run modulo the recovery
+                                                       meters, and p_crash=0 fully
+                                                       bit-identical; every run is capped by a
+                                                       sim event budget (livelock watchdog);
                                                        cases fan out across --threads workers
                                                        with case-ordered (byte-identical)
                                                        aggregation; --large switches to the
@@ -122,8 +130,22 @@ OPTIONS:
   --large           scale-tier corpus (verify)
   --faults          sweep the fault axis (verify; see faults.p_fail /
                     faults.max_retries under --set for single runs)
+  --crashes         sweep the durable-KVS crash-recovery axis (verify)
   --verbose         per-case lines (verify; streamed live with
                     --threads 1, printed in case order otherwise)
+
+CONFIG KEYS (selection; any key accepts --set):
+  faults.p_fail / faults.max_retries      Sec 3.6 executor-fault plan
+                                          (p_fail must be in [0, 1])
+  crashes.p_crash / crashes.max_crashes   per-op shard-crash plan
+                                          (p_crash must be in [0, 1])
+  storage.wal_fsync_s                     synchronous WAL append cost (s)
+  storage.snapshot_every_ops              snapshot cadence in WAL records
+                                          (0 = never snapshot)
+  storage.replay_op_s                     per-op WAL/snapshot replay cost
+  storage.recovery_base_s                 fixed per-recovery stall
+  event_budget                            sim event ceiling (0 = none;
+                                          verify always sets a watchdog)
 ";
 
 #[cfg(test)]

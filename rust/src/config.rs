@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::platform::faults::FaultPlan;
+use crate::platform::faults::{FaultPlan, ShardCrashPlan};
 use crate::sim::{secs, Time};
 
 /// AWS-Lambda-like platform model parameters.
@@ -85,6 +85,20 @@ pub struct StorageConfig {
     pub mds_ops_per_sec: f64,
     /// Max inline-argument payload on an invocation (bytes) — 256 KB.
     pub arg_inline_max: u64,
+    /// Simulated WAL fsync time (s) added to every acknowledged write
+    /// (synchronous logging). 0 = free logging (default), so the
+    /// durability tier meters without perturbing any existing timing.
+    pub wal_fsync_s: f64,
+    /// Snapshot a shard (and truncate its WAL) every this many WAL
+    /// records; 0 = never snapshot. Snapshots are taken in the
+    /// background (no service-time cost) — only recovery pays for
+    /// whatever snapshot + WAL suffix it must replay.
+    pub snapshot_every_ops: u64,
+    /// Recovery replay cost per record (s) — snapshot entries + WAL
+    /// suffix, metered as `DurabilityMetrics::stall_s`.
+    pub replay_op_s: f64,
+    /// Fixed per-recovery restart cost (s) before replay begins.
+    pub recovery_base_s: f64,
 }
 
 impl Default for StorageConfig {
@@ -98,6 +112,10 @@ impl Default for StorageConfig {
             mds_latency_s: 0.0008,
             mds_ops_per_sec: 150_000.0,
             arg_inline_max: 256 * 1024,
+            wal_fsync_s: 0.0,
+            snapshot_every_ops: 0,
+            replay_op_s: 2e-5,
+            recovery_base_s: 0.05,
         }
     }
 }
@@ -281,6 +299,16 @@ pub struct Config {
     /// default injects nothing, and draws come from a dedicated RNG
     /// stream, so fault-free runs are unaffected by its presence.
     pub faults: FaultPlan,
+    /// KVS shard-crash plan: storage ops crash their shard with
+    /// `p_crash` (up to `max_crashes` per run); the shard recovers by
+    /// snapshot + WAL replay. Like `faults`, draws come from a
+    /// dedicated salted stream, so the zero-rate default is
+    /// bit-identical to having no plan at all.
+    pub crashes: ShardCrashPlan,
+    /// Watchdog ceiling on processed DES events per run; 0 = unlimited.
+    /// An engine that exceeds it panics (caught by `wukong verify` as a
+    /// violation) instead of livelocking CI.
+    pub event_budget: u64,
     /// Simulation seed (same seed + config ⇒ identical trace).
     pub seed: u64,
     /// Repetitions per data point (paper averages ten runs).
@@ -296,6 +324,8 @@ impl Default for Config {
             numpywren: NumpywrenConfig::default(),
             compute: ComputeConfig::default(),
             faults: FaultPlan::default(),
+            crashes: ShardCrashPlan::default(),
+            event_budget: 0,
             seed: 42,
             runs: 3,
         }
@@ -365,6 +395,12 @@ impl Config {
             "storage.arg_inline_max" => {
                 self.storage.arg_inline_max = f()? as u64
             }
+            "storage.wal_fsync_s" => self.storage.wal_fsync_s = f()?,
+            "storage.snapshot_every_ops" => {
+                self.storage.snapshot_every_ops = f()? as u64
+            }
+            "storage.replay_op_s" => self.storage.replay_op_s = f()?,
+            "storage.recovery_base_s" => self.storage.recovery_base_s = f()?,
             "wukong.clustering_threshold" => {
                 self.wukong.clustering_threshold = f()? as u64
             }
@@ -389,11 +425,27 @@ impl Config {
             }
             "compute.task_overhead_s" => self.compute.task_overhead_s = f()?,
             "compute.serde_bw" => self.compute.serde_bw = f()?,
-            "faults.p_fail" => self.faults.p_fail = f()?,
+            "faults.p_fail" => self.faults.p_fail = prob(path, f()?)?,
             "faults.max_retries" => self.faults.max_retries = f()? as u32,
+            "crashes.p_crash" => self.crashes.p_crash = prob(path, f()?)?,
+            "crashes.max_crashes" => {
+                self.crashes.max_crashes = f()? as u32
+            }
+            "event_budget" => self.event_budget = f()? as u64,
             other => return Err(format!("unknown config key {other:?}")),
         }
         Ok(())
+    }
+}
+
+/// Validate a probability knob at parse time: rejects values outside
+/// [0, 1] (and NaN) with the offending key in the message, so a typo'd
+/// `--set faults.p_fail=1.5` fails loudly instead of skewing a sweep.
+fn prob(path: &str, v: f64) -> Result<f64, String> {
+    if (0.0..=1.0).contains(&v) {
+        Ok(v)
+    } else {
+        Err(format!("{path}: probability must be in [0, 1], got {v}"))
     }
 }
 
@@ -469,7 +521,51 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         let mut c = Config::default();
-        assert!(c.set("nope.nope", "1").is_err());
+        let err = c.set("nope.nope", "1").unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+        assert!(err.contains("nope.nope"), "{err}");
+    }
+
+    #[test]
+    fn durability_and_crash_keys_work() {
+        let mut c = Config::default();
+        c.set("storage.wal_fsync_s", "0.0002").unwrap();
+        c.set("storage.snapshot_every_ops", "32").unwrap();
+        c.set("storage.replay_op_s", "0.0001").unwrap();
+        c.set("storage.recovery_base_s", "0.2").unwrap();
+        c.set("crashes.p_crash", "0.5").unwrap();
+        c.set("crashes.max_crashes", "2").unwrap();
+        c.set("event_budget", "1000000").unwrap();
+        assert_eq!(c.storage.wal_fsync_s, 0.0002);
+        assert_eq!(c.storage.snapshot_every_ops, 32);
+        assert_eq!(c.storage.replay_op_s, 0.0001);
+        assert_eq!(c.storage.recovery_base_s, 0.2);
+        assert_eq!(c.crashes, ShardCrashPlan::with_crashes(0.5, 2));
+        assert_eq!(c.event_budget, 1_000_000);
+    }
+
+    #[test]
+    fn probabilities_outside_unit_interval_rejected() {
+        let mut c = Config::default();
+        for (key, bad) in [
+            ("faults.p_fail", "1.5"),
+            ("faults.p_fail", "-0.1"),
+            ("faults.p_fail", "nan"),
+            ("crashes.p_crash", "2"),
+            ("crashes.p_crash", "-1"),
+        ] {
+            let err = c.set(key, bad).unwrap_err();
+            assert!(
+                err.contains(key) && err.contains("must be in [0, 1]"),
+                "{key}={bad}: {err}"
+            );
+        }
+        // The config is untouched by rejected overrides.
+        assert_eq!(c.faults.p_fail, 0.0);
+        assert_eq!(c.crashes.p_crash, 0.0);
+        // Boundary values are fine.
+        c.set("faults.p_fail", "1").unwrap();
+        c.set("crashes.p_crash", "0").unwrap();
     }
 
     #[test]

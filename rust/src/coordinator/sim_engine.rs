@@ -426,7 +426,10 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
             let (_, msg_end) = w.mds.incr(cursor, 0xDE1E_0000_0000_0000 | t as u64);
             w.metrics.breakdown.publish_s += to_secs(msg_end.saturating_sub(cursor));
             let per = w.lambda.sample_invoke_latency();
-            let ends = w.pool.invoke_batch(msg_end, rest.len(), per);
+            // Inline-capable outputs ride the proxy message itself;
+            // otherwise the argument travels via the KVS (0 inline).
+            let payload = if inline_ok { out_bytes } else { 0 };
+            let ends = w.pool.invoke_batch(msg_end, rest.len(), per, payload);
             for (c, end) in rest.into_iter().zip(ends) {
                 let inv = w.lambda.admit(end);
                 spawn(w, sim, c, inline.clone(), inv.start_at, 0);
@@ -560,7 +563,7 @@ pub fn run_wukong_faulty(
     let mut w = World {
         knobs,
         dag,
-        kvs: KvsModel::new(cfg.storage),
+        kvs: KvsModel::with_crashes(cfg.storage, cfg.crashes, seed),
         mds: MdsModel::new(&cfg.storage),
         lambda: LambdaService::new(cfg.lambda, rng.fork(1)),
         pool: InvokerPool::new(cfg.wukong.n_invokers),
@@ -579,12 +582,15 @@ pub fn run_wukong_faulty(
         cfg,
     };
     let mut sim: Sim<Ev> = Sim::new();
+    sim.set_event_budget(cfg.event_budget);
 
     // Initial-Executor Invokers: the static scheduler's invoker pool
     // launches one executor per static schedule (leaf), in parallel.
+    // Launch arguments are static-schedule slices, not data payloads:
+    // no inline bytes.
     let schedules = generate_schedules(dag);
     let per = secs(cfg.lambda.invoke_latency_s);
-    let ends = w.pool.invoke_batch(0, schedules.len(), per);
+    let ends = w.pool.invoke_batch(0, schedules.len(), per, 0);
     for (sched, end) in schedules.iter().zip(ends) {
         let leaf = sched.leaf;
         w.claimed[leaf as usize] = true;
@@ -606,6 +612,8 @@ pub fn run_wukong_faulty(
     w.metrics.per_task_attempts = w.attempts.clone();
     w.metrics.per_task_outcome = outcome;
     w.metrics.kvs = w.kvs.metrics;
+    w.metrics.durability = w.kvs.durability.merged(w.mds.durability());
+    w.metrics.proxy_inline_bytes = w.pool.inline_bytes;
     w.metrics.invocations = w.lambda.total_invocations();
     w.metrics.peak_concurrency = w.lambda.peak_active();
     w.metrics.cpu_seconds =
@@ -767,5 +775,61 @@ mod tests {
             .per_task_outcome
             .iter()
             .all(|&o| o == TaskOutcome::Failed));
+    }
+
+    #[test]
+    fn zero_rate_crash_plan_is_bit_identical_to_crash_free() {
+        // Same regression guard as the fault stream's: enabling a
+        // zero-rate crash plan draws nothing, so the whole report is
+        // byte-identical (including the durability meters).
+        let dag = diamond();
+        let cfg = Config::default();
+        let base = run_wukong(&dag, &cfg, 7);
+        let mut crashy_cfg = cfg.clone();
+        crashy_cfg.crashes =
+            crate::platform::faults::ShardCrashPlan::with_crashes(0.0, 8);
+        let r = run_wukong(&dag, &crashy_cfg, 7);
+        assert_eq!(base.metrics, r.metrics);
+        assert_eq!(base.sim_events, r.sim_events);
+        assert_eq!(base.peak_pending, r.peak_pending);
+    }
+
+    #[test]
+    fn shard_crashes_perturb_only_the_recovery_meters() {
+        // The tentpole's recovery gate at unit scale: crash shards on
+        // every KVS op — task outcomes, byte meters, event counts and
+        // makespan must match the crash-free run exactly; only the
+        // recovery meters move (time-decoupled recovery).
+        let dag = diamond();
+        let cfg = Config::default();
+        let base = run_wukong(&dag, &cfg, 9);
+        let mut crashy_cfg = cfg.clone();
+        crashy_cfg.crashes =
+            crate::platform::faults::ShardCrashPlan::with_crashes(1.0, 2);
+        let r = run_wukong(&dag, &crashy_cfg, 9);
+        assert_eq!(r.metrics.durability.recoveries, 2);
+        assert!(r.metrics.durability.stall_s > 0.0);
+        assert_eq!(base.sim_events, r.sim_events);
+        assert_eq!(base.metrics.makespan_s, r.metrics.makespan_s);
+        assert_eq!(base.metrics.kvs, r.metrics.kvs);
+        assert_eq!(base.metrics.per_task_outcome, r.metrics.per_task_outcome);
+        let mut scrubbed = r.metrics.clone();
+        scrubbed.durability.recoveries = 0;
+        scrubbed.durability.replayed_ops = 0;
+        scrubbed.durability.stall_s = 0.0;
+        assert_eq!(base.metrics, scrubbed);
+    }
+
+    #[test]
+    fn event_budget_watchdog_aborts_the_run() {
+        let dag = chain(16);
+        let mut cfg = Config::default();
+        cfg.event_budget = 5; // far below what a 16-task chain needs
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_wukong(&dag, &cfg, 1)
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("sim event budget exceeded"), "{msg}");
     }
 }

@@ -178,6 +178,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             opts.large = args.flag("large");
             opts.verbose = args.flag("verbose");
             opts.faults = args.flag("faults");
+            opts.crashes = args.flag("crashes");
             let summary = run_verify(&opts)?;
             let mut t = util::table::Table::new(vec!["metric", "value"]);
             t.row(vec!["engines".into(), summary.engines.join(" ")]);
@@ -192,11 +193,18 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             if summary.ok() {
                 println!(
                     "conformance OK: exactly-once, completion, determinism \
-                     and locality ordering hold on every case{}",
+                     and locality ordering hold on every case{}{}",
                     if opts.faults {
                         ", incl. the §3.6 fault axis (retry bounds, \
                          completed-xor-failed totality, fault-free \
                          bit-identity)"
+                    } else {
+                        ""
+                    },
+                    if opts.crashes {
+                        ", incl. the durable-KVS crash axis (recovered \
+                         runs byte-identical to uninterrupted modulo \
+                         recovery meters)"
                     } else {
                         ""
                     }

@@ -4,7 +4,7 @@
 pub mod timeline;
 
 use crate::platform::{Billing, Prices};
-use crate::storage::KvsMetrics;
+use crate::storage::{DurabilityMetrics, KvsMetrics};
 pub use timeline::Timeline;
 
 /// Terminal per-task resolution under a fault plan (§3.6). Every task
@@ -93,6 +93,15 @@ pub struct RunMetrics {
     pub per_task_attempts: Vec<u32>,
     /// Terminal per-task outcome, indexed by `TaskId` (len == DAG size).
     pub per_task_outcome: Vec<TaskOutcome>,
+    /// Durability-tier meters (KVS + MDS WAL/snapshot/recovery). The
+    /// WAL/snapshot fields are data-plane (identical between a crashed
+    /// and a crash-free run over the same ops); `recoveries`,
+    /// `replayed_ops` and `stall_s` are the *only* metrics a shard
+    /// crash may perturb — `verify --crashes` asserts exactly that.
+    pub durability: DurabilityMetrics,
+    /// Inline task-payload bytes passed through the proxy's invoker
+    /// pool (wukong only; 0 for engines without a proxy).
+    pub proxy_inline_bytes: u64,
 }
 
 impl RunMetrics {

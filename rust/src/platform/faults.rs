@@ -26,6 +26,11 @@ use crate::util::Rng;
 /// distinct from the plain run seed so the streams never alias.
 const FAULT_STREAM_SALT: u64 = 0xFA17_57E4_A06B_1D2C;
 
+/// Salt for the dedicated *shard-crash* stream ([`CrashStream`]).
+/// Distinct from [`FAULT_STREAM_SALT`] so executor-fault draws and
+/// KVS-crash draws never alias each other or the main run stream.
+const CRASH_STREAM_SALT: u64 = 0xC4A5_4B1D_5EED_90F3;
+
 /// Fault model: each execution attempt fails independently with
 /// `p_fail`. `Copy`: two scalars — engines pass it by value instead of
 /// cloning per executor start.
@@ -102,6 +107,90 @@ impl FaultStream {
     /// every `r`).
     pub fn attempt_fails(&mut self) -> bool {
         self.plan.p_fail > 0.0 && self.rng.f64() < self.plan.p_fail
+    }
+}
+
+/// Crash model for the KVS tier: each storage op independently crashes
+/// its shard with `p_crash`, up to `max_crashes` crashes per run. The
+/// crashed shard recovers by replaying its snapshot + WAL suffix
+/// (see `storage::durability`). `Copy`: two scalars, like [`FaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardCrashPlan {
+    pub p_crash: f64,
+    pub max_crashes: u32,
+}
+
+impl Default for ShardCrashPlan {
+    fn default() -> Self {
+        ShardCrashPlan {
+            p_crash: 0.0,
+            max_crashes: 4,
+        }
+    }
+}
+
+impl ShardCrashPlan {
+    pub fn with_crash_rate(p_crash: f64) -> ShardCrashPlan {
+        ShardCrashPlan {
+            p_crash,
+            max_crashes: 4,
+        }
+    }
+
+    pub fn with_crashes(p_crash: f64, max_crashes: u32) -> ShardCrashPlan {
+        ShardCrashPlan {
+            p_crash,
+            max_crashes,
+        }
+    }
+}
+
+/// The dedicated shard-crash RNG stream for one run: crash points are
+/// drawn here and *only* here (salted split of the run seed, distinct
+/// from [`FaultStream`]'s salt), so enabling shard crashes can never
+/// shift executor-fault draws or the main simulation stream — a
+/// `p_crash = 0` plan is bit-identical to no plan at all.
+#[derive(Debug, Clone)]
+pub struct CrashStream {
+    plan: ShardCrashPlan,
+    rng: Rng,
+    fired: u32,
+}
+
+impl CrashStream {
+    /// Derive the crash stream for a run from its seed (salted split —
+    /// independent of `Rng::new(seed)`, the fault stream, and every
+    /// fork engines take from either).
+    pub fn for_run(plan: ShardCrashPlan, seed: u64) -> CrashStream {
+        CrashStream {
+            plan,
+            rng: Rng::new(seed ^ CRASH_STREAM_SALT),
+            fired: 0,
+        }
+    }
+
+    pub fn plan(&self) -> ShardCrashPlan {
+        self.plan
+    }
+
+    /// How many crashes this stream has fired so far.
+    pub fn fired(&self) -> u32 {
+        self.fired
+    }
+
+    /// Decide whether the storage op being served crashes its shard.
+    /// Draws from the stream only while `p_crash > 0` and the
+    /// `max_crashes` budget is unspent, so a zero-rate plan consumes
+    /// nothing and an exhausted plan stops perturbing the stream.
+    pub fn op_crashes(&mut self) -> bool {
+        if self.plan.p_crash <= 0.0 || self.fired >= self.plan.max_crashes {
+            return false;
+        }
+        let crash = self.rng.f64() < self.plan.p_crash;
+        if crash {
+            self.fired += 1;
+        }
+        crash
     }
 }
 
@@ -224,5 +313,51 @@ mod tests {
         // Re-propagating the overlapping set marks only what is new.
         assert_eq!(propagate_failures(&dag, &[1, 2], &mut outcome), 1);
         assert_eq!(outcome[2], TaskOutcome::Failed);
+    }
+
+    #[test]
+    fn zero_rate_crash_plan_never_draws() {
+        let mut s = CrashStream::for_run(ShardCrashPlan::with_crash_rate(0.0), 1);
+        assert!((0..1000).all(|_| !s.op_crashes()));
+        assert_eq!(s.fired(), 0);
+        // The stream was never consumed: it still equals a fresh one.
+        let mut fresh = CrashStream::for_run(ShardCrashPlan::with_crash_rate(0.0), 1);
+        assert_eq!(s.rng.next_u64(), fresh.rng.next_u64());
+    }
+
+    #[test]
+    fn crash_budget_caps_fired_crashes() {
+        let mut s = CrashStream::for_run(ShardCrashPlan::with_crashes(1.0, 3), 2);
+        let crashes = (0..100).filter(|_| s.op_crashes()).count();
+        assert_eq!(crashes, 3);
+        assert_eq!(s.fired(), 3);
+        // Exhausted budget: no further draws perturb the stream.
+        let snapshot = s.rng.clone().next_u64();
+        assert!(!s.op_crashes());
+        assert_eq!(s.rng.next_u64(), snapshot);
+    }
+
+    #[test]
+    fn crash_stream_is_deterministic_and_distinct_from_faults() {
+        let plan = ShardCrashPlan::with_crashes(0.5, u32::MAX);
+        let mut a = CrashStream::for_run(plan, 7);
+        let mut b = CrashStream::for_run(plan, 7);
+        let xs: Vec<bool> = (0..100).map(|_| a.op_crashes()).collect();
+        let ys: Vec<bool> = (0..100).map(|_| b.op_crashes()).collect();
+        assert_eq!(xs, ys);
+        // Distinct salt: crash draws never alias fault draws for the
+        // same run seed.
+        let mut crash = CrashStream::for_run(plan, 7);
+        let mut fault = FaultStream::for_run(FaultPlan::with_failure_rate(0.5), 7);
+        let cs: Vec<u64> = (0..8).map(|_| crash.rng.next_u64()).collect();
+        let fs: Vec<u64> = (0..8).map(|_| fault.rng.next_u64()).collect();
+        assert_ne!(cs, fs);
+    }
+
+    #[test]
+    fn crash_rate_is_roughly_respected() {
+        let mut s = CrashStream::for_run(ShardCrashPlan::with_crashes(0.3, u32::MAX), 3);
+        let crashes = (0..10_000).filter(|_| s.op_crashes()).count();
+        assert!((2_700..3_300).contains(&crashes), "crashes={crashes}");
     }
 }

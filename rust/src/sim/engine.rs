@@ -57,6 +57,7 @@ pub struct Sim<E> {
     seq: u64,
     processed: u64,
     peak_pending: usize,
+    event_budget: u64,
     heap: BinaryHeap<Entry<E>>,
 }
 
@@ -73,8 +74,18 @@ impl<E> Sim<E> {
             seq: 0,
             processed: 0,
             peak_pending: 0,
+            event_budget: 0,
             heap: BinaryHeap::new(),
         }
+    }
+
+    /// Watchdog: cap the number of events this calendar may process
+    /// (0 = unlimited, the default). Exceeding the budget panics, which
+    /// `wukong verify` catches and reports as a violation — a livelocked
+    /// engine (e.g. a recovery bug rescheduling itself forever) fails
+    /// fast instead of hanging CI.
+    pub fn set_event_budget(&mut self, budget: u64) {
+        self.event_budget = budget;
     }
 
     /// Current virtual time.
@@ -114,10 +125,22 @@ impl<E> Sim<E> {
         self.at(self.now.saturating_add(dt), ev);
     }
 
+    /// Panic if the event budget is set and already spent (called
+    /// before processing the next event).
+    fn charge_budget(&self) {
+        if self.event_budget != 0 && self.processed >= self.event_budget {
+            panic!(
+                "sim event budget exceeded ({} events): livelocked engine?",
+                self.event_budget
+            );
+        }
+    }
+
     /// Run until the calendar drains. Returns the final time.
     pub fn run<W: Handler<Ev = E>>(&mut self, world: &mut W) -> Time {
         while let Some(e) = self.heap.pop() {
             debug_assert!(e.t >= self.now, "time went backwards");
+            self.charge_budget();
             self.now = e.t;
             self.processed += 1;
             world.handle(self, e.ev);
@@ -138,6 +161,7 @@ impl<E> Sim<E> {
                 break;
             }
             let e = self.heap.pop().unwrap();
+            self.charge_budget();
             self.now = e.t;
             self.processed += 1;
             world.handle(self, e.ev);
@@ -260,6 +284,46 @@ mod tests {
     fn processed_counts_events() {
         let mut sim: Sim<Ev> = Sim::new();
         let mut w = World::default();
+        for i in 0..100 {
+            sim.at(i, Ev::Nop);
+        }
+        sim.run(&mut w);
+        assert_eq!(sim.processed(), 100);
+    }
+
+    #[test]
+    fn event_budget_panics_on_livelock() {
+        let mut sim: Sim<Ev> = Sim::new();
+        sim.set_event_budget(50);
+        // Stand-in for a livelock: more events than the budget allows.
+        for i in 0..100 {
+            sim.at(i, Ev::Nop);
+        }
+        let mut w = World::default();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sim.run(&mut w);
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("sim event budget exceeded (50 events)"), "{msg}");
+    }
+
+    #[test]
+    fn event_budget_zero_is_unlimited_and_exact_budget_passes() {
+        let mut w = World::default();
+        let mut sim: Sim<Ev> = Sim::new();
+        sim.set_event_budget(0);
+        for i in 0..100 {
+            sim.at(i, Ev::Nop);
+        }
+        sim.run(&mut w);
+        assert_eq!(sim.processed(), 100);
+        // Exactly-at-budget drains cleanly: the cap is on *exceeding*.
+        let mut sim: Sim<Ev> = Sim::new();
+        sim.set_event_budget(100);
         for i in 0..100 {
             sim.at(i, Ev::Nop);
         }

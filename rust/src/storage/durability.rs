@@ -1,0 +1,364 @@
+//! Durability tier for the storage model: per-shard write-ahead log +
+//! periodic snapshots, crash recovery by replay, and lossless
+//! checkpoint/restore of the durable state.
+//!
+//! Modeled on the classic WAL/snapshot design (strata-core style): every
+//! acknowledged write is appended to the shard's WAL *before* it is
+//! acknowledged (synchronous logging — the simulated fsync cost is
+//! `StorageConfig::wal_fsync_s` on the write path), and once the WAL
+//! reaches `StorageConfig::snapshot_every_ops` records the shard takes a
+//! snapshot of its live object table and truncates the WAL. A crash
+//! drops the shard's live state; recovery rebuilds it by loading the
+//! snapshot and replaying the WAL suffix in order (last-write-wins).
+//!
+//! **The recovery gate.** Because the WAL is synchronous, a crash never
+//! loses an acknowledged op — a recovered shard serves exactly the bytes
+//! the crash-free run would have served. That is the property `wukong
+//! verify --crashes` checks differentially: a run interrupted and
+//! recovered at *any* crash point must be byte-identical to the
+//! uninterrupted run (same task outcomes, same KVS byte meters) modulo
+//! the recovery counters in [`DurabilityMetrics`]. To keep that gate
+//! checkable, recovery is *time-decoupled*: the replay cost
+//! (`recovery_base_s + replayed_ops * replay_op_s`) is metered as
+//! `stall_s` instead of being injected into the event calendar. A real
+//! stall would shift op completion times, which on the wukong engine
+//! reorders MDS fan-in claims and changes which executor wins a child —
+//! legitimately different bytes, and no differential gate could hold.
+//! The modeling stance: crashes cost recovery work (visible in the
+//! meters), never data (checked byte-for-byte, run against run).
+
+use std::collections::HashMap;
+
+/// Per-run durability meters, surfaced in `RunMetrics::durability`.
+/// The WAL/snapshot meters are part of the data plane (identical
+/// between a crashed and a crash-free run over the same ops); the
+/// recovery meters (`recoveries`, `replayed_ops`, `stall_s`) are the
+/// only fields a crash may perturb.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DurabilityMetrics {
+    /// WAL records appended (one per acknowledged mutation).
+    pub wal_appends: u64,
+    /// Bytes appended to WALs (16-byte record header + payload).
+    pub wal_bytes: u64,
+    /// Snapshots taken (WAL truncations).
+    pub snapshots: u64,
+    /// Bytes written into snapshots (16 bytes + payload per live key).
+    pub snapshot_bytes: u64,
+    /// Shard crash-recoveries performed.
+    pub recoveries: u64,
+    /// Snapshot entries + WAL records replayed across all recoveries.
+    pub replayed_ops: u64,
+    /// Total simulated recovery time (metered, not injected into the
+    /// event calendar — see the module docs).
+    pub stall_s: f64,
+}
+
+impl DurabilityMetrics {
+    /// Sum two meter sets (e.g. the KVS tier + the MDS tier).
+    pub fn merged(self, other: DurabilityMetrics) -> DurabilityMetrics {
+        DurabilityMetrics {
+            wal_appends: self.wal_appends + other.wal_appends,
+            wal_bytes: self.wal_bytes + other.wal_bytes,
+            snapshots: self.snapshots + other.snapshots,
+            snapshot_bytes: self.snapshot_bytes + other.snapshot_bytes,
+            recoveries: self.recoveries + other.recoveries,
+            replayed_ops: self.replayed_ops + other.replayed_ops,
+            stall_s: self.stall_s + other.stall_s,
+        }
+    }
+}
+
+/// One replayable WAL record: a completed write of `bytes` under `key`.
+/// Fixed 16-byte header (two u64s) + the payload it describes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpRecord {
+    pub key: u64,
+    pub bytes: u64,
+}
+
+/// Serialized size of one record header.
+pub const RECORD_HEADER_BYTES: u64 = 16;
+
+/// One shard's durable state: the live object table (authoritative
+/// in-memory state), the last snapshot, and the WAL suffix since it.
+/// Invariant: `live == replay(snapshot, wal)` — recovery asserts it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardDurability {
+    live: HashMap<u64, u64>,
+    snapshot: Vec<(u64, u64)>,
+    wal: Vec<OpRecord>,
+}
+
+impl ShardDurability {
+    /// Append a write to the WAL and apply it to the live table.
+    /// Returns the bytes appended to the WAL (header + payload).
+    pub fn apply_write(&mut self, key: u64, bytes: u64) -> u64 {
+        self.wal.push(OpRecord { key, bytes });
+        self.live.insert(key, bytes);
+        RECORD_HEADER_BYTES + bytes
+    }
+
+    /// Take a snapshot if the WAL has reached `every` records
+    /// (`every == 0` disables snapshotting). Returns the serialized
+    /// snapshot size in bytes if one was taken.
+    pub fn maybe_snapshot(&mut self, every: u64) -> Option<u64> {
+        if every == 0 || (self.wal.len() as u64) < every {
+            return None;
+        }
+        let mut entries: Vec<(u64, u64)> = self.live.iter().map(|(&k, &v)| (k, v)).collect();
+        entries.sort_unstable();
+        let size: u64 = entries
+            .iter()
+            .map(|&(_, v)| RECORD_HEADER_BYTES + v)
+            .sum();
+        self.snapshot = entries;
+        self.wal.clear();
+        Some(size)
+    }
+
+    /// Rebuild the live table from snapshot + WAL replay, exactly as
+    /// recovery would (last-write-wins over the snapshot image).
+    fn replayed(&self) -> HashMap<u64, u64> {
+        let mut live: HashMap<u64, u64> = self.snapshot.iter().copied().collect();
+        for rec in &self.wal {
+            live.insert(rec.key, rec.bytes);
+        }
+        live
+    }
+
+    /// Crash this shard and recover it: drop the live table, replay
+    /// snapshot + WAL, and install the rebuilt state. Returns the
+    /// number of replayed records (snapshot entries + WAL suffix).
+    /// Panics if the rebuilt state differs from the pre-crash live
+    /// table — that would mean an acknowledged op was never logged,
+    /// i.e. the WAL invariant is broken and the recovery gate with it.
+    pub fn crash_and_recover(&mut self) -> u64 {
+        let rebuilt = self.replayed();
+        let pre_crash = std::mem::take(&mut self.live);
+        assert_eq!(
+            rebuilt, pre_crash,
+            "WAL replay diverged from the acknowledged state"
+        );
+        self.live = rebuilt;
+        (self.snapshot.len() + self.wal.len()) as u64
+    }
+
+    /// Number of live keys on this shard.
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Stored size of `key`, if present.
+    pub fn get(&self, key: u64) -> Option<u64> {
+        self.live.get(&key).copied()
+    }
+
+    /// WAL suffix length (records since the last snapshot).
+    pub fn wal_len(&self) -> usize {
+        self.wal.len()
+    }
+
+    /// Serialize this shard's durable state (checkpoint). Hand-rolled
+    /// little-endian layout so the round-trip is exact and
+    /// dependency-free:
+    /// `[n_live][(key,bytes)*n_live sorted][n_snap][(key,bytes)*][n_wal][(key,bytes)*]`.
+    pub fn checkpoint(&self, out: &mut Vec<u8>) {
+        let mut live: Vec<(u64, u64)> = self.live.iter().map(|(&k, &v)| (k, v)).collect();
+        live.sort_unstable();
+        put_u64(out, live.len() as u64);
+        for (k, v) in live {
+            put_u64(out, k);
+            put_u64(out, v);
+        }
+        put_u64(out, self.snapshot.len() as u64);
+        for &(k, v) in &self.snapshot {
+            put_u64(out, k);
+            put_u64(out, v);
+        }
+        put_u64(out, self.wal.len() as u64);
+        for rec in &self.wal {
+            put_u64(out, rec.key);
+            put_u64(out, rec.bytes);
+        }
+    }
+
+    /// Deserialize a shard checkpoint written by [`checkpoint`]
+    /// (consumes from `at`, advancing it).
+    ///
+    /// [`checkpoint`]: ShardDurability::checkpoint
+    pub fn restore(buf: &[u8], at: &mut usize) -> Result<ShardDurability, String> {
+        let n_live = take_u64(buf, at)?;
+        let mut live = HashMap::with_capacity(n_live as usize);
+        for _ in 0..n_live {
+            let k = take_u64(buf, at)?;
+            let v = take_u64(buf, at)?;
+            live.insert(k, v);
+        }
+        let n_snap = take_u64(buf, at)?;
+        let mut snapshot = Vec::with_capacity(n_snap as usize);
+        for _ in 0..n_snap {
+            let k = take_u64(buf, at)?;
+            let v = take_u64(buf, at)?;
+            snapshot.push((k, v));
+        }
+        let n_wal = take_u64(buf, at)?;
+        let mut wal = Vec::with_capacity(n_wal as usize);
+        for _ in 0..n_wal {
+            let key = take_u64(buf, at)?;
+            let bytes = take_u64(buf, at)?;
+            wal.push(OpRecord { key, bytes });
+        }
+        Ok(ShardDurability {
+            live,
+            snapshot,
+            wal,
+        })
+    }
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn take_u64(buf: &[u8], at: &mut usize) -> Result<u64, String> {
+    let end = at
+        .checked_add(8)
+        .filter(|&e| e <= buf.len())
+        .ok_or_else(|| format!("truncated checkpoint at byte {at}"))?;
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&buf[*at..end]);
+    *at = end;
+    Ok(u64::from_le_bytes(raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(ops: &[(u64, u64)], snapshot_every: u64) -> ShardDurability {
+        let mut s = ShardDurability::default();
+        for &(k, v) in ops {
+            s.apply_write(k, v);
+            s.maybe_snapshot(snapshot_every);
+        }
+        s
+    }
+
+    #[test]
+    fn wal_replay_reconstructs_live_state_at_every_crash_point() {
+        let ops: Vec<(u64, u64)> = (0..64u64).map(|i| (i % 7, 100 + i)).collect();
+        for cut in 0..=ops.len() {
+            for every in [0u64, 1, 4, 16] {
+                let mut s = filled(&ops[..cut], every);
+                let expected: HashMap<u64, u64> = s.live.clone();
+                let replayed = s.crash_and_recover();
+                assert_eq!(s.live, expected, "cut={cut} every={every}");
+                assert_eq!(
+                    replayed as usize,
+                    s.snapshot.len() + s.wal.len(),
+                    "cut={cut} every={every}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_compacts_the_wal_and_preserves_recovery() {
+        let mut s = ShardDurability::default();
+        for i in 0..10u64 {
+            s.apply_write(i % 3, i);
+            s.maybe_snapshot(4);
+        }
+        // 10 appends with a 4-record snapshot cadence: the WAL was
+        // truncated twice, leaving a 2-record suffix over 3 live keys.
+        assert_eq!(s.wal_len(), 2);
+        assert_eq!(s.snapshot.len(), 3);
+        assert_eq!(s.live_len(), 3);
+        let pre = s.live.clone();
+        s.crash_and_recover();
+        assert_eq!(s.live, pre);
+    }
+
+    #[test]
+    fn snapshot_size_meters_header_plus_payload() {
+        let mut s = ShardDurability::default();
+        assert_eq!(s.apply_write(1, 100), 116);
+        assert_eq!(s.apply_write(2, 50), 66);
+        assert_eq!(s.maybe_snapshot(0), None, "every=0 disables snapshots");
+        assert_eq!(s.maybe_snapshot(2), Some(16 + 100 + 16 + 50));
+        assert_eq!(s.wal_len(), 0);
+    }
+
+    #[test]
+    fn last_write_wins_on_replay() {
+        let mut s = ShardDurability::default();
+        s.apply_write(7, 10);
+        s.apply_write(7, 20);
+        s.apply_write(7, 30);
+        s.crash_and_recover();
+        assert_eq!(s.get(7), Some(30));
+        assert_eq!(s.live_len(), 1);
+    }
+
+    #[test]
+    fn checkpoint_round_trips_losslessly() {
+        let ops: Vec<(u64, u64)> = (0..50u64).map(|i| (i * 31 % 11, i + 1)).collect();
+        for cut in [0, 1, 7, 25, 50] {
+            let s = filled(&ops[..cut], 8);
+            let mut buf = Vec::new();
+            s.checkpoint(&mut buf);
+            let mut at = 0;
+            let restored = ShardDurability::restore(&buf, &mut at).unwrap();
+            assert_eq!(at, buf.len(), "cut={cut}: trailing bytes");
+            assert_eq!(restored, s, "cut={cut}");
+            // Re-checkpointing the restored state is byte-identical.
+            let mut buf2 = Vec::new();
+            restored.checkpoint(&mut buf2);
+            assert_eq!(buf2, buf, "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_truncated_input() {
+        let s = filled(&[(1, 10), (2, 20)], 0);
+        let mut buf = Vec::new();
+        s.checkpoint(&mut buf);
+        for cut in [0, 3, 8, buf.len() - 1] {
+            let mut at = 0;
+            assert!(
+                ShardDurability::restore(&buf[..cut], &mut at).is_err(),
+                "cut={cut} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn merged_metrics_sum_fieldwise() {
+        let a = DurabilityMetrics {
+            wal_appends: 1,
+            wal_bytes: 2,
+            snapshots: 3,
+            snapshot_bytes: 4,
+            recoveries: 5,
+            replayed_ops: 6,
+            stall_s: 0.5,
+        };
+        let b = DurabilityMetrics {
+            wal_appends: 10,
+            wal_bytes: 20,
+            snapshots: 30,
+            snapshot_bytes: 40,
+            recoveries: 50,
+            replayed_ops: 60,
+            stall_s: 1.5,
+        };
+        let m = a.merged(b);
+        assert_eq!(m.wal_appends, 11);
+        assert_eq!(m.wal_bytes, 22);
+        assert_eq!(m.snapshots, 33);
+        assert_eq!(m.snapshot_bytes, 44);
+        assert_eq!(m.recoveries, 55);
+        assert_eq!(m.replayed_ops, 66);
+        assert_eq!(m.stall_s, 2.0);
+    }
+}

@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 
+use super::durability::{DurabilityMetrics, RECORD_HEADER_BYTES};
 use crate::config::StorageConfig;
 use crate::sim::{secs, Time};
 
@@ -23,7 +24,9 @@ use crate::sim::{secs, Time};
 pub struct MdsModel {
     latency: Time,
     per_op: Time,
+    wal_fsync: Time,
     counters: HashMap<u64, u32>,
+    durability: DurabilityMetrics,
     pub ops: u64,
 }
 
@@ -32,7 +35,9 @@ impl MdsModel {
         MdsModel {
             latency: secs(cfg.mds_latency_s),
             per_op: secs(1.0 / cfg.mds_ops_per_sec.max(1.0)),
+            wal_fsync: secs(cfg.wal_fsync_s),
             counters: HashMap::new(),
+            durability: DurabilityMetrics::default(),
             ops: 0,
         }
     }
@@ -43,11 +48,23 @@ impl MdsModel {
     }
 
     /// Atomic increment; returns `(new_value, completion_time)`.
+    /// Mutations are WAL-logged like KVS writes: a fixed-size counter
+    /// record per `incr` (metered; `wal_fsync_s` rides on the op time)
+    /// — counter replay is what makes a coordinator restart lossless.
     pub fn incr(&mut self, now: Time, key: u64) -> (u32, Time) {
-        let t = self.op(now);
+        let t = self.op(now) + self.wal_fsync;
+        self.durability.wal_appends += 1;
+        self.durability.wal_bytes += RECORD_HEADER_BYTES;
         let v = self.counters.entry(key).or_insert(0);
         *v += 1;
         (*v, t)
+    }
+
+    /// Durability meters for this store (WAL appends/bytes; the MDS
+    /// tier never crashes in the current model, so the recovery
+    /// counters stay zero).
+    pub fn durability(&self) -> DurabilityMetrics {
+        self.durability
     }
 
     /// Read a counter; returns `(value, completion_time)`.
@@ -113,5 +130,32 @@ mod tests {
             m.incr(0, 9);
         }
         assert_eq!(m.ops, 100);
+    }
+
+    #[test]
+    fn incr_is_wal_metered_but_reads_are_not() {
+        let mut m = mds();
+        m.incr(0, 1);
+        m.incr(0, 1);
+        m.read(0, 1);
+        assert_eq!(m.durability().wal_appends, 2);
+        assert_eq!(m.durability().wal_bytes, 2 * 16);
+        assert_eq!(m.durability().recoveries, 0);
+    }
+
+    #[test]
+    fn wal_fsync_rides_on_incr_not_read() {
+        let cfg = StorageConfig {
+            wal_fsync_s: 0.5,
+            ..StorageConfig::default()
+        };
+        let mut m = MdsModel::new(&cfg);
+        let (_, ti) = m.incr(0, 1);
+        let (_, tr) = m.read(0, 1);
+        let mut free = mds();
+        let (_, ti0) = free.incr(0, 1);
+        let (_, tr0) = free.read(0, 1);
+        assert_eq!(ti, ti0 + secs(0.5));
+        assert_eq!(tr, tr0);
     }
 }

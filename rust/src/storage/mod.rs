@@ -7,11 +7,13 @@
 //! numbers are metered, not modeled); only *time* is modeled via the
 //! queueing resources.
 
+pub mod durability;
 pub mod kvs;
 pub mod mds;
 pub mod proxy;
 pub mod real_kvs;
 
+pub use durability::{DurabilityMetrics, OpRecord, ShardDurability};
 pub use kvs::{KvsMetrics, KvsModel};
 pub use mds::MdsModel;
 pub use proxy::InvokerPool;

@@ -14,6 +14,10 @@ pub struct InvokerPool {
     pool: MultiResource,
     pub delegated_fanouts: u64,
     pub invocations: u64,
+    /// Bytes of inline task payload passed through the proxy (each of
+    /// a batch's invocations carries the same serialized argument) —
+    /// the proxy half of the inline-vs-KVS byte accounting.
+    pub inline_bytes: u64,
 }
 
 impl InvokerPool {
@@ -22,20 +26,24 @@ impl InvokerPool {
             pool: MultiResource::new(n_invokers.max(1)),
             delegated_fanouts: 0,
             invocations: 0,
+            inline_bytes: 0,
         }
     }
 
     /// Schedule `n` invocations arriving at `now`, each costing
-    /// `per_invoke` of an invoker process. Returns each invocation's
-    /// completion (executor start) time.
+    /// `per_invoke` of an invoker process and carrying `payload_bytes`
+    /// of inline argument (0 when the argument travels via the KVS).
+    /// Returns each invocation's completion (executor start) time.
     pub fn invoke_batch(
         &mut self,
         now: Time,
         n: usize,
         per_invoke: Time,
+        payload_bytes: u64,
     ) -> Vec<Time> {
         self.delegated_fanouts += 1;
         self.invocations += n as u64;
+        self.inline_bytes += n as u64 * payload_bytes;
         (0..n)
             .map(|_| self.pool.acquire(now, per_invoke).1)
             .collect()
@@ -53,7 +61,7 @@ mod tests {
     #[test]
     fn batch_parallelizes_across_invokers() {
         let mut p = InvokerPool::new(4);
-        let ends = p.invoke_batch(0, 8, 50_000);
+        let ends = p.invoke_batch(0, 8, 50_000, 0);
         // 8 invokes on 4 procs: first 4 at 50 ms, next 4 at 100 ms.
         assert_eq!(ends.iter().filter(|&&t| t == 50_000).count(), 4);
         assert_eq!(ends.iter().filter(|&&t| t == 100_000).count(), 4);
@@ -62,7 +70,7 @@ mod tests {
     #[test]
     fn single_invoker_serializes() {
         let mut p = InvokerPool::new(1);
-        let ends = p.invoke_batch(0, 3, 10);
+        let ends = p.invoke_batch(0, 3, 10, 0);
         assert_eq!(ends, vec![10, 20, 30]);
     }
 
@@ -71,8 +79,19 @@ mod tests {
         // The paper's claim: N invokers give ~N× faster fan-out launches.
         let mut p1 = InvokerPool::new(1);
         let mut p64 = InvokerPool::new(64);
-        let slow = *p1.invoke_batch(0, 640, 50_000).iter().max().unwrap();
-        let fast = *p64.invoke_batch(0, 640, 50_000).iter().max().unwrap();
+        let slow = *p1.invoke_batch(0, 640, 50_000, 0).iter().max().unwrap();
+        let fast = *p64.invoke_batch(0, 640, 50_000, 0).iter().max().unwrap();
         assert_eq!(slow / fast, 64);
+    }
+
+    #[test]
+    fn inline_payload_bytes_pass_through_exactly() {
+        let mut p = InvokerPool::new(4);
+        p.invoke_batch(0, 8, 10, 1000); // 8 invocations × 1000 B inline
+        p.invoke_batch(0, 3, 10, 0); // KVS-carried args: no inline bytes
+        p.invoke_batch(0, 2, 10, 256); // 2 × 256 B
+        assert_eq!(p.inline_bytes, 8 * 1000 + 2 * 256);
+        assert_eq!(p.invocations, 13);
+        assert_eq!(p.delegated_fanouts, 3);
     }
 }

@@ -20,7 +20,7 @@
 
 use crate::config::{Config, StorageConfig};
 use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
-use crate::platform::faults::FaultPlan;
+use crate::platform::faults::{FaultPlan, ShardCrashPlan};
 use crate::util::prop::gen;
 use crate::util::Rng;
 
@@ -309,6 +309,34 @@ pub fn fault_matrix() -> Vec<FaultPlan> {
     out
 }
 
+/// The shard-crash matrix swept by `wukong verify --crashes`: no
+/// crashes (the bit-identity regression against the crash-free
+/// reference), rare crashes, op-level crash stress, and a tight
+/// one-crash budget (pins the `max_crashes` cap).
+pub fn crash_matrix() -> Vec<ShardCrashPlan> {
+    vec![
+        ShardCrashPlan::with_crashes(0.0, 4),
+        ShardCrashPlan::with_crashes(0.05, 4),
+        ShardCrashPlan::with_crashes(0.5, 4),
+        ShardCrashPlan::with_crashes(0.5, 1),
+    ]
+}
+
+/// Durability cost profiles for the crash axis, derived from a case's
+/// base config: the default free-WAL tier (fsync and snapshots cost
+/// nothing, so crash-free runs are bit-identical to the base sweep's)
+/// and a costed tier (nonzero fsync time + a snapshot cadence + replay
+/// costs). Each profile gets its *own* crash-free reference inside the
+/// axis, because a nonzero `wal_fsync_s` legitimately shifts timing.
+pub fn crash_profiles(base: &Config) -> Vec<(&'static str, Config)> {
+    let mut costed = base.clone();
+    costed.storage.wal_fsync_s = 2e-4;
+    costed.storage.snapshot_every_ops = 32;
+    costed.storage.replay_op_s = 2e-5;
+    costed.storage.recovery_base_s = 0.05;
+    vec![("wal=free", base.clone()), ("wal=costed", costed)]
+}
+
 /// Random policy-knob + substrate configuration (the per-case baseline;
 /// the harness additionally sweeps the exhaustive knob matrix on top).
 pub fn random_config(rng: &mut Rng) -> Config {
@@ -433,6 +461,39 @@ mod tests {
         assert_eq!(m.len(), FAULT_RATES.len() * FAULT_RETRIES.len());
         assert_eq!(m.iter().filter(|p| p.p_fail == 0.0).count(), 2);
         assert_eq!(m.iter().filter(|p| p.max_retries == 2).count(), 4);
+    }
+
+    #[test]
+    fn crash_matrix_covers_zero_stress_and_budget_cap() {
+        let m = crash_matrix();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.iter().filter(|p| p.p_crash == 0.0).count(), 1);
+        assert!(m.iter().any(|p| p.max_crashes == 1));
+        assert!(m.iter().all(|p| (0.0..=1.0).contains(&p.p_crash)));
+    }
+
+    #[test]
+    fn crash_profiles_differ_only_in_durability_knobs() {
+        let base = Config::default();
+        let profiles = crash_profiles(&base);
+        assert_eq!(profiles.len(), 2);
+        let (name_free, free) = &profiles[0];
+        let (name_costed, costed) = &profiles[1];
+        assert_eq!(*name_free, "wal=free");
+        assert_eq!(*name_costed, "wal=costed");
+        // The free profile is the base config untouched.
+        assert_eq!(free.storage.wal_fsync_s, base.storage.wal_fsync_s);
+        assert_eq!(
+            free.storage.snapshot_every_ops,
+            base.storage.snapshot_every_ops
+        );
+        // The costed profile turns every durability knob on, and
+        // leaves the data plane alone.
+        assert!(costed.storage.wal_fsync_s > 0.0);
+        assert!(costed.storage.snapshot_every_ops > 0);
+        assert_eq!(costed.storage.n_shards, base.storage.n_shards);
+        assert_eq!(costed.storage.shard_bw, base.storage.shard_bw);
+        assert_eq!(costed.wukong.use_clustering, base.wukong.use_clustering);
     }
 
     #[test]

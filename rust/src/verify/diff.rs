@@ -15,12 +15,19 @@
 //!   either completed or reported-failed (never silently lost), attempts
 //!   never exceed `1 + max_retries`, completed tasks executed
 //!   effectively-once, and `p_fail = 0` runs are bit-identical to the
-//!   fault-free baseline.
+//!   fault-free baseline;
+//! * **crash recovery** — a run with mid-run shard crashes is
+//!   byte-identical to the uninterrupted run in every data-plane metric
+//!   (task outcomes, KVS/WAL byte meters, event counts, makespan); only
+//!   the recovery meters (`recoveries`, `replayed_ops`, `stall_s`) may
+//!   differ, and they must be internally consistent with the crash plan
+//!   and the configured recovery costs.
 
+use crate::config::StorageConfig;
 use crate::dag::Dag;
 use crate::engine::EngineReport;
 use crate::metrics::TaskOutcome;
-use crate::platform::faults::FaultPlan;
+use crate::platform::faults::{FaultPlan, ShardCrashPlan};
 
 /// The closed-form KVS traffic of a fully-stateless engine on `dag`:
 /// every task writes its output once; every dependency edge reads the
@@ -258,6 +265,96 @@ pub fn check_fault_free_baseline(
     Ok(())
 }
 
+/// The durable-KVS recovery gate: a crashed-and-recovered run must be
+/// byte-identical to the uninterrupted `reference` run, except for the
+/// three recovery meters a crash is *allowed* to touch.
+///
+/// Checked in two halves:
+///
+/// 1. **Recovery-meter sanity** — `p_crash = 0` plans recover zero
+///    times; `recoveries` never exceeds the plan's crash budget; the
+///    metered stall covers at least `recoveries × recovery_base_s`
+///    (replay time comes on top).
+/// 2. **Data-plane bit-identity** — with `recoveries`, `replayed_ops`
+///    and `stall_s` scrubbed from both sides, the full metrics structs
+///    (and DES event counts) must compare equal. Recovery is
+///    time-decoupled by design — the synchronous WAL means no
+///    acknowledged op is lost, so outcomes, byte meters and event
+///    streams cannot drift.
+pub fn check_crash_recovery(
+    reference: &EngineReport,
+    rep: &EngineReport,
+    plan: ShardCrashPlan,
+    storage: &StorageConfig,
+) -> Result<(), String> {
+    let d = rep.metrics.durability;
+    if plan.p_crash <= 0.0 && d.recoveries != 0 {
+        return Err(format!(
+            "[{}] crash-recovery: p_crash=0 plan recovered {} times",
+            rep.engine, d.recoveries
+        ));
+    }
+    if d.recoveries > plan.max_crashes as u64 {
+        return Err(format!(
+            "[{}] crash-recovery: {} recoveries exceed the plan's budget \
+             of {}",
+            rep.engine, d.recoveries, plan.max_crashes
+        ));
+    }
+    let min_stall = d.recoveries as f64 * storage.recovery_base_s;
+    if d.stall_s + 1e-12 < min_stall {
+        return Err(format!(
+            "[{}] crash-recovery: metered stall {}s < {} recoveries x \
+             base {}s",
+            rep.engine, d.stall_s, d.recoveries, storage.recovery_base_s
+        ));
+    }
+    if reference.sim_events != rep.sim_events {
+        return Err(format!(
+            "[{}] crash-recovery: crashed-run event count {:?} != \
+             uninterrupted {:?} (recovery leaked into the event stream)",
+            rep.engine, rep.sim_events, reference.sim_events
+        ));
+    }
+    if reference.peak_pending != rep.peak_pending {
+        return Err(format!(
+            "[{}] crash-recovery: peak pending {:?} != uninterrupted {:?}",
+            rep.engine, rep.peak_pending, reference.peak_pending
+        ));
+    }
+    let scrub = |m: &crate::metrics::RunMetrics| {
+        let mut m = m.clone();
+        m.durability.recoveries = 0;
+        m.durability.replayed_ops = 0;
+        m.durability.stall_s = 0.0;
+        m
+    };
+    let a = scrub(&reference.metrics);
+    let b = scrub(&rep.metrics);
+    if a != b {
+        let what = if a.makespan_s != b.makespan_s {
+            format!("makespan {} vs {}", a.makespan_s, b.makespan_s)
+        } else if a.kvs != b.kvs {
+            format!("kvs {:?} vs {:?}", a.kvs, b.kvs)
+        } else if a.durability != b.durability {
+            format!(
+                "wal/snapshot meters {:?} vs {:?}",
+                a.durability, b.durability
+            )
+        } else if a.per_task_outcome != b.per_task_outcome {
+            "per-task outcomes".to_string()
+        } else {
+            "metrics structs differ".to_string()
+        };
+        return Err(format!(
+            "[{}] crash-recovery: data plane diverged from the \
+             uninterrupted run: {what}",
+            rep.engine
+        ));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,6 +450,76 @@ mod tests {
         rep.metrics.tasks_executed = 1;
         let err = check_fault_contract(&dag, &rep, cfg.faults).unwrap_err();
         assert!(err.contains("failure"), "{err}");
+    }
+
+    #[test]
+    fn crash_recovery_gate_accepts_a_recovered_run() {
+        // numpywren is stateless: chain2 is 2 writes + 1 read, so a
+        // p=1 plan with budget 2 recovers exactly twice.
+        let dag = chain2();
+        let cfg = Config::default();
+        let reference = SimNumpywren.run(&dag, &cfg, 5);
+
+        let mut crashed = cfg.clone();
+        crashed.crashes = ShardCrashPlan::with_crashes(1.0, 2);
+        let rep = SimNumpywren.run(&dag, &crashed, 5);
+        assert_eq!(rep.metrics.durability.recoveries, 2);
+        check_crash_recovery(&reference, &rep, crashed.crashes, &crashed.storage)
+            .unwrap();
+    }
+
+    #[test]
+    fn crash_recovery_gate_rejects_data_plane_drift_and_bad_meters() {
+        let dag = chain2();
+        let cfg = Config::default();
+        let reference = SimNumpywren.run(&dag, &cfg, 5);
+        let mut crashed = cfg.clone();
+        crashed.crashes = ShardCrashPlan::with_crashes(1.0, 2);
+        let clean = SimNumpywren.run(&dag, &crashed, 5);
+
+        // Any data-plane divergence is a gate failure.
+        let mut rep = clean.clone();
+        rep.metrics.kvs.bytes_written += 1;
+        let err = check_crash_recovery(
+            &reference,
+            &rep,
+            crashed.crashes,
+            &crashed.storage,
+        )
+        .unwrap_err();
+        assert!(err.contains("data plane diverged"), "{err}");
+
+        // Recoveries beyond the plan's crash budget.
+        let mut rep = clean.clone();
+        rep.metrics.durability.recoveries = 99;
+        rep.metrics.durability.stall_s = 99.0 * crashed.storage.recovery_base_s;
+        let err = check_crash_recovery(
+            &reference,
+            &rep,
+            crashed.crashes,
+            &crashed.storage,
+        )
+        .unwrap_err();
+        assert!(err.contains("budget"), "{err}");
+
+        // A recovery that was not billed its base cost.
+        let mut rep = clean.clone();
+        rep.metrics.durability.stall_s = 0.0;
+        let err = check_crash_recovery(
+            &reference,
+            &rep,
+            crashed.crashes,
+            &crashed.storage,
+        )
+        .unwrap_err();
+        assert!(err.contains("stall"), "{err}");
+
+        // A zero-rate plan must not report recoveries at all.
+        let zero = ShardCrashPlan::with_crashes(0.0, 4);
+        let err =
+            check_crash_recovery(&reference, &clean, zero, &crashed.storage)
+                .unwrap_err();
+        assert!(err.contains("p_crash=0"), "{err}");
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! matrix and asserts the invariants in [`diff`]: exactly-once
 //! execution, completion, per-seed determinism, and the paper's locality
 //! ordering (Wukong KVS bytes ≤ stateless KVS bytes on every DAG).
+//! Opt-in axes layer on top: `--faults` sweeps the §3.6 retry matrix and
+//! `--crashes` sweeps durable-KVS shard-crash plans against the
+//! byte-identical recovery gate ([`diff::check_crash_recovery`]). Every
+//! engine run is capped by a sim event budget (watchdog), so a
+//! livelocked engine aborts and reports instead of hanging the sweep.
 //!
 //! This is the regression gate for every scaling/perf refactor: it runs
 //! artifact-free under plain `cargo test -q` (`rust/tests/conformance.rs`)
@@ -52,6 +57,12 @@ pub struct VerifyOptions {
     /// base matrix. Opt-in so fault-free sweeps (and their pinned run
     /// counts) stay byte-identical to pre-fault-axis behavior.
     pub faults: bool,
+    /// Sweep the durable-KVS crash axis (`corpus::crash_matrix` ×
+    /// `corpus::crash_profiles`) on top of the base matrix: every
+    /// crashed-and-recovered run must be byte-identical to its
+    /// uninterrupted reference modulo the recovery meters. Opt-in, like
+    /// `faults`.
+    pub crashes: bool,
 }
 
 impl Default for VerifyOptions {
@@ -64,6 +75,7 @@ impl Default for VerifyOptions {
             threads: 0,
             large: false,
             faults: false,
+            crashes: false,
         }
     }
 }
@@ -159,8 +171,20 @@ fn run_case(opts: &VerifyOptions, case: u64) -> CaseResult {
         CorpusSize::Standard
     };
     let dag = corpus::random_dag_sized(&mut rng, size);
-    let base = corpus::random_config(&mut rng);
+    let mut base = corpus::random_config(&mut rng);
     let run_seed = rng.next_u64();
+    // Watchdog: cap every engine run at an event budget far above any
+    // legitimate corpus case, so a livelocked engine (an event loop
+    // re-scheduling itself forever mid-refactor) aborts with a panic —
+    // caught by `run_guarded` and reported as a violation — instead of
+    // hanging the whole sweep.
+    if base.event_budget == 0 {
+        base.event_budget = if opts.large {
+            2_000_000_000
+        } else {
+            50_000_000
+        };
+    }
     // Engine names were validated before the sweep started.
     let engines = select_engines(&opts.engines).expect("engines pre-validated");
 
@@ -285,6 +309,95 @@ fn run_case(opts: &VerifyOptions, case: u64) -> CaseResult {
                 for check in checks {
                     if let Err(v) = check {
                         violations.push(format!("{v} ({label})"));
+                    }
+                }
+            }
+        }
+
+        // Opt-in durable-KVS crash axis: for each durability profile
+        // (free vs costed WAL/snapshot knobs), one uninterrupted
+        // reference run anchors the recovery gate; every crash plan must
+        // match it byte-for-byte modulo the recovery meters. Profiles
+        // get their *own* reference because a costed WAL fsync
+        // legitimately shifts timing relative to the base config.
+        if opts.crashes && engine.caps().supports_faults {
+            for (profile, pbase) in corpus::crash_profiles(&base) {
+                engine_runs += 1;
+                let reference =
+                    match run_guarded(engine.as_ref(), &dag, &pbase, run_seed)
+                    {
+                        Ok(r) => Some(r),
+                        Err(v) => {
+                            violations.push(format!(
+                                "{v} (crash reference, {profile})"
+                            ));
+                            None
+                        }
+                    };
+                for plan in corpus::crash_matrix() {
+                    let label = format!(
+                        "crashes p={} max={} ({profile})",
+                        plan.p_crash, plan.max_crashes
+                    );
+                    let mut cfg = pbase.clone();
+                    cfg.crashes = plan;
+                    engine_runs += 1;
+                    let rep = match run_guarded(
+                        engine.as_ref(),
+                        &dag,
+                        &cfg,
+                        run_seed,
+                    ) {
+                        Ok(r) => r,
+                        Err(v) => {
+                            violations.push(format!("{v} ({label})"));
+                            continue;
+                        }
+                    };
+                    engine_runs += 1; // determinism re-run
+                    let rerun = match run_guarded(
+                        engine.as_ref(),
+                        &dag,
+                        &cfg,
+                        run_seed,
+                    ) {
+                        Ok(r) => r,
+                        Err(v) => {
+                            violations
+                                .push(format!("{v} ({label}, rerun)"));
+                            continue;
+                        }
+                    };
+
+                    // Crashes never fail tasks (the synchronous WAL
+                    // loses nothing), so the classic invariants hold
+                    // verbatim on top of the recovery gate.
+                    let mut checks = vec![
+                        diff::check_determinism(&rep, &rerun),
+                        diff::check_completion(&dag, &rep),
+                        diff::check_exactly_once(&dag, &rep),
+                        diff::check_fault_contract(&dag, &rep, cfg.faults),
+                    ];
+                    if let Some(reference) = &reference {
+                        checks.push(diff::check_crash_recovery(
+                            reference,
+                            &rep,
+                            plan,
+                            &cfg.storage,
+                        ));
+                        if plan.p_crash == 0.0 {
+                            // A zero-rate crash plan must be fully
+                            // bit-identical — enabling the knob draws
+                            // nothing from the crash stream.
+                            checks.push(diff::check_fault_free_baseline(
+                                reference, &rep,
+                            ));
+                        }
+                    }
+                    for check in checks {
+                        if let Err(v) = check {
+                            violations.push(format!("{v} ({label})"));
+                        }
                     }
                 }
             }
@@ -420,6 +533,60 @@ mod tests {
         // Base matrix (16 + 8) plus, per sim engine, one fault-free
         // reference and 8 fault plans × 2 (run + determinism re-run).
         assert_eq!(s.engine_runs, 3 * (16 + 8 + 5 * (1 + 8 * 2)));
+    }
+
+    #[test]
+    fn crash_sweep_is_clean_and_counts_the_crash_axis() {
+        let s = run_verify(&VerifyOptions {
+            runs: 3,
+            seed: 19,
+            crashes: true,
+            ..VerifyOptions::default()
+        })
+        .unwrap();
+        assert_eq!(s.cases, 3);
+        assert!(s.violations.is_empty(), "{:#?}", s.violations);
+        // Base matrix (16 + 8) plus, per sim engine, 2 durability
+        // profiles × (1 reference + 4 crash plans × 2 runs).
+        assert_eq!(s.engine_runs, 3 * (16 + 8 + 5 * (2 * (1 + 4 * 2))));
+    }
+
+    #[test]
+    fn fault_and_crash_axes_compose() {
+        let s = run_verify(&VerifyOptions {
+            runs: 2,
+            seed: 37,
+            faults: true,
+            crashes: true,
+            ..VerifyOptions::default()
+        })
+        .unwrap();
+        assert!(s.violations.is_empty(), "{:#?}", s.violations);
+        assert_eq!(
+            s.engine_runs,
+            2 * (16 + 8 + 5 * (1 + 8 * 2) + 5 * (2 * (1 + 4 * 2)))
+        );
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree_under_crashes() {
+        let base = VerifyOptions {
+            runs: 3,
+            seed: 31,
+            crashes: true,
+            ..VerifyOptions::default()
+        };
+        let seq = run_verify(&VerifyOptions {
+            threads: 1,
+            ..base.clone()
+        })
+        .unwrap();
+        let par = run_verify(&VerifyOptions {
+            threads: 4,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(seq, par);
     }
 
     #[test]

@@ -62,6 +62,58 @@ fn faulty_matrix_runs_clean() {
     assert_eq!(summary.engine_runs, 8 * (24 + 5 * 17));
 }
 
+/// The durable-KVS crash axis (`wukong verify --crashes`): on top of
+/// the base matrix, every fault-capable engine sweeps
+/// `corpus::crash_matrix()` under both durability profiles
+/// (`corpus::crash_profiles`), each anchored by its own uninterrupted
+/// reference run. The recovery gate: a crashed-and-recovered run is
+/// byte-identical to the reference in every data-plane metric — task
+/// outcomes, KVS/WAL byte meters, event counts, makespan — with only
+/// `recoveries`/`replayed_ops`/`stall_s` allowed to differ, and
+/// `p_crash=0` plans fully bit-identical.
+#[test]
+fn crash_recovery_matrix_runs_clean() {
+    let summary = run_verify(&VerifyOptions {
+        runs: 6,
+        seed: 7,
+        crashes: true,
+        ..VerifyOptions::default()
+    })
+    .expect("default options are valid");
+    assert_eq!(summary.cases, 6);
+    assert!(
+        summary.violations.is_empty(),
+        "crash-axis violations:\n{}",
+        summary.violations.join("\n")
+    );
+    // base 24 + 5 engines × 2 profiles × (1 reference + 4 plans × 2)
+    assert_eq!(summary.engine_runs, 6 * (24 + 5 * 18));
+}
+
+/// Satellite: the crash-axis sweep stays byte-identical to `--threads 1`
+/// (crash streams are per-run state, like fault streams — no cross-case
+/// leakage through worker reuse).
+#[test]
+fn crash_sweep_is_thread_count_invariant() {
+    let base = VerifyOptions {
+        runs: 4,
+        seed: 41,
+        crashes: true,
+        ..VerifyOptions::default()
+    };
+    let seq = run_verify(&VerifyOptions {
+        threads: 1,
+        ..base.clone()
+    })
+    .unwrap();
+    let par = run_verify(&VerifyOptions {
+        threads: 3,
+        ..base
+    })
+    .unwrap();
+    assert_eq!(seq, par);
+}
+
 /// Satellite: the pooled sweep stays byte-identical to `--threads 1`
 /// when the fault axis is on (fault streams are per-run state, so no
 /// cross-case leakage through worker reuse).

@@ -266,6 +266,83 @@ fn zero_rate_fault_plans_are_invisible() {
 }
 
 #[test]
+fn shard_crashes_never_perturb_the_data_plane() {
+    use wukong::engine::select_engines;
+    use wukong::platform::faults::ShardCrashPlan;
+    // The durable-KVS recovery property: under any crash plan and any
+    // durability knobs, a crashed-and-recovered run differs from the
+    // uninterrupted run *only* in the recovery meters — the synchronous
+    // WAL means no acknowledged op is lost, so outcomes, byte meters and
+    // event streams are byte-identical.
+    check(0xC4A5, 10, |rng| {
+        let dag = random_dag(rng);
+        let mut base = random_config(rng);
+        base.storage.wal_fsync_s = rng.f64() * 1e-3;
+        base.storage.snapshot_every_ops = gen::usize_in(rng, 0, 64) as u64;
+        let mut crashed = base.clone();
+        crashed.crashes = ShardCrashPlan::with_crashes(
+            rng.f64(),
+            gen::usize_in(rng, 1, 6) as u32,
+        );
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_faults {
+                continue;
+            }
+            let a = engine.run(&dag, &base, seed);
+            let b = engine.run(&dag, &crashed, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert!(
+                b.metrics.durability.recoveries
+                    <= crashed.crashes.max_crashes as u64,
+                "[{name}] recoveries over budget"
+            );
+            let scrub = |mut m: wukong::metrics::RunMetrics| {
+                m.durability.recoveries = 0;
+                m.durability.replayed_ops = 0;
+                m.durability.stall_s = 0.0;
+                m
+            };
+            assert_eq!(
+                scrub(a.metrics),
+                scrub(b.metrics),
+                "[{name}] data plane perturbed by crashes"
+            );
+        }
+    });
+}
+
+#[test]
+fn zero_rate_crash_plans_are_invisible() {
+    use wukong::engine::select_engines;
+    use wukong::platform::faults::ShardCrashPlan;
+    // The salted-crash-stream regression guard: a p_crash=0 plan draws
+    // nothing, so enabling the knob (any crash budget) leaves every
+    // engine's report fully bit-identical — recovery meters included.
+    check(0xC4A6, 10, |rng| {
+        let dag = random_dag(rng);
+        let base = random_config(rng);
+        let mut planned = base.clone();
+        planned.crashes =
+            ShardCrashPlan::with_crashes(0.0, gen::usize_in(rng, 0, 8) as u32);
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_faults {
+                continue;
+            }
+            let a = engine.run(&dag, &base, seed);
+            let b = engine.run(&dag, &planned, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
+}
+
+#[test]
 fn makespan_at_least_critical_path() {
     check(0xC121, 30, |rng| {
         let dag = random_dag(rng);
