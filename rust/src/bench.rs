@@ -6,7 +6,10 @@
 //! "becomes" locality), and the paper's TSQR workload shape — and
 //! reports, per `(engine, workload)`: wall milliseconds, DES events
 //! processed, events/sec, peak pending-event calendar depth, and the
-//! simulated makespan. Results are written as `BENCH_PR2.json`; each PR
+//! simulated makespan. A fourth *job-stream* tier measures the
+//! multi-tenant serving layer (thousands of corpus DAG jobs multiplexed
+//! over one shared pool), adding jobs/sec and p99 job latency to the
+//! row. Results are written as `BENCH_PR8.json`; each PR
 //! appends a `BENCH_*.json` point so the perf trajectory is recorded and
 //! regressions are caught by comparing events/sec per engine (see
 //! ROADMAP.md §Performance & benchmarking).
@@ -26,13 +29,14 @@ use crate::dag::Dag;
 #[allow(unused_imports)]
 use crate::engine::Engine;
 use crate::engine::select_engines;
+use crate::serving::{run_serving, ArrivalPlan};
 use crate::util::json::Json;
 use crate::workloads::{micro, tsqr};
 
 /// The trajectory point this build records. Bump once per PR that
 /// re-baselines perf — the JSON `pr` field and the default output
 /// filename both derive from it.
-pub const TRAJECTORY_POINT: &str = "PR2";
+pub const TRAJECTORY_POINT: &str = "PR8";
 
 /// Default output path: `BENCH_<point>.json` at the invocation cwd.
 pub fn default_out_path() -> String {
@@ -72,6 +76,10 @@ pub struct BenchRecord {
     pub events_per_sec: f64,
     pub peak_pending: usize,
     pub makespan_s: f64,
+    /// Virtual-time job throughput (jobstream tier only; 0 otherwise).
+    pub jobs_per_sec: f64,
+    /// p99 end-to-end job latency (jobstream tier only; 0 otherwise).
+    pub p99_job_latency_s: f64,
 }
 
 /// Per-engine task budget for the flat fan-out family.
@@ -184,8 +192,45 @@ pub fn run_bench(opts: &BenchOptions) -> Result<Vec<BenchRecord>, String> {
                 events_per_sec: sim_events as f64 / wall_s,
                 peak_pending: rep.peak_pending.unwrap_or(0),
                 makespan_s: rep.metrics.makespan_s,
+                jobs_per_sec: 0.0,
+                p99_job_latency_s: 0.0,
             });
         }
+    }
+    // Job-stream tier: a multi-tenant serving session multiplexing
+    // thousands of corpus DAG jobs (the wukong sim engine inside) over
+    // one shared pool — the serving layer's own hot path, measured
+    // wall-clock like every other row.
+    if engines.iter().any(|e| e.name() == "wukong") {
+        let jobs = if opts.quick { 200 } else { 10_000 };
+        let mut scfg = bench_config();
+        scfg.arrival = ArrivalPlan::poisson(100.0, jobs);
+        let t0 = Instant::now();
+        let rep = run_serving(&scfg, opts.seed, 0);
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        if !rep.conserves_jobs() {
+            return Err(format!(
+                "bench [wukong jobstream]: jobs not conserved \
+                 ({} admitted, {} completed + {} failed)",
+                rep.admitted, rep.completed, rep.failed
+            ));
+        }
+        records.push(BenchRecord {
+            engine: "wukong",
+            workload: "jobstream",
+            tasks: rep.total_tasks as usize,
+            wall_ms: wall_s * 1e3,
+            sim_events: rep.total_events,
+            events_per_sec: rep.total_events as f64 / wall_s,
+            peak_pending: rep.peak_slots,
+            makespan_s: rep.horizon_s,
+            jobs_per_sec: if rep.horizon_s > 0.0 {
+                rep.completed as f64 / rep.horizon_s
+            } else {
+                0.0
+            },
+            p99_job_latency_s: rep.p99_latency_s,
+        });
     }
     Ok(records)
 }
@@ -211,6 +256,14 @@ pub fn to_json(records: &[BenchRecord], opts: &BenchOptions) -> String {
                 Json::Num(r.peak_pending as f64),
             );
             m.insert("makespan_s".to_string(), Json::Num(r.makespan_s));
+            m.insert(
+                "jobs_per_sec".to_string(),
+                Json::Num(r.jobs_per_sec),
+            );
+            m.insert(
+                "p99_job_latency_s".to_string(),
+                Json::Num(r.p99_job_latency_s),
+            );
             Json::Obj(m)
         })
         .collect();
@@ -283,6 +336,8 @@ mod tests {
             events_per_sec: 4.05e6,
             peak_pending: 1_000_000,
             makespan_s: 2.5,
+            jobs_per_sec: 12.5,
+            p99_job_latency_s: 0.75,
         };
         let text = to_json(&[rec], &BenchOptions::default());
         let j = Json::parse(&text).unwrap();
@@ -295,24 +350,36 @@ mod tests {
             recs[0].get("peak_pending").unwrap().as_u64(),
             Some(1_000_000)
         );
+        assert_eq!(recs[0].get("jobs_per_sec").unwrap().as_f64(), Some(12.5));
+        assert_eq!(
+            recs[0].get("p99_job_latency_s").unwrap().as_f64(),
+            Some(0.75)
+        );
     }
 
     #[test]
     fn quick_smoke_on_the_wukong_engine() {
         // A tiny end-to-end sweep: completion-checked runs over all three
-        // workload families (debug-build friendly sizes).
+        // DAG families plus the multi-tenant jobstream tier (debug-build
+        // friendly sizes).
         let recs = run_bench(&BenchOptions {
             quick: true,
             engines: vec!["wukong".into()],
             seed: 7,
         })
         .unwrap();
-        assert_eq!(recs.len(), 3);
+        assert_eq!(recs.len(), 4);
         for r in &recs {
             assert!(r.sim_events > 0, "{:?}", r);
             assert!(r.events_per_sec > 0.0);
             assert!(r.peak_pending > 0);
             assert!(r.tasks >= 64);
         }
+        let js = recs.last().unwrap();
+        assert_eq!(js.workload, "jobstream");
+        assert!(js.jobs_per_sec > 0.0);
+        assert!(js.p99_job_latency_s > 0.0);
+        // The DAG-family rows never fill the jobstream-only columns.
+        assert!(recs[..3].iter().all(|r| r.jobs_per_sec == 0.0));
     }
 }

@@ -75,7 +75,7 @@ USAGE:
   wukong run <workload> [--engine <name>] [--set a.b=c ...]
                                                        run one workload on the simulator
   wukong verify [--engine a,b,...] [--runs N] [--seed S] [--threads N]
-                [--large] [--verbose] [--faults] [--crashes]
+                [--large] [--verbose] [--faults] [--crashes] [--serving]
                                                        cross-engine differential conformance:
                                                        sweeps generated DAGs (incl. irregular
                                                        shapes) through every registered engine
@@ -94,7 +94,13 @@ USAGE:
                                                        must be byte-identical to the
                                                        uninterrupted run modulo the recovery
                                                        meters, and p_crash=0 fully
-                                                       bit-identical; every run is capped by a
+                                                       bit-identical; --serving adds the
+                                                       multi-tenant axis (arrival-plan matrix
+                                                       over the shared pool): every session
+                                                       conserves jobs (admitted = completed
+                                                       xor failed), replays byte-identically,
+                                                       and a zero-rate stream is a no-op;
+                                                       every run is capped by a
                                                        sim event budget (livelock watchdog);
                                                        cases fan out across --threads workers
                                                        with case-ordered (byte-identical)
@@ -108,9 +114,21 @@ USAGE:
                                                        peak pending-event depth, and writes
                                                        BENCH_PR2.json (the perf-trajectory
                                                        point + regression baseline)
+  wukong serve [--quick] [--threads N] [--out FILE] [--set a.b=c ...]
+                                                       multi-tenant job-stream serving: a
+                                                       Poisson/trace stream of DAG jobs from
+                                                       many tenants multiplexed onto one
+                                                       shared Lambda pool + KVS (job-scoped
+                                                       keys, warm-executor reuse, FIFO or
+                                                       weighted-fair admission); prints
+                                                       per-tenant p50/p99 latency, queueing
+                                                       delay, executor-hours and billed cost;
+                                                       --out writes the report JSON; --quick
+                                                       caps the stream at 120 jobs; exits
+                                                       non-zero if jobs are not conserved
   wukong dag <workload>                                print a workload DAG (DOT)
   wukong list                                          list figures + workloads
-  wukong serve [--quick]                               real-engine demo (PJRT compute)
+  wukong serve-real [--quick]                          real-engine demo (PJRT compute)
 
 ENGINES:
   wukong | numpywren | pywren | dask125 | dask1000  (all behind the unified
@@ -131,6 +149,7 @@ OPTIONS:
   --faults          sweep the fault axis (verify; see faults.p_fail /
                     faults.max_retries under --set for single runs)
   --crashes         sweep the durable-KVS crash-recovery axis (verify)
+  --serving         sweep the multi-tenant serving axis (verify)
   --verbose         per-case lines (verify; streamed live with
                     --threads 1, printed in case order otherwise)
 
@@ -144,6 +163,16 @@ CONFIG KEYS (selection; any key accepts --set):
                                           (0 = never snapshot)
   storage.replay_op_s                     per-op WAL/snapshot replay cost
   storage.recovery_base_s                 fixed per-recovery stall
+  arrival.mode                            serve job stream: poisson | trace
+  arrival.rate                            Poisson arrival rate (jobs/s;
+                                          must be non-negative; 0 = empty
+                                          stream, a guaranteed no-op)
+  arrival.jobs                            jobs in the stream (default 1000)
+  arrival.trace_gap_s                     deterministic trace inter-arrival
+  tenants.count                           tenants sharing the pool
+  tenants.policy                          admission order: fifo | wfair
+  tenants.weight_skew                     wfair weight slope across tenants
+                                          (tenant i weighs 1 + skew*i)
   event_budget                            sim event ceiling (0 = none;
                                           verify always sets a watchdog)
 ";

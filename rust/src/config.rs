@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::platform::faults::{FaultPlan, ShardCrashPlan};
+use crate::serving::{ArrivalMode, ArrivalPlan, FairnessPolicy, TenantPlan};
 use crate::sim::{secs, Time};
 
 /// AWS-Lambda-like platform model parameters.
@@ -305,6 +306,14 @@ pub struct Config {
     /// dedicated salted stream, so the zero-rate default is
     /// bit-identical to having no plan at all.
     pub crashes: ShardCrashPlan,
+    /// Job-arrival plan for the multi-tenant serving layer (`wukong
+    /// serve`). Single-DAG engine runs never consult it, and its draws
+    /// come from a dedicated salted stream, so any value here leaves
+    /// `wukong run`/`verify`/`bench` single-job output bit-identical.
+    pub arrival: ArrivalPlan,
+    /// Tenant population + fairness policy for the serving layer; like
+    /// `arrival`, invisible outside `wukong serve`/`verify --serving`.
+    pub tenants: TenantPlan,
     /// Watchdog ceiling on processed DES events per run; 0 = unlimited.
     /// An engine that exceeds it panics (caught by `wukong verify` as a
     /// violation) instead of livelocking CI.
@@ -325,6 +334,8 @@ impl Default for Config {
             compute: ComputeConfig::default(),
             faults: FaultPlan::default(),
             crashes: ShardCrashPlan::default(),
+            arrival: ArrivalPlan::default(),
+            tenants: TenantPlan::default(),
             event_budget: 0,
             seed: 42,
             runs: 3,
@@ -431,6 +442,33 @@ impl Config {
             "crashes.max_crashes" => {
                 self.crashes.max_crashes = f()? as u32
             }
+            "arrival.mode" => {
+                self.arrival.mode = match value {
+                    "poisson" => ArrivalMode::Poisson,
+                    "trace" => ArrivalMode::Trace,
+                    other => {
+                        return Err(format!("unknown arrival.mode {other}"))
+                    }
+                }
+            }
+            "arrival.rate" => self.arrival.rate_per_s = nonneg(path, f()?)?,
+            "arrival.jobs" => self.arrival.jobs = f()? as u64,
+            "arrival.trace_gap_s" => {
+                self.arrival.trace_gap_s = nonneg(path, f()?)?
+            }
+            "tenants.count" => self.tenants.count = f()? as usize,
+            "tenants.policy" => {
+                self.tenants.policy = match value {
+                    "fifo" => FairnessPolicy::Fifo,
+                    "wfair" => FairnessPolicy::WeightedFair,
+                    other => {
+                        return Err(format!("unknown tenants.policy {other}"))
+                    }
+                }
+            }
+            "tenants.weight_skew" => {
+                self.tenants.weight_skew = nonneg(path, f()?)?
+            }
             "event_budget" => self.event_budget = f()? as u64,
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -446,6 +484,16 @@ fn prob(path: &str, v: f64) -> Result<f64, String> {
         Ok(v)
     } else {
         Err(format!("{path}: probability must be in [0, 1], got {v}"))
+    }
+}
+
+/// Validate a rate/gap/skew knob at parse time: rejects negatives and
+/// NaN with the offending key in the message (same contract as [`prob`]).
+fn nonneg(path: &str, v: f64) -> Result<f64, String> {
+    if v >= 0.0 {
+        Ok(v)
+    } else {
+        Err(format!("{path}: must be non-negative, got {v}"))
     }
 }
 
@@ -542,6 +590,56 @@ mod tests {
         assert_eq!(c.storage.recovery_base_s, 0.2);
         assert_eq!(c.crashes, ShardCrashPlan::with_crashes(0.5, 2));
         assert_eq!(c.event_budget, 1_000_000);
+    }
+
+    #[test]
+    fn arrival_and_tenant_keys_work() {
+        let mut c = Config::default();
+        c.set("arrival.mode", "trace").unwrap();
+        c.set("arrival.rate", "8.5").unwrap();
+        c.set("arrival.jobs", "2500").unwrap();
+        c.set("arrival.trace_gap_s", "0.125").unwrap();
+        c.set("tenants.count", "7").unwrap();
+        c.set("tenants.policy", "wfair").unwrap();
+        c.set("tenants.weight_skew", "0.5").unwrap();
+        assert_eq!(c.arrival.mode, ArrivalMode::Trace);
+        assert_eq!(c.arrival.rate_per_s, 8.5);
+        assert_eq!(c.arrival.jobs, 2500);
+        assert_eq!(c.arrival.trace_gap_s, 0.125);
+        assert_eq!(c.tenants.count, 7);
+        assert_eq!(c.tenants.policy, FairnessPolicy::WeightedFair);
+        assert_eq!(c.tenants.weight_skew, 0.5);
+        c.set("arrival.mode", "poisson").unwrap();
+        c.set("tenants.policy", "fifo").unwrap();
+        assert_eq!(c.arrival.mode, ArrivalMode::Poisson);
+        assert_eq!(c.tenants.policy, FairnessPolicy::Fifo);
+    }
+
+    #[test]
+    fn bad_arrival_and_tenant_values_rejected_at_parse_time() {
+        let mut c = Config::default();
+        let err = c.set("arrival.mode", "burst").unwrap_err();
+        assert!(err.contains("arrival.mode"), "{err}");
+        let err = c.set("tenants.policy", "priority").unwrap_err();
+        assert!(err.contains("tenants.policy"), "{err}");
+        for (key, bad) in [
+            ("arrival.rate", "-2"),
+            ("arrival.rate", "nan"),
+            ("arrival.trace_gap_s", "-0.5"),
+            ("tenants.weight_skew", "-1"),
+        ] {
+            let err = c.set(key, bad).unwrap_err();
+            assert!(
+                err.contains(key) && err.contains("non-negative"),
+                "{key}={bad}: {err}"
+            );
+        }
+        // Rejected overrides leave the config untouched.
+        assert_eq!(c.arrival, ArrivalPlan::default());
+        assert_eq!(c.tenants, TenantPlan::default());
+        // Zero boundaries are fine (the empty-stream plan).
+        c.set("arrival.rate", "0").unwrap();
+        c.set("tenants.weight_skew", "0").unwrap();
     }
 
     #[test]

@@ -9,6 +9,7 @@ use wukong::cli::{Args, USAGE};
 use wukong::config::{apply_overrides, Config};
 use wukong::dag::Dag;
 use wukong::engine::{engine_by_name, sim_engine_names, Engine as _};
+use wukong::serving::run_serving;
 use wukong::verify::{run_verify, VerifyOptions};
 use wukong::workloads::{gemm, svc, svd, tr, tsqr};
 use wukong::{figures, util};
@@ -179,6 +180,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             opts.verbose = args.flag("verbose");
             opts.faults = args.flag("faults");
             opts.crashes = args.flag("crashes");
+            opts.serving = args.flag("serving");
             let summary = run_verify(&opts)?;
             let mut t = util::table::Table::new(vec!["metric", "value"]);
             t.row(vec!["engines".into(), summary.engines.join(" ")]);
@@ -193,7 +195,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             if summary.ok() {
                 println!(
                     "conformance OK: exactly-once, completion, determinism \
-                     and locality ordering hold on every case{}{}",
+                     and locality ordering hold on every case{}{}{}",
                     if opts.faults {
                         ", incl. the §3.6 fault axis (retry bounds, \
                          completed-xor-failed totality, fault-free \
@@ -205,6 +207,13 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                         ", incl. the durable-KVS crash axis (recovered \
                          runs byte-identical to uninterrupted modulo \
                          recovery meters)"
+                    } else {
+                        ""
+                    },
+                    if opts.serving {
+                        ", incl. the multi-tenant serving axis (job \
+                         conservation, byte-identical replays, zero-rate \
+                         streams are no-ops)"
                     } else {
                         ""
                     }
@@ -263,6 +272,34 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             Ok(())
         }
         "serve" => {
+            // Multi-tenant job-stream serving: a continuous stream of
+            // DAG jobs multiplexed over one shared Lambda pool + KVS.
+            let mut cfg = load_config(&args)?;
+            let threads = parse_threads(&args)?;
+            if args.flag("quick") {
+                cfg.arrival.jobs = cfg.arrival.jobs.min(120);
+            }
+            let report = run_serving(&cfg, cfg.seed, threads);
+            println!("{}", report.render());
+            if let Some(path) = args.opt("out") {
+                std::fs::write(path, format!("{}\n", report.to_json()))
+                    .map_err(|e| format!("{path}: {e}"))?;
+                println!("wrote {path}");
+            }
+            if report.conserves_jobs() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "serving lost jobs: {} arrived, {} admitted, \
+                     {} completed + {} failed",
+                    report.arrived,
+                    report.admitted,
+                    report.completed,
+                    report.failed
+                ))
+            }
+        }
+        "serve-real" => {
             let quick = args.flag("quick");
             serve_demo(quick).map_err(|e| e.to_string())
         }

@@ -109,6 +109,13 @@ impl RunMetrics {
     pub fn dollars(&self) -> f64 {
         self.billing.total(&Prices::default())
     }
+
+    /// Executor-hours consumed by the run: the executor-count timeline's
+    /// area (executor-seconds) over 3600. The serving layer rolls this
+    /// up per tenant for capacity/billing reports.
+    pub fn executor_hours(&self) -> f64 {
+        self.timeline.integral_s() / 3600.0
+    }
 }
 
 /// Normalized metrics plus DES meters for one simulator-backed run —
@@ -127,6 +134,16 @@ pub struct SimReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn executor_hours_is_timeline_area_over_3600() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.executor_hours(), 0.0);
+        // 2 executors for 1800 virtual seconds = 1 executor-hour.
+        m.timeline.add(0, 2);
+        m.timeline.add(crate::sim::secs(1800.0), -2);
+        assert!((m.executor_hours() - 1.0).abs() < 1e-9);
+    }
 
     #[test]
     fn breakdown_total_sums_categories() {

@@ -76,6 +76,18 @@ impl Billing {
         self.elasticache_node_h += nodes as f64 * hours;
     }
 
+    /// Merge another meter into this one (serving-layer rollups: a
+    /// tenant's bill is the absorbed sum of its jobs' meters).
+    pub fn absorb(&mut self, other: &Billing) {
+        self.lambda_gb_s += other.lambda_gb_s;
+        self.invocations += other.invocations;
+        self.fargate_vcpu_h += other.fargate_vcpu_h;
+        self.fargate_gb_h += other.fargate_gb_h;
+        self.scheduler_vm_h += other.scheduler_vm_h;
+        self.ec2_dollars += other.ec2_dollars;
+        self.elasticache_node_h += other.elasticache_node_h;
+    }
+
     /// Total dollars under a price book.
     pub fn total(&self, p: &Prices) -> f64 {
         self.lambda_gb_s * p.lambda_gb_s
@@ -126,6 +138,29 @@ mod tests {
         a.charge_lambda(3.0, 5.0);
         b.charge_lambda(3.0, 10.0);
         assert!(a.total(&p) < b.total(&p));
+    }
+
+    #[test]
+    fn absorb_sums_every_meter() {
+        let p = Prices::default();
+        let mut a = Billing::default();
+        a.charge_lambda(3.0, 5.0);
+        a.charge_fargate(75, 4.0, 30.0, 0.25);
+        a.charge_scheduler_vm(0.25);
+        a.charge_ec2(85.0, 0.1);
+        a.charge_elasticache(5, 0.1);
+        let mut b = Billing::default();
+        b.charge_lambda(3.0, 2.0);
+        b.charge_fargate(75, 4.0, 30.0, 0.5);
+        let mut rolled = Billing::default();
+        rolled.absorb(&a);
+        rolled.absorb(&b);
+        assert_eq!(rolled.invocations, 2);
+        assert!((rolled.total(&p) - (a.total(&p) + b.total(&p))).abs() < 1e-9);
+        // Absorbing an empty meter is the identity.
+        let before = rolled.clone();
+        rolled.absorb(&Billing::default());
+        assert_eq!(rolled, before);
     }
 
     #[test]

@@ -24,6 +24,12 @@ pub struct LambdaService {
     queued: Vec<Time>, // admission FIFO: requested-at times (metrics only)
     total_invocations: u64,
     throttled: u64,
+    // Warm-pool accounting for the serving layer (cold-start
+    // amortization across jobs). Single-DAG engine runs never touch
+    // these paths, so their event streams are unchanged.
+    warm_pool: usize,
+    warm_hits: u64,
+    cold_starts: u64,
 }
 
 /// Outcome of an invocation request.
@@ -45,6 +51,9 @@ impl LambdaService {
             queued: Vec::new(),
             total_invocations: 0,
             throttled: 0,
+            warm_pool: 0,
+            warm_hits: 0,
+            cold_starts: 0,
         }
     }
 
@@ -99,6 +108,44 @@ impl LambdaService {
     pub fn release(&mut self) {
         debug_assert!(self.active > 0);
         self.active -= 1;
+    }
+
+    /// Serving-layer admission with warm-executor reuse: take a parked
+    /// warm executor if one is available (a warm hit — no cold-start
+    /// penalty), otherwise account a cold start and report `cold` so
+    /// the caller can charge `cold_start_s`. Slot bookkeeping is the
+    /// same as [`LambdaService::admit`].
+    pub fn reuse(&mut self, at: Time) -> Invocation {
+        if self.warm_pool > 0 {
+            self.warm_pool -= 1;
+            self.warm_hits += 1;
+            self.admit(at)
+        } else {
+            self.cold_starts += 1;
+            Invocation {
+                cold: true,
+                ..self.admit(at)
+            }
+        }
+    }
+
+    /// Park `n` finishing executors in the warm pool (their slots must
+    /// be released separately via [`LambdaService::release`]); the next
+    /// [`LambdaService::reuse`] calls take them without a cold start.
+    pub fn park_warm(&mut self, n: usize) {
+        self.warm_pool += n;
+    }
+
+    pub fn warm_pool(&self) -> usize {
+        self.warm_pool
+    }
+
+    pub fn warm_hits(&self) -> u64 {
+        self.warm_hits
+    }
+
+    pub fn cold_starts(&self) -> u64 {
+        self.cold_starts
     }
 
     /// Runtime ceiling in virtual time.
@@ -200,5 +247,58 @@ mod tests {
     fn vcpus_for_3gb_is_2() {
         let s = svc(1);
         assert_eq!(s.vcpus_per_fn(), 2.0);
+    }
+
+    #[test]
+    fn scripted_reuse_sequence_pins_warm_and_cold_counters() {
+        // admit 2 cold → park both → reuse 3: 2 warm hits + 1 cold.
+        let mut s = svc(10);
+        assert!(s.reuse(0).cold);
+        assert!(s.reuse(0).cold);
+        assert_eq!((s.warm_hits(), s.cold_starts()), (0, 2));
+        assert_eq!(s.active(), 2);
+        s.release();
+        s.release();
+        s.park_warm(2);
+        assert_eq!(s.warm_pool(), 2);
+        assert!(!s.reuse(0).cold);
+        assert!(!s.reuse(0).cold);
+        assert!(s.reuse(0).cold, "warm pool exhausted after two hits");
+        assert_eq!((s.warm_hits(), s.cold_starts()), (2, 3));
+        assert_eq!(s.warm_pool(), 0);
+        assert_eq!(s.active(), 3);
+        assert_eq!(s.total_invocations(), 5);
+    }
+
+    #[test]
+    fn reuse_counts_slots_like_admit() {
+        // Warm vs cold changes only the counters and the `cold` flag —
+        // the slot/throttle bookkeeping stays identical to admit().
+        let mut s = svc(2);
+        s.park_warm(5);
+        let a = s.reuse(0);
+        let b = s.reuse(0);
+        assert!(!a.cold && !b.cold);
+        assert_eq!(a.start_at, 0);
+        let third = s.reuse(0);
+        assert!(third.start_at > 0, "third slot throttles past the limit");
+        assert_eq!(s.throttled(), 1);
+        assert_eq!(s.peak_active(), 3);
+    }
+
+    #[test]
+    fn plain_admit_and_invoke_never_touch_warm_accounting() {
+        // Single-DAG engines only ever call invoke/admit/release; the
+        // warm meters must stay at zero so their runs are bit-identical
+        // to the pre-warm-pool model.
+        let mut s = svc(10);
+        for _ in 0..5 {
+            s.invoke(0);
+        }
+        s.admit(0);
+        s.release();
+        assert_eq!(s.warm_pool(), 0);
+        assert_eq!(s.warm_hits(), 0);
+        assert_eq!(s.cold_starts(), 0);
     }
 }

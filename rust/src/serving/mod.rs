@@ -1,0 +1,24 @@
+//! Multi-tenant job-stream serving over the wukong engine.
+//!
+//! Everything before this subsystem ran one DAG for one implicit
+//! tenant. `wukong serve` instead replays a continuous stream of DAG
+//! jobs from many tenants — Poisson or trace arrivals
+//! ([`ArrivalStream`], a salted split of the run seed like
+//! `FaultStream`/`CrashStream`) — multiplexed onto one shared Lambda
+//! pool and one shared KVS with job-scoped keys, per-tenant admission
+//! under a pluggable fairness policy ([`FairnessPolicy`]), warm-executor
+//! reuse between jobs, and per-tenant billing rollups. The result is a
+//! [`ServingReport`] whose every field is virtual-time-derived, so it
+//! is byte-identical across `--threads` and reruns — the `verify
+//! --serving` axis gates job conservation (admitted = completed ⊕
+//! failed) and that determinism.
+
+pub mod arrival;
+pub mod report;
+pub mod session;
+pub mod tenants;
+
+pub use arrival::{ArrivalMode, ArrivalPlan, ArrivalStream};
+pub use report::{ServingReport, TenantStats};
+pub use session::run_serving;
+pub use tenants::{FairnessPolicy, QueuedJob, TenantPlan, TenantScheduler};

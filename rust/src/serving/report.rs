@@ -1,0 +1,299 @@
+//! Serving-run results: per-tenant latency/queueing/cost rollups plus
+//! aggregate throughput, with a deterministic renderer.
+//!
+//! Every field is derived from virtual time and exact counters — no
+//! wall-clock values — so a rendered report (and the struct itself,
+//! via `PartialEq`) is byte-identical across `--threads 1` and
+//! `--threads N`. That is the serving determinism gate.
+
+use crate::util::json::Json;
+use crate::util::stats::human_bytes;
+
+/// Per-tenant rollup: counts, latency/queueing percentiles (seconds),
+/// executor-hours, and billed dollars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    pub tenant: usize,
+    pub weight: f64,
+    pub jobs: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// End-to-end job latency (arrival → finish), p50/p99.
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Admission queueing delay (arrival → admission), p50/p99.
+    pub p50_queue_s: f64,
+    pub p99_queue_s: f64,
+    pub executor_hours: f64,
+    pub dollars: f64,
+}
+
+/// Aggregate result of one multi-tenant serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingReport {
+    /// Jobs the arrival stream produced.
+    pub arrived: u64,
+    /// Jobs admitted to the shared pool (conservation: every arrival
+    /// is eventually admitted; admitted = completed + failed).
+    pub admitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Tasks across all job DAGs.
+    pub total_tasks: u64,
+    /// Virtual time from first arrival to last finish (s).
+    pub horizon_s: f64,
+    /// DES events processed by the job-level session calendar.
+    pub session_events: u64,
+    /// Session events + every per-job engine run's events.
+    pub total_events: u64,
+    /// `total_events / horizon_s` — virtual-time throughput (wall-clock
+    /// rates live in the bench JSON, outside the determinism gate).
+    pub events_per_s: f64,
+    pub warm_hits: u64,
+    pub cold_starts: u64,
+    /// Peak simultaneous slots in the shared Lambda pool.
+    pub peak_slots: usize,
+    /// Shared-KVS footprint (bytes read + written under job-scoped keys).
+    pub kvs_bytes: u64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub executor_hours: f64,
+    pub dollars: f64,
+    pub tenants: Vec<TenantStats>,
+}
+
+impl ServingReport {
+    /// The serving conservation gate: no job is silently lost. Every
+    /// arrival was admitted, admitted = completed ⊕ failed, and the
+    /// per-tenant rows partition the totals.
+    pub fn conserves_jobs(&self) -> bool {
+        self.arrived == self.admitted
+            && self.admitted == self.completed + self.failed
+            && self.tenants.iter().map(|t| t.jobs).sum::<u64>()
+                == self.admitted
+            && self.tenants.iter().all(|t| t.completed + t.failed == t.jobs)
+    }
+
+    /// Deterministic multi-line rendering (virtual-time fields only).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "serving: {} arrived, {} admitted = {} completed + {} failed \
+             ({} tasks)\n",
+            self.arrived, self.admitted, self.completed, self.failed,
+            self.total_tasks
+        ));
+        out.push_str(&format!(
+            "horizon {:.3} s · {} DES events ({} session) · \
+             {:.0} events/s virtual\n",
+            self.horizon_s, self.total_events, self.session_events,
+            self.events_per_s
+        ));
+        out.push_str(&format!(
+            "pool: peak {} slots · {} warm hits · {} cold starts · \
+             shared KVS {}\n",
+            self.peak_slots,
+            self.warm_hits,
+            self.cold_starts,
+            human_bytes(self.kvs_bytes as f64)
+        ));
+        out.push_str(&format!(
+            "{:>6} {:>7} {:>6} {:>6} {:>5} {:>9} {:>9} {:>9} {:>9} \
+             {:>8} {:>10}\n",
+            "tenant", "weight", "jobs", "done", "fail", "p50 lat",
+            "p99 lat", "p50 que", "p99 que", "exec-h", "dollars"
+        ));
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "{:>6} {:>7.2} {:>6} {:>6} {:>5} {:>9.3} {:>9.3} {:>9.3} \
+                 {:>9.3} {:>8.3} {:>10.4}\n",
+                t.tenant, t.weight, t.jobs, t.completed, t.failed,
+                t.p50_latency_s, t.p99_latency_s, t.p50_queue_s,
+                t.p99_queue_s, t.executor_hours, t.dollars
+            ));
+        }
+        out.push_str(&format!(
+            "{:>6} {:>7} {:>6} {:>6} {:>5} {:>9.3} {:>9.3} {:>9} {:>9} \
+             {:>8.3} {:>10.4}\n",
+            "all", "-", self.admitted, self.completed, self.failed,
+            self.p50_latency_s, self.p99_latency_s, "-", "-",
+            self.executor_hours, self.dollars
+        ));
+        out
+    }
+
+    /// JSON form (CI artifact; same deterministic fields as `render`).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("arrived".into(), Json::Num(self.arrived as f64));
+        m.insert("admitted".into(), Json::Num(self.admitted as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("failed".into(), Json::Num(self.failed as f64));
+        m.insert("total_tasks".into(), Json::Num(self.total_tasks as f64));
+        m.insert("horizon_s".into(), Json::Num(self.horizon_s));
+        m.insert(
+            "session_events".into(),
+            Json::Num(self.session_events as f64),
+        );
+        m.insert("total_events".into(), Json::Num(self.total_events as f64));
+        m.insert("events_per_s".into(), Json::Num(self.events_per_s));
+        m.insert("warm_hits".into(), Json::Num(self.warm_hits as f64));
+        m.insert("cold_starts".into(), Json::Num(self.cold_starts as f64));
+        m.insert("peak_slots".into(), Json::Num(self.peak_slots as f64));
+        m.insert("kvs_bytes".into(), Json::Num(self.kvs_bytes as f64));
+        m.insert("p50_latency_s".into(), Json::Num(self.p50_latency_s));
+        m.insert("p99_latency_s".into(), Json::Num(self.p99_latency_s));
+        m.insert("executor_hours".into(), Json::Num(self.executor_hours));
+        m.insert("dollars".into(), Json::Num(self.dollars));
+        m.insert(
+            "tenants".into(),
+            Json::Arr(
+                self.tenants
+                    .iter()
+                    .map(|t| {
+                        let mut tm = std::collections::BTreeMap::new();
+                        tm.insert(
+                            "tenant".into(),
+                            Json::Num(t.tenant as f64),
+                        );
+                        tm.insert("weight".into(), Json::Num(t.weight));
+                        tm.insert("jobs".into(), Json::Num(t.jobs as f64));
+                        tm.insert(
+                            "completed".into(),
+                            Json::Num(t.completed as f64),
+                        );
+                        tm.insert(
+                            "failed".into(),
+                            Json::Num(t.failed as f64),
+                        );
+                        tm.insert(
+                            "p50_latency_s".into(),
+                            Json::Num(t.p50_latency_s),
+                        );
+                        tm.insert(
+                            "p99_latency_s".into(),
+                            Json::Num(t.p99_latency_s),
+                        );
+                        tm.insert(
+                            "p50_queue_s".into(),
+                            Json::Num(t.p50_queue_s),
+                        );
+                        tm.insert(
+                            "p99_queue_s".into(),
+                            Json::Num(t.p99_queue_s),
+                        );
+                        tm.insert(
+                            "executor_hours".into(),
+                            Json::Num(t.executor_hours),
+                        );
+                        tm.insert("dollars".into(), Json::Num(t.dollars));
+                        Json::Obj(tm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ServingReport {
+        ServingReport {
+            arrived: 4,
+            admitted: 4,
+            completed: 3,
+            failed: 1,
+            total_tasks: 40,
+            horizon_s: 10.0,
+            session_events: 8,
+            total_events: 108,
+            events_per_s: 10.8,
+            warm_hits: 2,
+            cold_starts: 6,
+            peak_slots: 12,
+            kvs_bytes: 4096,
+            p50_latency_s: 1.5,
+            p99_latency_s: 3.0,
+            executor_hours: 0.01,
+            dollars: 0.02,
+            tenants: vec![
+                TenantStats {
+                    tenant: 0,
+                    weight: 1.0,
+                    jobs: 2,
+                    completed: 2,
+                    failed: 0,
+                    p50_latency_s: 1.0,
+                    p99_latency_s: 2.0,
+                    p50_queue_s: 0.0,
+                    p99_queue_s: 0.1,
+                    executor_hours: 0.005,
+                    dollars: 0.01,
+                },
+                TenantStats {
+                    tenant: 1,
+                    weight: 1.0,
+                    jobs: 2,
+                    completed: 1,
+                    failed: 1,
+                    p50_latency_s: 2.0,
+                    p99_latency_s: 3.0,
+                    p50_queue_s: 0.2,
+                    p99_queue_s: 0.4,
+                    executor_hours: 0.005,
+                    dollars: 0.01,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn conservation_holds_for_partitioned_totals() {
+        assert!(report().conserves_jobs());
+    }
+
+    #[test]
+    fn conservation_catches_silent_loss() {
+        let mut r = report();
+        r.completed = 2; // one job vanished
+        assert!(!r.conserves_jobs());
+        let mut r = report();
+        r.admitted = 3; // an arrival was never admitted
+        assert!(!r.conserves_jobs());
+        let mut r = report();
+        r.tenants[0].jobs = 3; // tenant rows no longer partition
+        assert!(!r.conserves_jobs());
+    }
+
+    #[test]
+    fn render_is_deterministic_and_covers_the_headline() {
+        let a = report().render();
+        let b = report().render();
+        assert_eq!(a, b);
+        assert!(a.contains("4 admitted = 3 completed + 1 failed"));
+        assert!(a.contains("2 warm hits"));
+        assert!(a.contains("tenant"));
+        assert!(a.lines().count() >= 6);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let j = report().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("admitted").unwrap().as_u64(), Some(4));
+        assert_eq!(
+            parsed.get("tenants").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert_eq!(
+            parsed.get("tenants").unwrap().as_arr().unwrap()[1]
+                .get("failed")
+                .unwrap()
+                .as_u64(),
+            Some(1)
+        );
+    }
+}

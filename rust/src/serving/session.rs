@@ -1,0 +1,415 @@
+//! The multi-job serving session: a job-level DES that multiplexes a
+//! stream of DAG jobs from many tenants onto one shared Lambda pool and
+//! one shared KVS.
+//!
+//! Two-level simulation: each job's *inner* run (the wukong engine on
+//! its DAG) is a pure function of `(dag, config, job_seed)`, so all
+//! per-job engine reports are precomputed in parallel with
+//! `ordered_map` — index-ordered and byte-identical to sequential,
+//! which is what makes `--threads N` output bit-equal to `--threads 1`.
+//! The *outer* session then replays arrivals sequentially over shared
+//! state: per-tenant admission queues under a fairness policy, slot
+//! accounting against one `LambdaService` (with warm-executor reuse
+//! between a finishing job's slots and the next arrival), a shared
+//! `KvsModel` metering every job's aggregate footprint under job-scoped
+//! keys (`storage::kvs::job_scoped_key` — concurrent jobs can never
+//! collide), and per-tenant `Billing` rollups.
+//!
+//! Conservation gate: every arrival is enqueued, every queued job is
+//! eventually admitted (demands are clamped to the pool size and both
+//! policies are head-of-line blocking, so completions always unblock
+//! the queue), and every admitted job finishes as completed ⊕ failed —
+//! never silently lost. `ServingReport::conserves_jobs` checks it.
+
+use crate::config::Config;
+use crate::engine::{Engine, SimWukong};
+use crate::platform::billing::{Billing, Prices};
+use crate::platform::lambda::LambdaService;
+use crate::sim::{secs, to_secs, Handler, Sim, Time};
+use crate::storage::kvs::{job_scoped_key, KvsModel};
+use crate::util::stats::percentile;
+use crate::util::threadpool::ordered_map;
+use crate::util::Rng;
+use crate::verify::corpus;
+
+use super::arrival::ArrivalStream;
+use super::report::{ServingReport, TenantStats};
+use super::tenants::{QueuedJob, TenantScheduler};
+
+/// Per-job seed split (same multiply-add shape as `verify::case_seed_of`
+/// but a different odd constant, so serving jobs never alias verify
+/// cases for the same base seed).
+fn job_seed_of(base: u64, job: u64) -> u64 {
+    base.wrapping_mul(0xD6E8_FEB8_6659_FD93).wrapping_add(job)
+}
+
+/// Everything the outer session needs to know about one job, extracted
+/// from its precomputed engine run.
+#[derive(Debug, Clone)]
+struct JobSpec {
+    tenant: usize,
+    arrive_at: Time,
+    /// Shared-pool slots occupied while running (peak concurrency of
+    /// the inner run, clamped to the pool size so every job fits).
+    demand: usize,
+    makespan: Time,
+    /// Executor-seconds (timeline integral) — the weighted-fair charge.
+    exec_s: f64,
+    tasks: u64,
+    sim_events: u64,
+    failed: bool,
+    kvs_read: u64,
+    kvs_written: u64,
+    billing: Billing,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ServeEv {
+    Arrive(usize),
+    Finish(usize),
+}
+
+#[derive(Debug, Default, Clone)]
+struct TenantAcc {
+    jobs: u64,
+    completed: u64,
+    failed: u64,
+    latencies: Vec<f64>,
+    queue_delays: Vec<f64>,
+    exec_s: f64,
+    billing: Billing,
+}
+
+struct ServeWorld {
+    specs: Vec<JobSpec>,
+    sched: TenantScheduler,
+    lambda: LambdaService,
+    kvs: KvsModel,
+    limit: usize,
+    invoke_latency: Time,
+    cold_penalty: Time,
+    admitted: u64,
+    completed: u64,
+    failed: u64,
+    per_tenant: Vec<TenantAcc>,
+    seq: u64,
+}
+
+impl ServeWorld {
+    /// Admit queued jobs while the policy's next pick fits in the free
+    /// slots (head-of-line blocking per policy).
+    fn drain(&mut self, sim: &mut Sim<ServeEv>) {
+        loop {
+            let free = self.limit - self.lambda.active();
+            let Some(q) = self.sched.pick(free) else { break };
+            let now = sim.now();
+            let j = q.job;
+            self.admitted += 1;
+            // Occupy the slots, reusing parked warm executors first.
+            let mut cold_slots = 0usize;
+            for _ in 0..q.demand {
+                if self.lambda.reuse(now).cold {
+                    cold_slots += 1;
+                }
+            }
+            // Meter the job's aggregate KVS footprint on the shared
+            // cluster under job-scoped keys. Timing already happened
+            // inside the inner run against its private model; here the
+            // shared model records contention-domain bytes/ops only
+            // (time-decoupled, like durability recovery costs).
+            let spec = &self.specs[j];
+            if spec.kvs_written > 0 {
+                self.kvs
+                    .write(now, job_scoped_key(j as u64, 0), spec.kvs_written);
+            }
+            if spec.kvs_read > 0 {
+                self.kvs
+                    .read(now, job_scoped_key(j as u64, 1), spec.kvs_read);
+            }
+            // Deterministic start: flat invoke latency (batch invoke),
+            // plus the cold penalty if any slot missed the warm pool.
+            let mut start = now + self.invoke_latency;
+            if cold_slots > 0 {
+                start += self.cold_penalty;
+            }
+            let t = &mut self.per_tenant[q.tenant];
+            t.queue_delays.push(to_secs(now - spec.arrive_at));
+            sim.at(start + spec.makespan, ServeEv::Finish(j));
+        }
+    }
+}
+
+impl Handler for ServeWorld {
+    type Ev = ServeEv;
+
+    fn handle(&mut self, sim: &mut Sim<ServeEv>, ev: ServeEv) {
+        match ev {
+            ServeEv::Arrive(j) => {
+                let spec = &self.specs[j];
+                self.seq += 1;
+                self.sched.enqueue(QueuedJob {
+                    job: j,
+                    tenant: spec.tenant,
+                    demand: spec.demand,
+                    exec_s: spec.exec_s,
+                    seq: self.seq,
+                    arrive_at: spec.arrive_at,
+                });
+                self.drain(sim);
+            }
+            ServeEv::Finish(j) => {
+                let spec = self.specs[j].clone();
+                // Free the slots and park them warm for the next job.
+                for _ in 0..spec.demand {
+                    self.lambda.release();
+                }
+                self.lambda.park_warm(spec.demand);
+                if spec.failed {
+                    self.failed += 1;
+                } else {
+                    self.completed += 1;
+                }
+                let t = &mut self.per_tenant[spec.tenant];
+                t.jobs += 1;
+                if spec.failed {
+                    t.failed += 1;
+                } else {
+                    t.completed += 1;
+                }
+                t.latencies.push(to_secs(sim.now() - spec.arrive_at));
+                t.exec_s += spec.exec_s;
+                t.billing.absorb(&spec.billing);
+                self.drain(sim);
+            }
+        }
+    }
+}
+
+/// Percentile that treats an empty sample as 0 (keeps reports free of
+/// NaN, which would break `PartialEq`-based determinism checks).
+fn pctl(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        percentile(xs, p)
+    }
+}
+
+/// Run one multi-tenant serving session over the wukong engine.
+///
+/// `cfg.arrival` shapes the job stream, `cfg.tenants` the population
+/// and fairness policy. `threads` parallelizes only the per-job engine
+/// precompute (index-ordered), so the returned report is byte-identical
+/// for every thread count. An empty arrival plan returns an all-zero
+/// report and consumes nothing.
+pub fn run_serving(cfg: &Config, seed: u64, threads: usize) -> ServingReport {
+    let tplan = cfg.tenants;
+    let n_tenants = tplan.count.max(1);
+    let arrivals =
+        ArrivalStream::for_run(cfg.arrival, seed).arrival_times();
+    let n = arrivals.len();
+    let limit = cfg.lambda.concurrency_limit.max(1);
+
+    // Precompute every job's inner engine run in parallel: pure per
+    // index, so `ordered_map` yields the same Vec for any thread count.
+    let job_cfg = cfg.clone();
+    let specs_base = ordered_map(n, threads, move |j| {
+        let jseed = job_seed_of(seed, j as u64);
+        let mut rng = Rng::new(jseed);
+        let dag = corpus::random_dag(&mut rng);
+        let rep = SimWukong.run(&dag, &job_cfg, jseed);
+        let m = rep.metrics;
+        JobSpec {
+            tenant: j % n_tenants,
+            arrive_at: 0,
+            demand: m.peak_concurrency.max(1).min(limit),
+            makespan: secs(m.makespan_s),
+            exec_s: m.timeline.integral_s(),
+            tasks: m.per_task_outcome.len() as u64,
+            sim_events: rep.sim_events.unwrap_or(0),
+            failed: m.failed_tasks > 0,
+            kvs_read: m.kvs.bytes_read,
+            kvs_written: m.kvs.bytes_written,
+            billing: m.billing,
+        }
+    });
+    let mut specs = specs_base;
+    for (j, &at) in arrivals.iter().enumerate() {
+        specs[j].arrive_at = at;
+    }
+
+    let mut world = ServeWorld {
+        sched: TenantScheduler::new(tplan),
+        lambda: LambdaService::new(cfg.lambda, Rng::new(seed)),
+        kvs: KvsModel::new(cfg.storage),
+        limit,
+        invoke_latency: secs(cfg.lambda.invoke_latency_s),
+        cold_penalty: secs(cfg.lambda.cold_start_s),
+        admitted: 0,
+        completed: 0,
+        failed: 0,
+        per_tenant: vec![TenantAcc::default(); n_tenants],
+        specs,
+        seq: 0,
+    };
+
+    let mut sim: Sim<ServeEv> = Sim::new();
+    for (j, &at) in arrivals.iter().enumerate() {
+        sim.at(at, ServeEv::Arrive(j));
+    }
+    let end = sim.run(&mut world);
+
+    let prices = Prices::default();
+    let horizon_s = to_secs(end);
+    let engine_events: u64 =
+        world.specs.iter().map(|s| s.sim_events).sum();
+    let total_events = engine_events + sim.processed();
+    let mut all_latencies: Vec<f64> = Vec::new();
+    let mut total_billing = Billing::default();
+    let tenants: Vec<TenantStats> = world
+        .per_tenant
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            all_latencies.extend_from_slice(&t.latencies);
+            total_billing.absorb(&t.billing);
+            TenantStats {
+                tenant: i,
+                weight: tplan.weight(i),
+                jobs: t.jobs,
+                completed: t.completed,
+                failed: t.failed,
+                p50_latency_s: pctl(&t.latencies, 50.0),
+                p99_latency_s: pctl(&t.latencies, 99.0),
+                p50_queue_s: pctl(&t.queue_delays, 50.0),
+                p99_queue_s: pctl(&t.queue_delays, 99.0),
+                executor_hours: t.exec_s / 3600.0,
+                dollars: t.billing.total(&prices),
+            }
+        })
+        .collect();
+
+    ServingReport {
+        arrived: n as u64,
+        admitted: world.admitted,
+        completed: world.completed,
+        failed: world.failed,
+        total_tasks: world.specs.iter().map(|s| s.tasks).sum(),
+        horizon_s,
+        session_events: sim.processed(),
+        total_events,
+        events_per_s: if horizon_s > 0.0 {
+            total_events as f64 / horizon_s
+        } else {
+            0.0
+        },
+        warm_hits: world.lambda.warm_hits(),
+        cold_starts: world.lambda.cold_starts(),
+        peak_slots: world.lambda.peak_active(),
+        kvs_bytes: world.kvs.metrics.bytes_read
+            + world.kvs.metrics.bytes_written,
+        p50_latency_s: pctl(&all_latencies, 50.0),
+        p99_latency_s: pctl(&all_latencies, 99.0),
+        executor_hours: world.per_tenant.iter().map(|t| t.exec_s).sum::<f64>()
+            / 3600.0,
+        dollars: total_billing.total(&prices),
+        tenants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::arrival::ArrivalPlan;
+    use crate::serving::tenants::{FairnessPolicy, TenantPlan};
+
+    fn serving_cfg(plan: ArrivalPlan, tenants: TenantPlan) -> Config {
+        let mut cfg = Config::default();
+        cfg.arrival = plan;
+        cfg.tenants = tenants;
+        cfg
+    }
+
+    #[test]
+    fn session_conserves_jobs_under_both_policies() {
+        for policy in [FairnessPolicy::Fifo, FairnessPolicy::WeightedFair] {
+            let cfg = serving_cfg(
+                ArrivalPlan::poisson(20.0, 12),
+                TenantPlan {
+                    count: 3,
+                    policy,
+                    weight_skew: 0.5,
+                },
+            );
+            let r = run_serving(&cfg, 11, 1);
+            assert_eq!(r.arrived, 12);
+            assert!(r.conserves_jobs(), "{policy:?}: {r:?}");
+            assert!(r.total_events > r.session_events);
+            assert!(r.horizon_s > 0.0);
+            // Every occupied slot was classified warm xor cold.
+            assert!(r.warm_hits + r.cold_starts > 0);
+        }
+    }
+
+    #[test]
+    fn report_is_byte_identical_across_reruns_and_threads() {
+        let cfg = serving_cfg(
+            ArrivalPlan::poisson(10.0, 10),
+            TenantPlan::default(),
+        );
+        let a = run_serving(&cfg, 5, 1);
+        let b = run_serving(&cfg, 5, 1);
+        let c = run_serving(&cfg, 5, 3);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(a.render(), c.render());
+    }
+
+    #[test]
+    fn empty_stream_is_a_no_op_report() {
+        let cfg = serving_cfg(
+            ArrivalPlan::poisson(0.0, 500),
+            TenantPlan::default(),
+        );
+        let r = run_serving(&cfg, 9, 2);
+        assert_eq!(r.arrived, 0);
+        assert_eq!(r.admitted, 0);
+        assert_eq!(r.session_events, 0);
+        assert_eq!(r.total_events, 0);
+        assert_eq!(r.kvs_bytes, 0);
+        assert_eq!(r.warm_hits + r.cold_starts, 0);
+        assert!(r.conserves_jobs());
+        assert_eq!(r.tenants.len(), 4);
+        assert!(r.tenants.iter().all(|t| t.jobs == 0 && t.dollars == 0.0));
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_warm_executors() {
+        // Trace gaps far larger than any job makespan: jobs never
+        // overlap, so every job after the first finds parked warm
+        // executors from its predecessors.
+        let cfg = serving_cfg(
+            ArrivalPlan::trace(100_000.0, 10),
+            TenantPlan {
+                count: 1,
+                policy: FairnessPolicy::Fifo,
+                weight_skew: 0.0,
+            },
+        );
+        let r = run_serving(&cfg, 3, 1);
+        assert!(r.conserves_jobs());
+        assert!(
+            r.warm_hits >= 9,
+            "each of the 9 later jobs should hit the warm pool: {r:?}"
+        );
+        // No queueing when jobs never overlap.
+        assert_eq!(r.tenants[0].p99_queue_s, 0.0);
+    }
+
+    #[test]
+    fn job_seed_split_differs_from_the_base_seed() {
+        assert_ne!(job_seed_of(42, 0), 42);
+        assert_ne!(job_seed_of(42, 0), job_seed_of(42, 1));
+        assert_ne!(job_seed_of(42, 1), job_seed_of(43, 1));
+    }
+}

@@ -21,6 +21,7 @@
 use crate::config::{Config, StorageConfig};
 use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
 use crate::platform::faults::{FaultPlan, ShardCrashPlan};
+use crate::serving::ArrivalPlan;
 use crate::util::prop::gen;
 use crate::util::Rng;
 
@@ -322,6 +323,25 @@ pub fn crash_matrix() -> Vec<ShardCrashPlan> {
     ]
 }
 
+/// Jobs per serving plan swept by `wukong verify --serving`. Small on
+/// purpose: every admitted job is a full engine run, and the axis runs
+/// each plan twice (a determinism replay).
+pub const SERVING_JOBS: u64 = 6;
+
+/// The arrival-plan matrix swept by `wukong verify --serving`: a
+/// zero-rate Poisson stream (the empty-stream/bit-identity regression —
+/// it must admit nothing and draw nothing), a slow and a bursty Poisson
+/// regime, and a deterministic trace. Plans are fixed (not drawn from
+/// the case RNG) so the harness's engine-run accounting is pinnable.
+pub fn arrival_matrix() -> Vec<ArrivalPlan> {
+    vec![
+        ArrivalPlan::poisson(0.0, SERVING_JOBS),
+        ArrivalPlan::poisson(4.0, SERVING_JOBS),
+        ArrivalPlan::poisson(50.0, SERVING_JOBS),
+        ArrivalPlan::trace(0.25, SERVING_JOBS),
+    ]
+}
+
 /// Durability cost profiles for the crash axis, derived from a case's
 /// base config: the default free-WAL tier (fsync and snapshots cost
 /// nothing, so crash-free runs are bit-identical to the base sweep's)
@@ -470,6 +490,16 @@ mod tests {
         assert_eq!(m.iter().filter(|p| p.p_crash == 0.0).count(), 1);
         assert!(m.iter().any(|p| p.max_crashes == 1));
         assert!(m.iter().all(|p| (0.0..=1.0).contains(&p.p_crash)));
+    }
+
+    #[test]
+    fn arrival_matrix_pins_one_empty_and_three_live_plans() {
+        let m = arrival_matrix();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.iter().filter(|p| p.is_empty()).count(), 1);
+        assert!(m[0].is_empty(), "plan 0 is the zero-rate regression");
+        assert!(m.iter().all(|p| p.jobs == SERVING_JOBS));
+        assert!(m.iter().any(|p| p.mode == crate::serving::ArrivalMode::Trace));
     }
 
     #[test]

@@ -33,6 +33,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use crate::config::Config;
 use crate::dag::Dag;
 use crate::engine::{select_engines, Engine, EngineReport};
+use crate::serving::{run_serving, FairnessPolicy};
 use crate::util::threadpool::ordered_map;
 use crate::util::Rng;
 
@@ -63,6 +64,12 @@ pub struct VerifyOptions {
     /// uninterrupted reference modulo the recovery meters. Opt-in, like
     /// `faults`.
     pub crashes: bool,
+    /// Sweep the multi-tenant serving axis (`corpus::arrival_matrix`):
+    /// each arrival plan is multiplexed over the shared pool twice and
+    /// must conserve jobs (admitted = completed ⊕ failed) and replay
+    /// byte-identically; the zero-rate plan must be a no-op. Opt-in,
+    /// like `faults`.
+    pub serving: bool,
 }
 
 impl Default for VerifyOptions {
@@ -76,6 +83,7 @@ impl Default for VerifyOptions {
             large: false,
             faults: false,
             crashes: false,
+            serving: false,
         }
     }
 }
@@ -404,6 +412,75 @@ fn run_case(opts: &VerifyOptions, case: u64) -> CaseResult {
         }
     }
 
+    // Opt-in multi-tenant serving axis. Runs once per case — the
+    // session drives the wukong sim engine internally for every
+    // admitted job (each counted in `engine_runs`), independent of the
+    // `--engine` filter. Every plan runs twice: the replay must be
+    // byte-identical (`ServingReport` is `PartialEq` over virtual-time
+    // metrics only), and every session must conserve jobs. The matrix's
+    // zero-rate plan pins the empty-stream contract: nothing admitted,
+    // no events, no KVS traffic.
+    if opts.serving {
+        for (i, plan) in corpus::arrival_matrix().into_iter().enumerate() {
+            let label = format!(
+                "serving {:?} rate={} gap={} jobs={}",
+                plan.mode, plan.rate_per_s, plan.trace_gap_s, plan.jobs
+            );
+            let mut cfg = base.clone();
+            cfg.arrival = plan;
+            if i % 2 == 1 {
+                // Alternate fairness policies across the matrix so both
+                // schedulers stay under the conservation gate.
+                cfg.tenants.policy = FairnessPolicy::WeightedFair;
+                cfg.tenants.weight_skew = 0.5;
+            }
+            let (rep, rerun) = match catch_unwind(AssertUnwindSafe(|| {
+                (
+                    run_serving(&cfg, run_seed, 1),
+                    run_serving(&cfg, run_seed, 1),
+                )
+            })) {
+                Ok(pair) => pair,
+                Err(err) => {
+                    violations.push(format!(
+                        "serving session panicked: {} ({label})",
+                        crate::util::prop::panic_message(err.as_ref())
+                    ));
+                    continue;
+                }
+            };
+            engine_runs += rep.admitted + rerun.admitted;
+            if rep != rerun {
+                violations.push(format!(
+                    "serving replay diverged ({label})"
+                ));
+            }
+            if !rep.conserves_jobs() {
+                violations.push(format!(
+                    "serving lost jobs: {} arrived, {} admitted, \
+                     {} completed + {} failed ({label})",
+                    rep.arrived, rep.admitted, rep.completed, rep.failed
+                ));
+            }
+            if plan.is_empty() {
+                if rep.admitted != 0
+                    || rep.total_events != 0
+                    || rep.kvs_bytes != 0
+                    || rep.dollars != 0.0
+                {
+                    violations.push(format!(
+                        "empty arrival plan was not a no-op ({label})"
+                    ));
+                }
+            } else if rep.arrived != plan.jobs {
+                violations.push(format!(
+                    "serving stream emitted {} of {} jobs ({label})",
+                    rep.arrived, plan.jobs
+                ));
+            }
+        }
+    }
+
     let verbose_line = format!(
         "case {case:>3}  seed {case_seed:#018x}  dag {:<10} {:>3} tasks \
          {:>3} edges  {}",
@@ -549,6 +626,45 @@ mod tests {
         // Base matrix (16 + 8) plus, per sim engine, 2 durability
         // profiles × (1 reference + 4 crash plans × 2 runs).
         assert_eq!(s.engine_runs, 3 * (16 + 8 + 5 * (2 * (1 + 4 * 2))));
+    }
+
+    #[test]
+    fn serving_sweep_is_clean_and_counts_admitted_jobs() {
+        let s = run_verify(&VerifyOptions {
+            runs: 2,
+            seed: 41,
+            serving: true,
+            ..VerifyOptions::default()
+        })
+        .unwrap();
+        assert_eq!(s.cases, 2);
+        assert!(s.violations.is_empty(), "{:#?}", s.violations);
+        // Base matrix (16 + 8) plus the serving axis: 4 arrival plans
+        // run twice, the zero-rate plan admits nothing and each live
+        // plan admits all SERVING_JOBS jobs (one engine run per job).
+        let per_session = 3 * corpus::SERVING_JOBS;
+        assert_eq!(s.engine_runs, 2 * (16 + 8 + 2 * per_session));
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree_under_serving() {
+        let base = VerifyOptions {
+            runs: 2,
+            seed: 43,
+            serving: true,
+            ..VerifyOptions::default()
+        };
+        let seq = run_verify(&VerifyOptions {
+            threads: 1,
+            ..base.clone()
+        })
+        .unwrap();
+        let par = run_verify(&VerifyOptions {
+            threads: 4,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(seq, par);
     }
 
     #[test]

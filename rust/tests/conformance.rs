@@ -90,6 +90,60 @@ fn crash_recovery_matrix_runs_clean() {
     assert_eq!(summary.engine_runs, 6 * (24 + 5 * 18));
 }
 
+/// The multi-tenant serving axis (`wukong verify --serving`): on top of
+/// the base matrix, every case multiplexes `corpus::arrival_matrix()`
+/// job streams over the shared Lambda pool + KVS (alternating FIFO and
+/// weighted-fair admission), each session run twice. Gates: job
+/// conservation (admitted = completed ⊕ failed, partitioned exactly by
+/// the per-tenant rollups), byte-identical replays, and the zero-rate
+/// plan admitting nothing.
+#[test]
+fn serving_matrix_runs_clean() {
+    let summary = run_verify(&VerifyOptions {
+        runs: 4,
+        seed: 7,
+        serving: true,
+        ..VerifyOptions::default()
+    })
+    .expect("default options are valid");
+    assert_eq!(summary.cases, 4);
+    assert!(
+        summary.violations.is_empty(),
+        "serving-axis violations:\n{}",
+        summary.violations.join("\n")
+    );
+    // base 24 + 2 sessions × 3 live plans × SERVING_JOBS admitted jobs
+    // (each admitted job is one engine run; the zero-rate plan admits 0)
+    assert_eq!(
+        summary.engine_runs,
+        4 * (24 + 2 * 3 * corpus::SERVING_JOBS)
+    );
+}
+
+/// Satellite: the serving-axis sweep stays byte-identical to
+/// `--threads 1` (arrival streams are per-session state salted off the
+/// run seed — no cross-case leakage through worker reuse).
+#[test]
+fn serving_sweep_is_thread_count_invariant() {
+    let base = VerifyOptions {
+        runs: 3,
+        seed: 47,
+        serving: true,
+        ..VerifyOptions::default()
+    };
+    let seq = run_verify(&VerifyOptions {
+        threads: 1,
+        ..base.clone()
+    })
+    .unwrap();
+    let par = run_verify(&VerifyOptions {
+        threads: 3,
+        ..base
+    })
+    .unwrap();
+    assert_eq!(seq, par);
+}
+
 /// Satellite: the crash-axis sweep stays byte-identical to `--threads 1`
 /// (crash streams are per-run state, like fault streams — no cross-case
 /// leakage through worker reuse).

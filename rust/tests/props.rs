@@ -343,6 +343,90 @@ fn zero_rate_crash_plans_are_invisible() {
 }
 
 #[test]
+fn serving_conserves_jobs_over_random_arrival_plans() {
+    use wukong::serving::{run_serving, ArrivalPlan, FairnessPolicy};
+    // Multi-tenant job conservation: under random Poisson/trace streams,
+    // tenant counts and both fairness policies, every arrived job is
+    // admitted and every admitted job finishes completed ⊕ failed — the
+    // per-tenant rollups partition the totals exactly.
+    check(0x5E21, 8, |rng| {
+        let mut cfg = random_config(rng);
+        let jobs = gen::usize_in(rng, 1, 10) as u64;
+        cfg.arrival = if rng.f64() < 0.5 {
+            ArrivalPlan::poisson(rng.f64() * 30.0 + 0.1, jobs)
+        } else {
+            ArrivalPlan::trace(rng.f64() * 2.0, jobs)
+        };
+        cfg.tenants.count = gen::usize_in(rng, 1, 5);
+        if rng.f64() < 0.5 {
+            cfg.tenants.policy = FairnessPolicy::WeightedFair;
+            cfg.tenants.weight_skew = rng.f64();
+        }
+        let rep = run_serving(&cfg, rng.next_u64(), 1);
+        assert_eq!(rep.arrived, jobs);
+        assert!(
+            rep.conserves_jobs(),
+            "{} arrived, {} admitted, {} completed + {} failed",
+            rep.arrived,
+            rep.admitted,
+            rep.completed,
+            rep.failed
+        );
+    });
+}
+
+#[test]
+fn serving_reports_are_thread_count_invariant() {
+    use wukong::serving::{run_serving, ArrivalPlan, FairnessPolicy};
+    // The per-job precompute fans out across the pool; the session
+    // replay must be byte-identical regardless of worker count.
+    check(0x5E22, 5, |rng| {
+        let mut cfg = random_config(rng);
+        cfg.arrival =
+            ArrivalPlan::poisson(rng.f64() * 20.0 + 0.5, gen::usize_in(rng, 2, 8) as u64);
+        cfg.tenants.count = gen::usize_in(rng, 1, 4);
+        cfg.tenants.policy = FairnessPolicy::WeightedFair;
+        cfg.tenants.weight_skew = rng.f64();
+        let seed = rng.next_u64();
+        let a = run_serving(&cfg, seed, 1);
+        let b = run_serving(&cfg, seed, 4);
+        assert_eq!(a, b, "serving report diverged across thread counts");
+        assert_eq!(a.render(), b.render());
+    });
+}
+
+#[test]
+fn zero_rate_arrival_plans_are_invisible() {
+    use wukong::engine::select_engines;
+    use wukong::serving::{run_serving, ArrivalPlan};
+    // The serving keys must be inert outside the serving layer: engines
+    // never consult `cfg.arrival`/`cfg.tenants`, so setting them leaves
+    // every single-DAG run bit-identical — and a zero-rate stream is an
+    // all-zero no-op report (it draws nothing from any RNG stream).
+    check(0x5E23, 8, |rng| {
+        let dag = random_dag(rng);
+        let base = random_config(rng);
+        let mut planned = base.clone();
+        planned.arrival =
+            ArrivalPlan::poisson(0.0, gen::usize_in(rng, 0, 500) as u64);
+        planned.tenants.count = gen::usize_in(rng, 1, 8);
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            let a = engine.run(&dag, &base, seed);
+            let b = engine.run(&dag, &planned, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+        let rep = run_serving(&planned, seed, 1);
+        assert_eq!((rep.arrived, rep.admitted), (0, 0));
+        assert_eq!(rep.total_events, 0);
+        assert_eq!(rep.kvs_bytes, 0);
+        assert!(rep.conserves_jobs());
+    });
+}
+
+#[test]
 fn makespan_at_least_critical_path() {
     check(0xC121, 30, |rng| {
         let dag = random_dag(rng);
