@@ -18,7 +18,10 @@ use crate::config::{Config, DaskConfig};
 use crate::dag::{Dag, TaskId};
 use crate::metrics::{RunMetrics, TaskOutcome};
 use crate::platform::faults::{propagate_failures, FaultStream};
-use crate::sim::{secs, to_secs, FifoResource, Handler, MultiResource, Sim, Time};
+use crate::sim::{
+    secs, to_secs, FifoResource, Handler, MultiResource, ReadyCounters, Sim,
+    Time,
+};
 
 use super::BaselineReport;
 
@@ -45,7 +48,8 @@ struct World<'a> {
     dag: &'a Dag,
     sched: FifoResource,
     ready: VecDeque<TaskId>,
-    remaining: Vec<usize>,
+    /// Remaining-parent counters (branch-light CSR sweep in `complete`).
+    remaining: ReadyCounters,
     /// Per-task execution counters (fail-fast on 2; see RunMetrics).
     executed: Vec<u32>,
     /// Primary location of each task's output (executing worker).
@@ -207,14 +211,8 @@ fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     let (_, end) = w.sched.acquire(sim.now(), secs(w.dcfg.effective_msg_s()));
     w.metrics.breakdown.publish_s += to_secs(end - sim.now());
     let dag = w.dag;
-    let mut newly = false;
-    for &c in dag.children(t) {
-        w.remaining[c as usize] -= 1;
-        if w.remaining[c as usize] == 0 {
-            w.ready.push_back(c);
-            newly = true;
-        }
-    }
+    let (remaining, ready) = (&mut w.remaining, &mut w.ready);
+    let newly = remaining.complete(dag, t, |c| ready.push_back(c));
     if w.done + w.n_failed == w.dag.len() as u64 {
         w.finish = Some(end);
     } else if newly {
@@ -236,7 +234,7 @@ pub fn run_dask_full(
         dag,
         sched: FifoResource::new(),
         ready: dag.leaves().iter().copied().collect(),
-        remaining: (0..n as TaskId).map(|t| dag.indegree(t)).collect(),
+        remaining: ReadyCounters::new(dag),
         executed: vec![0; n],
         loc: vec![None; n],
         input_loc: (0..n).map(|i| i % dcfg.n_workers).collect(),
@@ -261,7 +259,7 @@ pub fn run_dask_full(
         outcome: vec![TaskOutcome::Completed; n],
         n_failed: 0,
     };
-    let mut sim: Sim<Ev> = Sim::new();
+    let mut sim: Sim<Ev> = cfg.sim.build();
     sim.set_event_budget(cfg.event_budget);
     // Kick the scheduler once per initially-ready task.
     let initially_ready = w.ready.len();

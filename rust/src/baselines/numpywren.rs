@@ -19,7 +19,10 @@ use crate::dag::{Dag, TaskId, TaskNode};
 use crate::metrics::{RunMetrics, TaskOutcome};
 use crate::platform::faults::{propagate_failures, FaultStream};
 use crate::platform::LambdaService;
-use crate::sim::{secs, to_secs, FifoResource, Handler, MultiResource, Sim, Time};
+use crate::sim::{
+    secs, to_secs, FifoResource, Handler, MultiResource, ReadyCounters, Sim,
+    Time,
+};
 use crate::storage::KvsModel;
 use crate::util::Rng;
 
@@ -49,7 +52,8 @@ struct World<'a> {
     kvs: KvsModel,
     queue_srv: FifoResource,
     queue: VecDeque<TaskId>,
-    remaining: Vec<usize>,
+    /// Remaining-parent counters (branch-light CSR sweep in `complete`).
+    remaining: ReadyCounters,
     /// Per-task execution counters (fail-fast on 2; see RunMetrics).
     executed: Vec<u32>,
     done: u64,
@@ -209,12 +213,8 @@ fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     let t_op = w.queue_op(sim.now());
     w.metrics.breakdown.publish_s += to_secs(t_op - sim.now());
     let dag = w.dag;
-    for &c in dag.children(t) {
-        w.remaining[c as usize] -= 1;
-        if w.remaining[c as usize] == 0 {
-            w.queue.push_back(c);
-        }
-    }
+    let (remaining, queue) = (&mut w.remaining, &mut w.queue);
+    remaining.complete(dag, t, |c| queue.push_back(c));
     if w.done + w.n_failed == w.dag.len() as u64 {
         w.finish = Some(t_op);
     }
@@ -261,7 +261,7 @@ pub fn run_numpywren_n(
         kvs: KvsModel::with_crashes(cfg.storage, cfg.crashes, seed),
         queue_srv: FifoResource::new(),
         queue: dag.leaves().iter().copied().collect(),
-        remaining: (0..n as TaskId).map(|t| dag.indegree(t)).collect(),
+        remaining: ReadyCounters::new(dag),
         executed: vec![0; n],
         done: 0,
         workers: Vec::new(),
@@ -275,7 +275,7 @@ pub fn run_numpywren_n(
         n_failed: 0,
         cfg,
     };
-    let mut sim: Sim<Ev> = Sim::new();
+    let mut sim: Sim<Ev> = cfg.sim.build();
     sim.set_event_budget(cfg.event_budget);
 
     // Provision the initial worker fleet through the invoker threads.

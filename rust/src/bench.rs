@@ -9,9 +9,11 @@
 //! simulated makespan. A fourth *job-stream* tier measures the
 //! multi-tenant serving layer (thousands of corpus DAG jobs multiplexed
 //! over one shared pool), adding jobs/sec and p99 job latency to the
-//! row. Results are written as `BENCH_PR8.json`; each PR
+//! row. Results are written as `BENCH_<point>.json`; each PR
 //! appends a `BENCH_*.json` point so the perf trajectory is recorded and
-//! regressions are caught by comparing events/sec per engine (see
+//! regressions are caught automatically by `wukong bench --diff
+//! BASELINE.json` (see [`diff`]), which fails on a >20% events/sec drop
+//! or superlinear `sim_events` growth per `(engine, workload)` row (see
 //! ROADMAP.md §Performance & benchmarking).
 //!
 //! The decentralized Wukong engine runs the full 1,000,000-task DAGs;
@@ -20,6 +22,8 @@
 //! every worker per task; numpywren/pywren hold per-worker state and
 //! poll a shared queue) — the point of the gate is events/sec per
 //! engine, not identical task counts.
+
+pub mod diff;
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -36,7 +40,7 @@ use crate::workloads::{micro, tsqr};
 /// The trajectory point this build records. Bump once per PR that
 /// re-baselines perf — the JSON `pr` field and the default output
 /// filename both derive from it.
-pub const TRAJECTORY_POINT: &str = "PR8";
+pub const TRAJECTORY_POINT: &str = "PR9";
 
 /// Default output path: `BENCH_<point>.json` at the invocation cwd.
 pub fn default_out_path() -> String {

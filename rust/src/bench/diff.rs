@@ -1,0 +1,380 @@
+//! `wukong bench --diff BASELINE.json` — the automated perf-regression
+//! gate.
+//!
+//! Compares a freshly measured `BENCH_*.json` sweep against a committed
+//! baseline, row by row (matched on `(engine, workload)`), and fails
+//! when either of two things happened since the baseline was captured:
+//!
+//! 1. **Throughput regression** — `events_per_sec` dropped by more than
+//!    [`MAX_EVENTS_PER_SEC_DROP`] (20%). Wall-clock throughput is noisy,
+//!    so the threshold is deliberately loose; the committed CI baseline
+//!    additionally uses a conservative floor (see ROADMAP.md).
+//! 2. **Superlinear event growth** — `sim_events` grew faster than the
+//!    task count did, by more than [`MAX_SUPERLINEAR_GROWTH`] (25%)
+//!    beyond the linear scaling `base_events × (cur_tasks /
+//!    base_tasks)`. This is the machine-independent half of the gate: a
+//!    calendar or engine change that starts emitting O(n log n) or O(n²)
+//!    events per task trips it even on an arbitrarily fast machine.
+//!
+//! A baseline row with no matching current row is a failure (an engine
+//! silently dropping out of the sweep must not pass the gate); a current
+//! row with no baseline is informational only. Mixing `--quick` and
+//! full-mode files is a hard error rather than a failure — the task
+//! budgets differ ~100×, so every row would trip the growth check for
+//! the wrong reason.
+
+use crate::util::json::Json;
+
+/// Maximum tolerated fractional drop in `events_per_sec` per row.
+pub const MAX_EVENTS_PER_SEC_DROP: f64 = 0.20;
+
+/// Maximum tolerated fractional excess of `sim_events` over linear
+/// scaling in the task count.
+pub const MAX_SUPERLINEAR_GROWTH: f64 = 0.25;
+
+/// The outcome of one baseline/current comparison.
+#[derive(Debug, Clone)]
+pub struct BenchDiff {
+    /// One human-readable line per compared (or unmatched) row.
+    pub lines: Vec<String>,
+    /// The subset of rows that failed the gate, with reasons.
+    pub failures: Vec<String>,
+}
+
+impl BenchDiff {
+    /// True when every baseline row was matched and within thresholds.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// One parsed `(engine, workload)` row, only the gated fields.
+#[derive(Debug, Clone, PartialEq)]
+struct Row {
+    engine: String,
+    workload: String,
+    tasks: f64,
+    sim_events: f64,
+    events_per_sec: f64,
+}
+
+fn str_key(label: &str, j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("{label}: missing string key \"{key}\""))
+}
+
+fn num_key(label: &str, j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("{label}: missing numeric key \"{key}\""))
+}
+
+fn bool_key(label: &str, j: &Json, key: &str) -> Result<bool, String> {
+    j.get(key)
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| format!("{label}: missing boolean key \"{key}\""))
+}
+
+/// Parse and schema-check one `BENCH_*.json` document. Returns the
+/// `quick` flag and the gated rows.
+fn parse_bench(label: &str, text: &str) -> Result<(bool, Vec<Row>), String> {
+    let top = Json::parse(text)
+        .map_err(|e| format!("{label}: invalid JSON: {e}"))?;
+    let schema = str_key(label, &top, "bench")?;
+    if schema != "wukong-sim-hotpath" {
+        return Err(format!(
+            "{label}: \"bench\" is \"{schema}\" \
+             (expected \"wukong-sim-hotpath\")"
+        ));
+    }
+    let quick = bool_key(label, &top, "quick")?;
+    let recs = top
+        .get("records")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("{label}: missing array key \"records\""))?;
+    let mut rows = Vec::with_capacity(recs.len());
+    for (i, r) in recs.iter().enumerate() {
+        let ctx = format!("{label}: records[{i}]");
+        rows.push(Row {
+            engine: str_key(&ctx, r, "engine")?,
+            workload: str_key(&ctx, r, "workload")?,
+            tasks: num_key(&ctx, r, "tasks")?,
+            sim_events: num_key(&ctx, r, "sim_events")?,
+            events_per_sec: num_key(&ctx, r, "events_per_sec")?,
+        });
+    }
+    Ok((quick, rows))
+}
+
+/// Compare `current_text` against `baseline_text` (both `BENCH_*.json`
+/// documents). `Err` means the inputs are unusable (bad JSON, schema
+/// mismatch, quick/full mix); `Ok` carries per-row verdicts — check
+/// [`BenchDiff::passed`].
+pub fn diff_benches(
+    baseline_text: &str,
+    current_text: &str,
+) -> Result<BenchDiff, String> {
+    let (base_quick, base_rows) = parse_bench("baseline", baseline_text)?;
+    let (cur_quick, cur_rows) = parse_bench("current", current_text)?;
+    if base_quick != cur_quick {
+        return Err(format!(
+            "quick-mode mismatch: baseline quick={base_quick}, \
+             current quick={cur_quick} (task budgets differ ~100x; \
+             compare like with like)"
+        ));
+    }
+    let mut diff = BenchDiff {
+        lines: Vec::new(),
+        failures: Vec::new(),
+    };
+    for b in &base_rows {
+        let key = format!("{} {}", b.engine, b.workload);
+        let Some(c) = cur_rows
+            .iter()
+            .find(|c| c.engine == b.engine && c.workload == b.workload)
+        else {
+            let msg = format!(
+                "[{key}] present in baseline but missing from current run"
+            );
+            diff.lines.push(format!("{msg}: FAIL"));
+            diff.failures.push(msg);
+            continue;
+        };
+        let mut reasons = Vec::new();
+        let eps_floor = b.events_per_sec * (1.0 - MAX_EVENTS_PER_SEC_DROP);
+        if c.events_per_sec < eps_floor {
+            reasons.push(format!(
+                "events_per_sec {:.0} -> {:.0} (floor {:.0}, \
+                 >{}% regression)",
+                b.events_per_sec,
+                c.events_per_sec,
+                eps_floor,
+                (MAX_EVENTS_PER_SEC_DROP * 100.0) as u32
+            ));
+        }
+        // Superlinear growth: normalize by the task-count ratio so a
+        // deliberate budget increase (tasks x10, events x10) passes.
+        let task_ratio = if b.tasks > 0.0 { c.tasks / b.tasks } else { 1.0 };
+        let events_ceiling =
+            b.sim_events * task_ratio * (1.0 + MAX_SUPERLINEAR_GROWTH);
+        if c.sim_events > events_ceiling {
+            reasons.push(format!(
+                "sim_events {:.0} -> {:.0} \
+                 (ceiling {:.0} at tasks x{:.2}, superlinear growth)",
+                b.sim_events, c.sim_events, events_ceiling, task_ratio
+            ));
+        }
+        if reasons.is_empty() {
+            diff.lines.push(format!(
+                "[{key}] events/sec {:.0} -> {:.0}, \
+                 sim_events {:.0} -> {:.0}: ok",
+                b.events_per_sec,
+                c.events_per_sec,
+                b.sim_events,
+                c.sim_events
+            ));
+        } else {
+            let msg = format!("[{key}] {}", reasons.join("; "));
+            diff.lines.push(format!("{msg}: FAIL"));
+            diff.failures.push(msg);
+        }
+    }
+    for c in &cur_rows {
+        let known = base_rows
+            .iter()
+            .any(|b| b.engine == c.engine && b.workload == c.workload);
+        if !known {
+            diff.lines.push(format!(
+                "[{} {}] new record (no baseline): skipped",
+                c.engine, c.workload
+            ));
+        }
+    }
+    Ok(diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// Build a schema-valid `BENCH_*.json` document from
+    /// `(engine, workload, tasks, sim_events, events_per_sec)` rows.
+    fn fixture(quick: bool, rows: &[(&str, &str, f64, f64, f64)]) -> String {
+        let recs: Vec<Json> = rows
+            .iter()
+            .map(|(e, w, tasks, ev, eps)| {
+                let mut m = BTreeMap::new();
+                m.insert("engine".to_string(), Json::Str(e.to_string()));
+                m.insert("workload".to_string(), Json::Str(w.to_string()));
+                m.insert("tasks".to_string(), Json::Num(*tasks));
+                m.insert("sim_events".to_string(), Json::Num(*ev));
+                m.insert("events_per_sec".to_string(), Json::Num(*eps));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert(
+            "bench".to_string(),
+            Json::Str("wukong-sim-hotpath".to_string()),
+        );
+        top.insert("pr".to_string(), Json::Str("TEST".to_string()));
+        top.insert("quick".to_string(), Json::Bool(quick));
+        top.insert("seed".to_string(), Json::Num(42.0));
+        top.insert("records".to_string(), Json::Arr(recs));
+        Json::Obj(top).to_string()
+    }
+
+    const BASE: &[(&str, &str, f64, f64, f64)] = &[
+        ("wukong", "fanout", 1_000_000.0, 4_000_000.0, 3.0e6),
+        ("wukong", "chain", 1_000_000.0, 3_000_000.0, 2.5e6),
+        ("dask125", "fanout", 50_000.0, 300_000.0, 8.0e5),
+    ];
+
+    #[test]
+    fn identical_runs_pass() {
+        let b = fixture(false, BASE);
+        let d = diff_benches(&b, &b).unwrap();
+        assert!(d.passed(), "{:?}", d.failures);
+        assert_eq!(d.lines.len(), BASE.len());
+        assert!(d.lines.iter().all(|l| l.ends_with(": ok")));
+    }
+
+    #[test]
+    fn small_noise_within_threshold_passes() {
+        let b = fixture(false, BASE);
+        // 10% slower: inside the 20% tolerance band.
+        let c = fixture(
+            false,
+            &[
+                ("wukong", "fanout", 1_000_000.0, 4_000_000.0, 2.7e6),
+                ("wukong", "chain", 1_000_000.0, 3_000_000.0, 2.25e6),
+                ("dask125", "fanout", 50_000.0, 300_000.0, 7.2e5),
+            ],
+        );
+        assert!(diff_benches(&b, &c).unwrap().passed());
+    }
+
+    #[test]
+    fn twenty_five_percent_regression_fails() {
+        // The acceptance fixture: a synthetic 25% events/sec drop on one
+        // row must trip the gate and name the row and the key.
+        let b = fixture(false, BASE);
+        let c = fixture(
+            false,
+            &[
+                ("wukong", "fanout", 1_000_000.0, 4_000_000.0, 2.25e6),
+                ("wukong", "chain", 1_000_000.0, 3_000_000.0, 2.5e6),
+                ("dask125", "fanout", 50_000.0, 300_000.0, 8.0e5),
+            ],
+        );
+        let d = diff_benches(&b, &c).unwrap();
+        assert!(!d.passed());
+        assert_eq!(d.failures.len(), 1);
+        assert!(d.failures[0].contains("wukong fanout"), "{}", d.failures[0]);
+        assert!(d.failures[0].contains("events_per_sec"), "{}", d.failures[0]);
+    }
+
+    #[test]
+    fn superlinear_event_growth_fails_even_when_fast() {
+        let b = fixture(false, BASE);
+        // Same task count, 2x the events, and *faster* wall-clock — the
+        // machine-independent check still catches it.
+        let c = fixture(
+            false,
+            &[
+                ("wukong", "fanout", 1_000_000.0, 8_000_000.0, 9.0e6),
+                ("wukong", "chain", 1_000_000.0, 3_000_000.0, 2.5e6),
+                ("dask125", "fanout", 50_000.0, 300_000.0, 8.0e5),
+            ],
+        );
+        let d = diff_benches(&b, &c).unwrap();
+        assert!(!d.passed());
+        assert_eq!(d.failures.len(), 1);
+        assert!(d.failures[0].contains("sim_events"), "{}", d.failures[0]);
+        assert!(d.failures[0].contains("superlinear"), "{}", d.failures[0]);
+    }
+
+    #[test]
+    fn linear_scale_up_passes_the_growth_check() {
+        let b = fixture(false, BASE);
+        // 10x the tasks, 10x the events: linear, allowed.
+        let c = fixture(
+            false,
+            &[
+                ("wukong", "fanout", 10_000_000.0, 40_000_000.0, 3.0e6),
+                ("wukong", "chain", 1_000_000.0, 3_000_000.0, 2.5e6),
+                ("dask125", "fanout", 50_000.0, 300_000.0, 8.0e5),
+            ],
+        );
+        assert!(diff_benches(&b, &c).unwrap().passed());
+    }
+
+    #[test]
+    fn missing_engine_row_fails() {
+        let b = fixture(false, BASE);
+        let c = fixture(
+            false,
+            &[
+                ("wukong", "fanout", 1_000_000.0, 4_000_000.0, 3.0e6),
+                ("wukong", "chain", 1_000_000.0, 3_000_000.0, 2.5e6),
+            ],
+        );
+        let d = diff_benches(&b, &c).unwrap();
+        assert!(!d.passed());
+        assert_eq!(d.failures.len(), 1);
+        assert!(d.failures[0].contains("dask125 fanout"), "{}", d.failures[0]);
+        assert!(d.failures[0].contains("missing"), "{}", d.failures[0]);
+    }
+
+    #[test]
+    fn extra_current_rows_are_informational_only() {
+        let b = fixture(false, &BASE[..2]);
+        let c = fixture(false, BASE);
+        let d = diff_benches(&b, &c).unwrap();
+        assert!(d.passed());
+        assert!(d
+            .lines
+            .iter()
+            .any(|l| l.contains("dask125 fanout") && l.contains("skipped")));
+    }
+
+    #[test]
+    fn schema_mismatch_is_a_hard_error() {
+        let good = fixture(false, BASE);
+        // Wrong "bench" marker.
+        let wrong = good.replace("wukong-sim-hotpath", "other-bench");
+        let err = diff_benches(&wrong, &good).unwrap_err();
+        assert!(err.contains("baseline"), "{err}");
+        assert!(err.contains("wukong-sim-hotpath"), "{err}");
+        // Not JSON at all.
+        let err = diff_benches(&good, "not json {").unwrap_err();
+        assert!(err.contains("current"), "{err}");
+        // Missing "records".
+        let err =
+            diff_benches(&good, r#"{"bench":"wukong-sim-hotpath","quick":false}"#)
+                .unwrap_err();
+        assert!(err.contains("\"records\""), "{err}");
+    }
+
+    #[test]
+    fn missing_record_field_names_the_key() {
+        let good = fixture(false, BASE);
+        let broken = r#"{"bench":"wukong-sim-hotpath","quick":false,
+            "records":[{"engine":"wukong","workload":"fanout",
+            "tasks":100,"events_per_sec":1.0}]}"#;
+        let err = diff_benches(&good, broken).unwrap_err();
+        assert!(err.contains("\"sim_events\""), "{err}");
+        assert!(err.contains("records[0]"), "{err}");
+    }
+
+    #[test]
+    fn quick_flag_mismatch_is_a_hard_error() {
+        let b = fixture(false, BASE);
+        let c = fixture(true, BASE);
+        let err = diff_benches(&b, &c).unwrap_err();
+        assert!(err.contains("quick-mode mismatch"), "{err}");
+    }
+}

@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 
 /// Options that take a value (everything else after `--` is a flag).
 pub const VALUED: &[&str] =
-    &["config", "runs", "seed", "out", "engine", "threads"];
+    &["config", "runs", "seed", "out", "engine", "threads", "diff"];
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -108,12 +108,20 @@ USAGE:
                                                        scale corpus tier; exits non-zero on
                                                        any violation
   wukong bench [--quick] [--engine a,b,...] [--seed S] [--out FILE]
+               [--diff BASELINE.json]
                                                        million-task hot-path benchmark: sweeps
                                                        the sim engines over fan-out/chain/TSQR
-                                                       DAGs, reports wall-ms, events/sec and
+                                                       DAGs plus the multi-tenant jobstream
+                                                       tier, reports wall-ms, events/sec and
                                                        peak pending-event depth, and writes
-                                                       BENCH_PR2.json (the perf-trajectory
-                                                       point + regression baseline)
+                                                       BENCH_<point>.json (the perf-trajectory
+                                                       point + regression baseline); --diff
+                                                       compares the fresh sweep against a
+                                                       baseline BENCH_*.json and exits non-zero
+                                                       on a >20% events/sec drop or superlinear
+                                                       sim_events growth per (engine, workload)
+                                                       row (CI runs the quick sweep through
+                                                       this gate every push)
   wukong serve [--quick] [--threads N] [--out FILE] [--set a.b=c ...]
                                                        multi-tenant job-stream serving: a
                                                        Poisson/trace stream of DAG jobs from
@@ -144,6 +152,7 @@ OPTIONS:
   --seed <s>        base RNG seed
   --threads <n>     worker threads for figure/verify sweeps (0 = auto)
   --out <file>      output path (bench JSON)
+  --diff <file>     baseline BENCH_*.json to gate against (bench)
   --quick           shrunk problem sizes (tests/smoke/bench)
   --large           scale-tier corpus (verify)
   --faults          sweep the fault axis (verify; see faults.p_fail /
@@ -175,6 +184,13 @@ CONFIG KEYS (selection; any key accepts --set):
                                           (tenant i weighs 1 + skew*i)
   event_budget                            sim event ceiling (0 = none;
                                           verify always sets a watchdog)
+  sim.calendar                            event-calendar structure:
+                                          bucket (default) | heap; both
+                                          produce byte-identical runs
+  sim.bucket_width_us                     pin the bucket width in sim
+                                          microseconds (0 = auto-size
+                                          from the observed event-time
+                                          spread; ignored by heap)
 ";
 
 #[cfg(test)]

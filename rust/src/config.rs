@@ -11,7 +11,7 @@ use std::path::Path;
 
 use crate::platform::faults::{FaultPlan, ShardCrashPlan};
 use crate::serving::{ArrivalMode, ArrivalPlan, FairnessPolicy, TenantPlan};
-use crate::sim::{secs, Time};
+use crate::sim::{secs, CalendarKind, Sim, Time};
 
 /// AWS-Lambda-like platform model parameters.
 #[derive(Debug, Clone, Copy)]
@@ -288,6 +288,26 @@ impl Default for ComputeConfig {
     }
 }
 
+/// Event-calendar selection for every `Sim<E>` a run constructs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimConfig {
+    /// Priority structure: bucketed calendar queue (default) or the
+    /// PR-2 binary heap (the differential reference — both produce
+    /// bit-identical traces, see `rust/tests/calendar.rs`).
+    pub calendar: CalendarKind,
+    /// Pinned bucket width in µs for the bucket calendar; 0 (default)
+    /// auto-sizes the width from the observed event-time spread.
+    pub bucket_width_us: u64,
+}
+
+impl SimConfig {
+    /// Construct the event calendar this config selects — the per-run
+    /// entry point every engine uses in place of `Sim::new()`.
+    pub fn build<E>(&self) -> Sim<E> {
+        Sim::with_calendar(self.calendar, self.bucket_width_us)
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -314,6 +334,9 @@ pub struct Config {
     /// Tenant population + fairness policy for the serving layer; like
     /// `arrival`, invisible outside `wukong serve`/`verify --serving`.
     pub tenants: TenantPlan,
+    /// Event-calendar selection (priority structure + bucket width);
+    /// purely structural — any setting yields bit-identical traces.
+    pub sim: SimConfig,
     /// Watchdog ceiling on processed DES events per run; 0 = unlimited.
     /// An engine that exceeds it panics (caught by `wukong verify` as a
     /// violation) instead of livelocking CI.
@@ -336,6 +359,7 @@ impl Default for Config {
             crashes: ShardCrashPlan::default(),
             arrival: ArrivalPlan::default(),
             tenants: TenantPlan::default(),
+            sim: SimConfig::default(),
             event_budget: 0,
             seed: 42,
             runs: 3,
@@ -468,6 +492,20 @@ impl Config {
             }
             "tenants.weight_skew" => {
                 self.tenants.weight_skew = nonneg(path, f()?)?
+            }
+            "sim.calendar" => {
+                self.sim.calendar = match value {
+                    "bucket" => CalendarKind::Bucket,
+                    "heap" => CalendarKind::Heap,
+                    other => {
+                        return Err(format!(
+                            "unknown sim.calendar {other} (expected bucket | heap)"
+                        ))
+                    }
+                }
+            }
+            "sim.bucket_width_us" => {
+                self.sim.bucket_width_us = nonneg(path, f()?)? as u64
             }
             "event_budget" => self.event_budget = f()? as u64,
             other => return Err(format!("unknown config key {other:?}")),
@@ -664,6 +702,37 @@ mod tests {
         // Boundary values are fine.
         c.set("faults.p_fail", "1").unwrap();
         c.set("crashes.p_crash", "0").unwrap();
+    }
+
+    #[test]
+    fn sim_calendar_keys_work() {
+        let mut c = Config::default();
+        assert_eq!(c.sim.calendar, CalendarKind::Bucket);
+        assert_eq!(c.sim.bucket_width_us, 0);
+        c.set("sim.calendar", "heap").unwrap();
+        c.set("sim.bucket_width_us", "128").unwrap();
+        assert_eq!(c.sim.calendar, CalendarKind::Heap);
+        assert_eq!(c.sim.bucket_width_us, 128);
+        c.set("sim.calendar", "bucket").unwrap();
+        assert_eq!(c.sim.calendar, CalendarKind::Bucket);
+    }
+
+    #[test]
+    fn bad_sim_calendar_values_rejected_at_parse_time() {
+        let mut c = Config::default();
+        let err = c.set("sim.calendar", "fibheap").unwrap_err();
+        assert!(
+            err.contains("sim.calendar") && err.contains("fibheap"),
+            "{err}"
+        );
+        let err = c.set("sim.bucket_width_us", "-5").unwrap_err();
+        assert!(
+            err.contains("sim.bucket_width_us")
+                && err.contains("non-negative"),
+            "{err}"
+        );
+        // Rejected overrides leave the config untouched.
+        assert_eq!(c.sim, SimConfig::default());
     }
 
     #[test]

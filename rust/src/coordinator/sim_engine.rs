@@ -24,7 +24,9 @@ use crate::dag::{Dag, TaskId, TaskNode};
 use crate::metrics::{RunMetrics, TaskOutcome};
 use crate::platform::faults::{propagate_failures, FaultPlan, FaultStream};
 use crate::platform::LambdaService;
-use crate::sim::{secs, to_secs, FifoResource, Handler, Sim, Time};
+use crate::sim::{
+    secs, to_secs, FifoResource, Handler, Sim, TaskScratch, Time,
+};
 use crate::storage::{InvokerPool, KvsModel, MdsModel};
 use crate::util::Rng;
 
@@ -84,14 +86,12 @@ struct World<'a> {
     lambda: LambdaService,
     pool: InvokerPool,
     execs: Vec<Exec>,
-    claimed: Vec<bool>,
-    /// Per-task execution counters (reported as `metrics.per_task_exec`;
-    /// the engine fail-fasts on a second execution, and `wukong verify`
-    /// independently asserts every entry is exactly 1).
-    executed: Vec<u32>,
-    /// Time at which a task's output becomes readable in the KVS.
-    avail_at: Vec<Time>,
-    stored: Vec<bool>,
+    /// Per-task scratch arena (claimed/stored flags, exec + attempt
+    /// counters, output-availability clock) — one allocation instead of
+    /// the five `Vec`s this engine carried before PR 9. The engine
+    /// fail-fasts on a second execution of any task, and `wukong
+    /// verify` independently asserts every `executed` entry is 1.
+    scratch: TaskScratch,
     metrics: RunMetrics,
     sinks_done: usize,
     n_sinks: usize,
@@ -99,8 +99,6 @@ struct World<'a> {
     /// Dedicated fault RNG stream: failure draws never touch the main
     /// run RNG, so `p_fail = 0` runs are bit-identical to fault-free.
     faults: FaultStream,
-    /// Per-task attempt counters: failed begins + the effective run.
-    attempts: Vec<u32>,
     /// Tasks whose own retry budget was exhausted (§3.6 failure report);
     /// everything downstream cascades to `Failed` at finalize.
     direct_failed: Vec<TaskId>,
@@ -209,7 +207,7 @@ fn begin(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
     if w.faults.attempt_fails() {
         let attempt = w.execs[eid].attempt;
         let task = w.execs[eid].first_task;
-        w.attempts[task as usize] += 1;
+        w.scratch.slot_mut(task).attempts += 1;
         let inline: Vec<TaskId> = w.execs[eid].cache.iter().copied().collect();
         end_exec(w, sim, eid);
         if w.faults.plan().can_retry(attempt) {
@@ -238,7 +236,7 @@ fn process(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
         return;
     };
     w.execs[eid].idle = false;
-    w.attempts[t as usize] += 1;
+    w.scratch.slot_mut(t).attempts += 1;
 
     // Fetch phase: sequential reads of non-resident parent outputs.
     // (`dag` is an independent shared borrow: the CSR parent slice is
@@ -250,7 +248,7 @@ fn process(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
             continue;
         }
         let bytes = dag.task(p).out_bytes;
-        let floor = w.avail_at[p as usize];
+        let floor = w.scratch.slot(p).avail_at;
         cursor = w.kvs_read(eid, cursor, TaskNode::obj_key(p), bytes, floor);
         let sd = w.serde_time(bytes);
         w.metrics.breakdown.serde_s += to_secs(sd);
@@ -274,8 +272,8 @@ fn process(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
 }
 
 fn finish_task(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
-    w.executed[t as usize] += 1;
-    assert!(w.executed[t as usize] == 1, "task {t} executed twice");
+    w.scratch.slot_mut(t).executed += 1;
+    assert!(w.scratch.slot(t).executed == 1, "task {t} executed twice");
     w.metrics.tasks_executed += 1;
     w.execs[eid].cache.insert(t);
 
@@ -290,8 +288,9 @@ fn finish_task(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
 fn publish_final(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
     let bytes = w.node(t).out_bytes;
     let end = w.kvs_write(eid, sim.now(), TaskNode::obj_key(t), bytes);
-    w.avail_at[t as usize] = end;
-    w.stored[t as usize] = true;
+    let slot = w.scratch.slot_mut(t);
+    slot.avail_at = end;
+    slot.set_stored();
     let (_, msg_end) = w.mds.incr(end, 0xF1AA_0000_0000_0000 | t as u64);
     w.metrics.breakdown.publish_s += to_secs(msg_end.saturating_sub(end));
     sim.at(msg_end, Ev::SinkPublished);
@@ -316,12 +315,12 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
         // here; for unready fan-ins, the elected holder watches (delayed
         // I/O) while every other parent stores + increments immediately.
         for &c in children {
-            if w.claimed[c as usize] {
+            if w.scratch.slot(c).claimed() {
                 continue;
             }
             let indeg = dag.indegree(c);
             if indeg <= 1 {
-                w.claimed[c as usize] = true;
+                w.scratch.slot_mut(c).set_claimed();
                 ready.push(c);
             } else {
                 let (avail, t_mds) = w.mds.read(cursor, c as u64);
@@ -329,7 +328,7 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
                     to_secs(t_mds.saturating_sub(cursor));
                 cursor = t_mds;
                 if holdout_ready(avail, indeg) {
-                    w.claimed[c as usize] = true;
+                    w.scratch.slot_mut(c).set_claimed();
                     ready.push(c);
                 } else if w.knobs.use_delayed_io && should_hold(dag, t, c) {
                     watch.push(c);
@@ -339,22 +338,23 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
             }
         }
         if !store_targets.is_empty() {
-            if !w.stored[t as usize] {
+            if !w.scratch.slot(t).stored() {
                 let end =
                     w.kvs_write(eid, cursor, TaskNode::obj_key(t), out_bytes);
-                w.avail_at[t as usize] = end;
-                w.stored[t as usize] = true;
+                let slot = w.scratch.slot_mut(t);
+                slot.avail_at = end;
+                slot.set_stored();
                 cursor = end;
             }
             for c in store_targets.drain(..) {
-                if w.claimed[c as usize] {
+                if w.scratch.slot(c).claimed() {
                     continue;
                 }
                 let indeg = dag.indegree(c);
                 let (new, t_mds) = w.mds.incr(cursor, c as u64);
                 cursor = t_mds;
                 if fanin_ready(new, indeg) {
-                    w.claimed[c as usize] = true;
+                    w.scratch.slot_mut(c).set_claimed();
                     ready.push(c);
                 }
             }
@@ -369,20 +369,20 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
         // (`avail_at`), modeling the real system's blocking poll reads.
         let mut any_unready = false;
         for &c in children {
-            if w.claimed[c as usize] {
+            if w.scratch.slot(c).claimed() {
                 continue;
             }
             let indeg = dag.indegree(c);
             if indeg <= 1 {
-                w.claimed[c as usize] = true;
+                w.scratch.slot_mut(c).set_claimed();
                 ready.push(c);
             } else {
                 let (new, t_mds) = w.mds.incr(cursor, c as u64);
                 w.metrics.breakdown.publish_s +=
                     to_secs(t_mds.saturating_sub(cursor));
                 cursor = t_mds;
-                if fanin_ready(new, indeg) && !w.claimed[c as usize] {
-                    w.claimed[c as usize] = true;
+                if fanin_ready(new, indeg) && !w.scratch.slot(c).claimed() {
+                    w.scratch.slot_mut(c).set_claimed();
                     ready.push(c);
                 } else {
                     any_unready = true; // a later parent will claim it
@@ -391,11 +391,12 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
         }
         let inline_ok = out_bytes <= w.knobs.arg_inline_max;
         if (any_unready || (ready.len() > 1 && !inline_ok))
-            && !w.stored[t as usize]
+            && !w.scratch.slot(t).stored()
         {
             let end = w.kvs_write(eid, cursor, TaskNode::obj_key(t), out_bytes);
-            w.avail_at[t as usize] = end;
-            w.stored[t as usize] = true;
+            let slot = w.scratch.slot_mut(t);
+            slot.avail_at = end;
+            slot.set_stored();
             cursor = end;
         }
     }
@@ -414,10 +415,11 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
     } else if !rest.is_empty() {
         let inline_ok = out_bytes <= w.knobs.arg_inline_max;
         let inline: Vec<TaskId> = if inline_ok { vec![t] } else { vec![] };
-        if !inline_ok && !w.stored[t as usize] {
+        if !inline_ok && !w.scratch.slot(t).stored() {
             let end = w.kvs_write(eid, cursor, TaskNode::obj_key(t), out_bytes);
-            w.avail_at[t as usize] = end;
-            w.stored[t as usize] = true;
+            let slot = w.scratch.slot_mut(t);
+            slot.avail_at = end;
+            slot.set_stored();
             cursor = end;
         }
         if rest.len() >= w.knobs.fanout_delegation_threshold.max(1) {
@@ -477,7 +479,7 @@ fn recheck(
     c: TaskId,
     retries_left: u32,
 ) {
-    if w.claimed[c as usize] {
+    if w.scratch.slot(c).claimed() {
         resolve_hold(w, sim, eid);
         return;
     }
@@ -485,7 +487,7 @@ fn recheck(
     let (avail, t_mds) = w.mds.read(sim.now(), c as u64);
     w.metrics.breakdown.publish_s += to_secs(t_mds.saturating_sub(sim.now()));
     if holdout_ready(avail, indeg) {
-        w.claimed[c as usize] = true;
+        w.scratch.slot_mut(c).set_claimed();
         w.execs[eid].queue.push_back(c);
         resolve_hold(w, sim, eid);
     } else if retries_left > 0 {
@@ -502,16 +504,17 @@ fn recheck(
     } else {
         // Give up: store the object, increment, maybe still claim.
         let mut cursor = t_mds;
-        if !w.stored[t as usize] {
+        if !w.scratch.slot(t).stored() {
             let end = w.kvs_write(eid, cursor, TaskNode::obj_key(t), w.node(t).out_bytes);
-            w.avail_at[t as usize] = end;
-            w.stored[t as usize] = true;
+            let slot = w.scratch.slot_mut(t);
+            slot.avail_at = end;
+            slot.set_stored();
             cursor = end;
         }
         let (new, t2) = w.mds.incr(cursor, c as u64);
-        let final_claim = fanin_ready(new, indeg) && !w.claimed[c as usize];
+        let final_claim = fanin_ready(new, indeg) && !w.scratch.slot(c).claimed();
         if final_claim {
-            w.claimed[c as usize] = true;
+            w.scratch.slot_mut(c).set_claimed();
             w.execs[eid].queue.push_back(c);
         }
         sim.at(t2, Ev::ResolveHold(eid));
@@ -568,20 +571,16 @@ pub fn run_wukong_faulty(
         lambda: LambdaService::new(cfg.lambda, rng.fork(1)),
         pool: InvokerPool::new(cfg.wukong.n_invokers),
         execs: Vec::new(),
-        claimed: vec![false; n],
-        executed: vec![0; n],
-        avail_at: vec![0; n],
-        stored: vec![false; n],
+        scratch: TaskScratch::new(n),
         metrics: RunMetrics::default(),
         sinks_done: 0,
         n_sinks,
         finish: None,
         faults: FaultStream::for_run(faults, seed),
-        attempts: vec![0; n],
         direct_failed: Vec::new(),
         cfg,
     };
-    let mut sim: Sim<Ev> = Sim::new();
+    let mut sim: Sim<Ev> = cfg.sim.build();
     sim.set_event_budget(cfg.event_budget);
 
     // Initial-Executor Invokers: the static scheduler's invoker pool
@@ -593,7 +592,7 @@ pub fn run_wukong_faulty(
     let ends = w.pool.invoke_batch(0, schedules.len(), per, 0);
     for (sched, end) in schedules.iter().zip(ends) {
         let leaf = sched.leaf;
-        w.claimed[leaf as usize] = true;
+        w.scratch.slot_mut(leaf).set_claimed();
         let inv = w.lambda.admit(end);
         spawn(&mut w, &mut sim, leaf, vec![], inv.start_at, 0);
     }
@@ -602,14 +601,14 @@ pub fn run_wukong_faulty(
     // Assemble metrics.
     let makespan = to_secs(w.finish.unwrap_or(sim.now()));
     w.metrics.makespan_s = makespan;
-    w.metrics.per_task_exec = w.executed.clone();
+    w.metrics.per_task_exec = w.scratch.executed_vec();
     // Terminal outcomes: directly-failed tasks plus their reachable sets
     // resolve to Failed; everything else completed (cross-checked against
     // per_task_exec by `wukong verify --faults`).
     let mut outcome = vec![TaskOutcome::Completed; n];
     w.metrics.failed_tasks =
         propagate_failures(dag, &w.direct_failed, &mut outcome);
-    w.metrics.per_task_attempts = w.attempts.clone();
+    w.metrics.per_task_attempts = w.scratch.attempts_vec();
     w.metrics.per_task_outcome = outcome;
     w.metrics.kvs = w.kvs.metrics;
     w.metrics.durability = w.kvs.durability.merged(w.mds.durability());

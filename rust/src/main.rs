@@ -262,13 +262,29 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                 ]);
             }
             println!("{}", t.render());
+            let json = to_json(&records, &opts);
             let path = args
                 .opt("out")
                 .map(String::from)
                 .unwrap_or_else(wukong::bench::default_out_path);
-            std::fs::write(&path, to_json(&records, &opts))
-                .map_err(|e| format!("{path}: {e}"))?;
+            std::fs::write(&path, &json).map_err(|e| format!("{path}: {e}"))?;
             println!("wrote {path}");
+            if let Some(baseline_path) = args.opt("diff") {
+                let baseline = std::fs::read_to_string(baseline_path)
+                    .map_err(|e| format!("{baseline_path}: {e}"))?;
+                let diff = wukong::bench::diff::diff_benches(&baseline, &json)?;
+                for line in &diff.lines {
+                    println!("diff: {line}");
+                }
+                if !diff.passed() {
+                    return Err(format!(
+                        "bench regression gate: {} row(s) failed vs \
+                         {baseline_path}",
+                        diff.failures.len()
+                    ));
+                }
+                println!("bench diff vs {baseline_path}: ok");
+            }
             Ok(())
         }
         "serve" => {

@@ -253,7 +253,7 @@ pub fn run_serving(cfg: &Config, seed: u64, threads: usize) -> ServingReport {
         seq: 0,
     };
 
-    let mut sim: Sim<ServeEv> = Sim::new();
+    let mut sim: Sim<ServeEv> = cfg.sim.build();
     for (j, &at) in arrivals.iter().enumerate() {
         sim.at(at, ServeEv::Arrive(j));
     }

@@ -1,0 +1,438 @@
+//! Priority structures behind the event calendar.
+//!
+//! Two interchangeable implementations of the same total order —
+//! earliest `(t, seq)` pops first, so FIFO within a timestamp:
+//!
+//! * [`HeapCalendar`]: the PR-2 binary heap. O(log n) per op, kept as
+//!   the reference half of the differential calendar test suite and
+//!   selectable at runtime via `--set sim.calendar=heap`.
+//! * [`BucketCalendar`]: a bucketed calendar queue (Brown '88 shape).
+//!   Events inside the current "year" window land in per-bucket
+//!   min-heaps indexed by `(t - year_start) / width`; events beyond it
+//!   wait in an overflow heap. Steady-state enqueue/dequeue touch one
+//!   small bucket instead of one log-depth heap. The year geometry
+//!   (bucket count + width) is re-planned deterministically from the
+//!   observed backlog whenever the window drains or overloads, so the
+//!   structure adapts to clustered, uniform and far-future schedules
+//!   without tuning. `sim.bucket_width_us` pins the width (0 = auto).
+//!
+//! Because `seq` is unique per entry, `(t, seq)` is a *total* order:
+//! any structure that pops its global minimum reproduces the heap's pop
+//! sequence exactly. The bucket queue pops the minimum because bucket
+//! time ranges are disjoint and scanned in order, every in-window
+//! event precedes every overflow event, and ties inside one bucket are
+//! resolved by the same `Entry` ordering the heap uses. That argument
+//! is what keeps every byte-identical determinism gate intact; the
+//! differential suite in `rust/tests/calendar.rs` checks it anyway.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::Time;
+
+/// Which calendar implementation a `Sim` run uses.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum CalendarKind {
+    /// Bucketed calendar queue (the default since PR 9).
+    #[default]
+    Bucket,
+    /// Binary heap (the PR-2 structure; differential reference).
+    Heap,
+}
+
+/// One scheduled event.
+pub struct Entry<E> {
+    pub t: Time,
+    pub seq: u64,
+    pub ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .t
+            .cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The calendar contract `Sim<E>` runs on. `next_time` takes `&mut`
+/// because the bucket queue may re-anchor its year window to find the
+/// minimum (a structural but order-preserving change).
+pub trait Calendar<E> {
+    /// Insert an event. `seq` must be unique (the tie-breaker).
+    fn push(&mut self, t: Time, seq: u64, ev: E);
+    /// Remove and return the earliest `(t, seq)` event.
+    fn pop(&mut self) -> Option<Entry<E>>;
+    /// Timestamp of the earliest pending event.
+    fn next_time(&mut self) -> Option<Time>;
+    /// Pending event count.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The PR-2 binary-heap calendar (reference implementation).
+#[derive(Default)]
+pub struct HeapCalendar<E> {
+    heap: BinaryHeap<Entry<E>>,
+}
+
+impl<E> HeapCalendar<E> {
+    pub fn new() -> HeapCalendar<E> {
+        HeapCalendar {
+            heap: BinaryHeap::new(),
+        }
+    }
+}
+
+impl<E> Calendar<E> for HeapCalendar<E> {
+    fn push(&mut self, t: Time, seq: u64, ev: E) {
+        self.heap.push(Entry { t, seq, ev });
+    }
+
+    fn pop(&mut self) -> Option<Entry<E>> {
+        self.heap.pop()
+    }
+
+    fn next_time(&mut self) -> Option<Time> {
+        self.heap.peek().map(|e| e.t)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Smallest year window, in buckets.
+const MIN_BUCKETS: usize = 8;
+/// Largest year window, in buckets (bounds rebuild cost and memory).
+const MAX_BUCKETS: usize = 1 << 16;
+/// Grow the window when the in-year population exceeds this many
+/// events per bucket on average.
+const OVERLOAD_FACTOR: usize = 8;
+
+/// Bucketed calendar queue. See the module docs for the ordering
+/// argument; every mutation below preserves three invariants:
+///
+/// 1. every in-year entry `e` satisfies
+///    `(e.t - year_start) / width == its bucket index`,
+/// 2. every overflow entry maps past the last bucket,
+/// 3. no non-empty bucket lies before `cursor`.
+pub struct BucketCalendar<E> {
+    buckets: Vec<BinaryHeap<Entry<E>>>,
+    /// Bucket width in µs (≥ 1).
+    width: Time,
+    /// `Some` pins the width (`sim.bucket_width_us`); `None` = auto.
+    fixed_width: Option<Time>,
+    /// Virtual time mapped to bucket 0.
+    year_start: Time,
+    /// First bucket that may be non-empty.
+    cursor: usize,
+    /// Events mapping beyond the year window, pending redistribution.
+    overflow: BinaryHeap<Entry<E>>,
+    /// Total pending events (buckets + overflow).
+    len: usize,
+    /// Pending events inside the bucket window.
+    in_year: usize,
+    /// High-water mark of any pushed timestamp (width heuristic).
+    max_t: Time,
+}
+
+impl<E> BucketCalendar<E> {
+    /// `fixed_width`: `Some(w)` pins the bucket width to `w` µs
+    /// (clamped to ≥ 1); `None` auto-sizes it from the observed
+    /// event-time spread at each year re-plan.
+    pub fn new(fixed_width: Option<Time>) -> BucketCalendar<E> {
+        let fixed_width = fixed_width.map(|w| w.max(1));
+        BucketCalendar {
+            buckets: std::iter::repeat_with(BinaryHeap::new)
+                .take(MIN_BUCKETS)
+                .collect(),
+            width: fixed_width.unwrap_or(1),
+            fixed_width,
+            year_start: 0,
+            cursor: 0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+            in_year: 0,
+            max_t: 0,
+        }
+    }
+
+    /// Bucket index a timestamp maps to under the current geometry.
+    /// Indices past the bucket array mean "overflow"; callers must have
+    /// ensured `t >= year_start`.
+    #[inline]
+    fn index_of(&self, t: Time) -> usize {
+        debug_assert!(t >= self.year_start);
+        ((t - self.year_start) / self.width) as usize
+    }
+
+    /// Plan the year geometry for `n_pending` events starting at
+    /// `base`: bucket count tracks the population (≈ one event per
+    /// bucket), width tracks the live time span per event. Pure
+    /// function of observed state — no clocks, no randomness — so the
+    /// structure stays bit-deterministic.
+    fn plan_geometry(&self, base: Time, n_pending: usize) -> (usize, Time) {
+        let n_buckets = n_pending
+            .next_power_of_two()
+            .clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let width = match self.fixed_width {
+            Some(w) => w,
+            None => {
+                let span = self
+                    .max_t
+                    .saturating_sub(base)
+                    .saturating_add(1);
+                (span / n_pending.max(1) as Time).max(1)
+            }
+        };
+        (n_buckets, width)
+    }
+
+    /// Re-anchor the year at `base` with fresh geometry and re-place
+    /// every pending entry. O(len); amortized against the pushes that
+    /// triggered it.
+    fn rebuild(&mut self, base: Time, n_pending: usize) {
+        let mut all: Vec<Entry<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.extend(b.drain());
+        }
+        all.extend(self.overflow.drain());
+        let (n_buckets, width) = self.plan_geometry(base, n_pending);
+        self.buckets.clear();
+        self.buckets.resize_with(n_buckets, BinaryHeap::new);
+        self.width = width;
+        self.year_start = base;
+        self.cursor = 0;
+        self.in_year = 0;
+        for e in all {
+            let idx = self.index_of(e.t);
+            if idx < self.buckets.len() {
+                self.in_year += 1;
+                self.buckets[idx].push(e);
+            } else {
+                self.overflow.push(e);
+            }
+        }
+    }
+
+    /// All buckets drained but overflow holds events: start a new year
+    /// anchored at the overflow minimum. Guarantees progress — the
+    /// anchoring event always lands in bucket 0.
+    fn advance_year(&mut self) {
+        debug_assert!(self.in_year == 0 && !self.overflow.is_empty());
+        let base = self.overflow.peek().unwrap().t;
+        let n_pending = self.overflow.len();
+        self.rebuild(base, n_pending);
+    }
+}
+
+impl<E> Calendar<E> for BucketCalendar<E> {
+    fn push(&mut self, t: Time, seq: u64, ev: E) {
+        self.len += 1;
+        if t > self.max_t {
+            self.max_t = t;
+        }
+        if t < self.year_start {
+            // Behind the window (a driver scheduling into the past of
+            // an advanced year): re-anchor everything on the new
+            // minimum. `Sim::at` clamps to `now` so engines never take
+            // this path, but the raw structure stays correct for the
+            // differential suite's arbitrary interleavings.
+            self.rebuild(t, self.len);
+        }
+        let idx = self.index_of(t);
+        if idx < self.buckets.len() {
+            self.buckets[idx].push(Entry { t, seq, ev });
+            self.in_year += 1;
+            if idx < self.cursor {
+                self.cursor = idx;
+            }
+            if self.in_year > self.buckets.len() * OVERLOAD_FACTOR
+                && self.buckets.len() < MAX_BUCKETS
+            {
+                // Window overloaded: grow in place. Anchor at the
+                // cursor's lower bound, which bounds every live entry
+                // from below (invariants 1–3); on overflow fall back
+                // to `year_start`, which always does.
+                let base = self
+                    .width
+                    .checked_mul(self.cursor as Time)
+                    .and_then(|off| self.year_start.checked_add(off))
+                    .unwrap_or(self.year_start);
+                self.rebuild(base, self.len);
+            }
+        } else {
+            self.overflow.push(Entry { t, seq, ev });
+        }
+    }
+
+    fn pop(&mut self) -> Option<Entry<E>> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            while self.cursor < self.buckets.len()
+                && self.buckets[self.cursor].is_empty()
+            {
+                self.cursor += 1;
+            }
+            if self.cursor < self.buckets.len() {
+                let e = self.buckets[self.cursor].pop().unwrap();
+                self.len -= 1;
+                self.in_year -= 1;
+                return Some(e);
+            }
+            self.advance_year();
+        }
+    }
+
+    fn next_time(&mut self) -> Option<Time> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            while self.cursor < self.buckets.len()
+                && self.buckets[self.cursor].is_empty()
+            {
+                self.cursor += 1;
+            }
+            if self.cursor < self.buckets.len() {
+                return Some(self.buckets[self.cursor].peek().unwrap().t);
+            }
+            self.advance_year();
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(c: &mut impl Calendar<u64>) -> Vec<(Time, u64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = c.pop() {
+            out.push((e.t, e.seq, e.ev));
+        }
+        out
+    }
+
+    #[test]
+    fn bucket_pops_in_time_then_seq_order() {
+        let mut c: BucketCalendar<u64> = BucketCalendar::new(None);
+        for (seq, &t) in [30u64, 10, 20, 10, 10, 500, 0].iter().enumerate() {
+            c.push(t, seq as u64, seq as u64);
+        }
+        let order = drain(&mut c);
+        assert_eq!(
+            order,
+            vec![
+                (0, 6, 6),
+                (10, 1, 1),
+                (10, 3, 3),
+                (10, 4, 4),
+                (20, 2, 2),
+                (30, 0, 0),
+                (500, 5, 5),
+            ]
+        );
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn bucket_matches_heap_on_far_future_overflow() {
+        let mut b: BucketCalendar<u64> = BucketCalendar::new(None);
+        let mut h: HeapCalendar<u64> = HeapCalendar::new();
+        // Clusters separated by huge gaps force overflow + re-anchoring.
+        let mut seq = 0u64;
+        for cluster in 0..5u64 {
+            let base = cluster * 1_000_000_000_000;
+            for i in 0..100u64 {
+                let t = base + (i * 37) % 1000;
+                b.push(t, seq, seq);
+                h.push(t, seq, seq);
+                seq += 1;
+            }
+        }
+        assert_eq!(drain(&mut b), drain(&mut h));
+    }
+
+    #[test]
+    fn bucket_handles_pushes_behind_the_window() {
+        let mut c: BucketCalendar<u64> = BucketCalendar::new(None);
+        c.push(1_000_000, 0, 0);
+        assert_eq!(c.pop().map(|e| e.t), Some(1_000_000));
+        // The year is now anchored past 0; push behind it.
+        c.push(5, 1, 1);
+        c.push(1_000_001, 2, 2);
+        assert_eq!(c.pop().map(|e| (e.t, e.seq)), Some((5, 1)));
+        assert_eq!(c.pop().map(|e| (e.t, e.seq)), Some((1_000_001, 2)));
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn fixed_width_pins_bucket_width() {
+        let mut c: BucketCalendar<u64> = BucketCalendar::new(Some(64));
+        for seq in 0..1000u64 {
+            c.push(seq * 13, seq, seq);
+        }
+        assert_eq!(c.width, 64);
+        let popped = drain(&mut c);
+        assert_eq!(popped.len(), 1000);
+        assert!(popped.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(c.width, 64, "re-plans keep the pinned width");
+    }
+
+    #[test]
+    fn zero_fixed_width_is_clamped_to_one() {
+        let c: BucketCalendar<u64> = BucketCalendar::new(Some(0));
+        assert_eq!(c.width, 1);
+    }
+
+    #[test]
+    fn overload_grows_the_window() {
+        let mut c: BucketCalendar<u64> = BucketCalendar::new(None);
+        // Dense same-window pushes trip the OVERLOAD_FACTOR rebuild.
+        for seq in 0..10_000u64 {
+            c.push(seq % 7, seq, seq);
+        }
+        assert!(c.buckets.len() > MIN_BUCKETS);
+        assert_eq!(c.len(), 10_000);
+        let popped = drain(&mut c);
+        assert_eq!(popped.len(), 10_000);
+        assert!(popped.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn len_counts_buckets_and_overflow() {
+        let mut c: BucketCalendar<u64> = BucketCalendar::new(None);
+        assert!(c.is_empty());
+        c.push(1, 0, 0);
+        c.push(u64::MAX - 1, 1, 1);
+        assert_eq!(c.len(), 2);
+        c.pop();
+        assert_eq!(c.len(), 1);
+        c.pop();
+        assert!(c.is_empty());
+        assert!(c.pop().is_none());
+    }
+}

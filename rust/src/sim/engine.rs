@@ -8,10 +8,17 @@
 //! below the million-events/sec regimes `wukong bench` sweeps. Ties in
 //! time are broken by insertion order (monotone sequence number), which
 //! keeps runs bit-reproducible under `wukong verify`.
+//!
+//! Since PR 9 the priority structure underneath is pluggable
+//! ([`CalendarKind`], see `sim::calendar`): the default is a bucketed
+//! calendar queue with O(1) steady-state enqueue/dequeue; the PR-2
+//! binary heap remains selectable (`--set sim.calendar=heap`) as the
+//! differential reference. The `seq` tie-breaker lives *here*, not in
+//! the calendar, so both structures see the identical total order.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
+use super::calendar::{
+    BucketCalendar, Calendar, CalendarKind, HeapCalendar,
+};
 use super::time::Time;
 
 /// Event dispatch: the world interprets each typed event, mutating
@@ -24,30 +31,41 @@ pub trait Handler {
     fn handle(&mut self, sim: &mut Sim<Self::Ev>, ev: Self::Ev);
 }
 
-struct Entry<E> {
-    t: Time,
-    seq: u64,
-    ev: E,
+/// Runtime-selected priority structure (enum dispatch keeps `Sim<E>`'s
+/// public type unchanged — no generics ripple through `Handler`).
+enum CalendarImpl<E> {
+    Heap(HeapCalendar<E>),
+    Bucket(BucketCalendar<E>),
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
+impl<E> CalendarImpl<E> {
+    fn push(&mut self, t: Time, seq: u64, ev: E) {
+        match self {
+            CalendarImpl::Heap(c) => c.push(t, seq, ev),
+            CalendarImpl::Bucket(c) => c.push(t, seq, ev),
+        }
     }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+
+    fn pop(&mut self) -> Option<(Time, E)> {
+        match self {
+            CalendarImpl::Heap(c) => c.pop(),
+            CalendarImpl::Bucket(c) => c.pop(),
+        }
+        .map(|e| (e.t, e.ev))
     }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
-        other
-            .t
-            .cmp(&self.t)
-            .then_with(|| other.seq.cmp(&self.seq))
+
+    fn next_time(&mut self) -> Option<Time> {
+        match self {
+            CalendarImpl::Heap(c) => c.next_time(),
+            CalendarImpl::Bucket(c) => c.next_time(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            CalendarImpl::Heap(c) => c.len(),
+            CalendarImpl::Bucket(c) => c.len(),
+        }
     }
 }
 
@@ -58,7 +76,7 @@ pub struct Sim<E> {
     processed: u64,
     peak_pending: usize,
     event_budget: u64,
-    heap: BinaryHeap<Entry<E>>,
+    cal: CalendarImpl<E>,
 }
 
 impl<E> Default for Sim<E> {
@@ -68,14 +86,32 @@ impl<E> Default for Sim<E> {
 }
 
 impl<E> Sim<E> {
+    /// Default calendar: bucketed queue, auto-sized bucket width.
     pub fn new() -> Sim<E> {
+        Self::with_calendar(CalendarKind::default(), 0)
+    }
+
+    /// Pick the priority structure explicitly. `bucket_width_us` pins
+    /// the bucket width (0 = auto-size; ignored by the heap). Engines
+    /// reach this through `Config::sim` (`SimConfig::build`).
+    pub fn with_calendar(kind: CalendarKind, bucket_width_us: Time) -> Sim<E> {
+        let cal = match kind {
+            CalendarKind::Heap => CalendarImpl::Heap(HeapCalendar::new()),
+            CalendarKind::Bucket => CalendarImpl::Bucket(BucketCalendar::new(
+                if bucket_width_us == 0 {
+                    None
+                } else {
+                    Some(bucket_width_us)
+                },
+            )),
+        };
         Sim {
             now: 0,
             seq: 0,
             processed: 0,
             peak_pending: 0,
             event_budget: 0,
-            heap: BinaryHeap::new(),
+            cal,
         }
     }
 
@@ -100,7 +136,7 @@ impl<E> Sim<E> {
 
     /// Pending event count.
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.cal.len()
     }
 
     /// High-water mark of the pending-event count (calendar depth):
@@ -114,9 +150,9 @@ impl<E> Sim<E> {
         let t = t.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { t, seq, ev });
-        if self.heap.len() > self.peak_pending {
-            self.peak_pending = self.heap.len();
+        self.cal.push(t, seq, ev);
+        if self.cal.len() > self.peak_pending {
+            self.peak_pending = self.cal.len();
         }
     }
 
@@ -138,12 +174,12 @@ impl<E> Sim<E> {
 
     /// Run until the calendar drains. Returns the final time.
     pub fn run<W: Handler<Ev = E>>(&mut self, world: &mut W) -> Time {
-        while let Some(e) = self.heap.pop() {
-            debug_assert!(e.t >= self.now, "time went backwards");
+        while let Some((t, ev)) = self.cal.pop() {
+            debug_assert!(t >= self.now, "time went backwards");
             self.charge_budget();
-            self.now = e.t;
+            self.now = t;
             self.processed += 1;
-            world.handle(self, e.ev);
+            world.handle(self, ev);
         }
         self.now
     }
@@ -156,15 +192,15 @@ impl<E> Sim<E> {
         world: &mut W,
         deadline: Time,
     ) -> Time {
-        while let Some(top) = self.heap.peek() {
-            if top.t > deadline {
+        while let Some(top) = self.cal.next_time() {
+            if top > deadline {
                 break;
             }
-            let e = self.heap.pop().unwrap();
+            let (t, ev) = self.cal.pop().unwrap();
             self.charge_budget();
-            self.now = e.t;
+            self.now = t;
             self.processed += 1;
-            world.handle(self, e.ev);
+            world.handle(self, ev);
         }
         self.now = self.now.max(deadline);
         self.now
@@ -207,58 +243,72 @@ mod tests {
         }
     }
 
+    /// Both calendar kinds, so every semantic test below pins the heap
+    /// and the bucket queue to identical behavior.
+    fn both() -> [Sim<Ev>; 2] {
+        [
+            Sim::with_calendar(CalendarKind::Bucket, 0),
+            Sim::with_calendar(CalendarKind::Heap, 0),
+        ]
+    }
+
     #[test]
     fn events_fire_in_time_order() {
-        let mut sim: Sim<Ev> = Sim::new();
-        let mut w = World::default();
-        sim.at(30, Ev::Log(3));
-        sim.at(10, Ev::Log(1));
-        sim.at(20, Ev::Log(2));
-        sim.run(&mut w);
-        assert_eq!(w.log, vec![(10, 1), (20, 2), (30, 3)]);
+        for mut sim in both() {
+            let mut w = World::default();
+            sim.at(30, Ev::Log(3));
+            sim.at(10, Ev::Log(1));
+            sim.at(20, Ev::Log(2));
+            sim.run(&mut w);
+            assert_eq!(w.log, vec![(10, 1), (20, 2), (30, 3)]);
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut sim: Sim<Ev> = Sim::new();
-        let mut w = World::default();
-        for i in 0..10 {
-            sim.at(5, Ev::Log(i));
+        for mut sim in both() {
+            let mut w = World::default();
+            for i in 0..10 {
+                sim.at(5, Ev::Log(i));
+            }
+            sim.run(&mut w);
+            let order: Vec<u32> = w.log.iter().map(|&(_, i)| i).collect();
+            assert_eq!(order, (0..10).collect::<Vec<_>>());
         }
-        sim.run(&mut w);
-        let order: Vec<u32> = w.log.iter().map(|&(_, i)| i).collect();
-        assert_eq!(order, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn events_can_schedule_events() {
-        let mut sim: Sim<Ev> = Sim::new();
-        let mut w = World::default();
-        sim.at(1, Ev::Chain);
-        let end = sim.run(&mut w);
-        assert_eq!(end, 10);
-        assert_eq!(w.log, vec![(10, 99)]);
+        for mut sim in both() {
+            let mut w = World::default();
+            sim.at(1, Ev::Chain);
+            let end = sim.run(&mut w);
+            assert_eq!(end, 10);
+            assert_eq!(w.log, vec![(10, 99)]);
+        }
     }
 
     #[test]
     fn past_times_clamp_to_now() {
-        let mut sim: Sim<Ev> = Sim::new();
-        let mut w = World::default();
-        sim.at(100, Ev::PastClamp);
-        sim.run(&mut w);
-        assert_eq!(w.log, vec![(100, 0), (100, 1)]);
+        for mut sim in both() {
+            let mut w = World::default();
+            sim.at(100, Ev::PastClamp);
+            sim.run(&mut w);
+            assert_eq!(w.log, vec![(100, 0), (100, 1)]);
+        }
     }
 
     #[test]
     fn run_until_stops_at_deadline() {
-        let mut sim: Sim<Ev> = Sim::new();
-        let mut w = World::default();
-        sim.at(10, Ev::Log(1));
-        sim.at(20, Ev::Log(2));
-        sim.run_until(&mut w, 15);
-        assert_eq!(w.log, vec![(10, 1)]);
-        assert_eq!(sim.pending(), 1);
-        assert_eq!(sim.now(), 15);
+        for mut sim in both() {
+            let mut w = World::default();
+            sim.at(10, Ev::Log(1));
+            sim.at(20, Ev::Log(2));
+            sim.run_until(&mut w, 15);
+            assert_eq!(w.log, vec![(10, 1)]);
+            assert_eq!(sim.pending(), 1);
+            assert_eq!(sim.now(), 15);
+        }
     }
 
     #[test]
@@ -282,65 +332,96 @@ mod tests {
 
     #[test]
     fn processed_counts_events() {
-        let mut sim: Sim<Ev> = Sim::new();
-        let mut w = World::default();
-        for i in 0..100 {
-            sim.at(i, Ev::Nop);
+        for mut sim in both() {
+            let mut w = World::default();
+            for i in 0..100 {
+                sim.at(i, Ev::Nop);
+            }
+            sim.run(&mut w);
+            assert_eq!(sim.processed(), 100);
         }
-        sim.run(&mut w);
-        assert_eq!(sim.processed(), 100);
     }
 
     #[test]
     fn event_budget_panics_on_livelock() {
-        let mut sim: Sim<Ev> = Sim::new();
-        sim.set_event_budget(50);
-        // Stand-in for a livelock: more events than the budget allows.
-        for i in 0..100 {
-            sim.at(i, Ev::Nop);
+        for mut sim in both() {
+            sim.set_event_budget(50);
+            // Stand-in for a livelock: more events than the budget allows.
+            for i in 0..100 {
+                sim.at(i, Ev::Nop);
+            }
+            let mut w = World::default();
+            let err =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    sim.run(&mut w);
+                }))
+                .unwrap_err();
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default();
+            assert!(
+                msg.contains("sim event budget exceeded (50 events)"),
+                "{msg}"
+            );
         }
-        let mut w = World::default();
-        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            sim.run(&mut w);
-        }))
-        .unwrap_err();
-        let msg = err
-            .downcast_ref::<String>()
-            .cloned()
-            .unwrap_or_default();
-        assert!(msg.contains("sim event budget exceeded (50 events)"), "{msg}");
     }
 
     #[test]
     fn event_budget_zero_is_unlimited_and_exact_budget_passes() {
-        let mut w = World::default();
-        let mut sim: Sim<Ev> = Sim::new();
-        sim.set_event_budget(0);
-        for i in 0..100 {
-            sim.at(i, Ev::Nop);
+        for [mut sim_a, mut sim_b] in [both()] {
+            let mut w = World::default();
+            sim_a.set_event_budget(0);
+            for i in 0..100 {
+                sim_a.at(i, Ev::Nop);
+            }
+            sim_a.run(&mut w);
+            assert_eq!(sim_a.processed(), 100);
+            // Exactly-at-budget drains cleanly: the cap is on *exceeding*.
+            sim_b.set_event_budget(100);
+            for i in 0..100 {
+                sim_b.at(i, Ev::Nop);
+            }
+            sim_b.run(&mut w);
+            assert_eq!(sim_b.processed(), 100);
         }
-        sim.run(&mut w);
-        assert_eq!(sim.processed(), 100);
-        // Exactly-at-budget drains cleanly: the cap is on *exceeding*.
-        let mut sim: Sim<Ev> = Sim::new();
-        sim.set_event_budget(100);
-        for i in 0..100 {
-            sim.at(i, Ev::Nop);
-        }
-        sim.run(&mut w);
-        assert_eq!(sim.processed(), 100);
     }
 
     #[test]
     fn peak_pending_tracks_calendar_depth() {
-        let mut sim: Sim<Ev> = Sim::new();
-        let mut w = World::default();
-        for i in 0..42 {
-            sim.at(i, Ev::Nop);
+        for mut sim in both() {
+            let mut w = World::default();
+            for i in 0..42 {
+                sim.at(i, Ev::Nop);
+            }
+            assert_eq!(sim.peak_pending(), 42);
+            sim.run(&mut w);
+            assert_eq!(sim.pending(), 0);
+            assert_eq!(sim.peak_pending(), 42); // high-water mark survives
         }
-        assert_eq!(sim.peak_pending(), 42);
-        sim.run(&mut w);
-        assert_eq!(sim.pending(), 0);
-        assert_eq!(sim.peak_pending(), 42); // high-water mark survives
+    }
+
+    #[test]
+    fn default_calendar_is_the_bucket_queue() {
+        let sim: Sim<Ev> = Sim::new();
+        assert!(matches!(sim.cal, CalendarImpl::Bucket(_)));
+        assert_eq!(CalendarKind::default(), CalendarKind::Bucket);
+    }
+
+    #[test]
+    fn pinned_bucket_width_runs_identically() {
+        // The `sim.bucket_width_us` knob changes geometry, never order.
+        let mut auto: Sim<Ev> = Sim::with_calendar(CalendarKind::Bucket, 0);
+        let mut pinned: Sim<Ev> = Sim::with_calendar(CalendarKind::Bucket, 3);
+        let mut wa = World::default();
+        let mut wp = World::default();
+        for sim in [&mut auto, &mut pinned] {
+            for i in 0..500u64 {
+                sim.at((i * 7919) % 1000, Ev::Log(i as u32));
+            }
+        }
+        assert_eq!(auto.run(&mut wa), pinned.run(&mut wp));
+        assert_eq!(wa.log, wp.log);
+        assert_eq!(auto.peak_pending(), pinned.peak_pending());
     }
 }

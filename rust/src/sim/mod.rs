@@ -4,13 +4,20 @@
 //! microseconds, a typed-event calendar with FIFO tie-breaking (no
 //! per-event allocation — see [`engine::Handler`]), and queueing-resource
 //! helpers used to model KVS shards, NICs, invoker pools and Dask worker
-//! cores. Determinism contract: same seed + same config ⇒ identical
-//! event trace (tested in `rust/tests/`).
+//! cores. The priority structure under the calendar is runtime-selected
+//! ([`calendar::CalendarKind`]): a bucketed calendar queue by default,
+//! the PR-2 binary heap as the differential reference. Determinism
+//! contract: same seed + same config ⇒ identical event trace (tested in
+//! `rust/tests/`, incl. the heap-vs-bucket suite in `tests/calendar.rs`).
 
+pub mod calendar;
 pub mod engine;
 pub mod resource;
+pub mod scratch;
 pub mod time;
 
+pub use calendar::{BucketCalendar, Calendar, CalendarKind, HeapCalendar};
 pub use engine::{Handler, Sim};
 pub use resource::{FifoResource, MultiResource};
+pub use scratch::{ReadyCounters, TaskScratch, TaskSlot};
 pub use time::{secs, to_secs, Time, MICROS_PER_SEC};

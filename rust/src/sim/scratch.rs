@@ -1,0 +1,187 @@
+//! Arena-style per-run scratch state.
+//!
+//! Two allocations the engines used to scatter across many `Vec`s:
+//!
+//! * [`TaskScratch`]: the Wukong engine's five per-task arrays
+//!   (claimed, stored, executed, attempts, avail_at) packed into one
+//!   slot arena — a run touches one contiguous allocation per task
+//!   instead of five, and the whole scratch frees in one drop.
+//! * [`ReadyCounters`]: remaining-parent counters over the CSR
+//!   adjacency with a branch-light completion sweep, shared by the
+//!   centralized baselines (numpywren, pywren, dask).
+
+use crate::dag::{Dag, TaskId};
+
+use super::time::Time;
+
+const CLAIMED: u8 = 1;
+const STORED: u8 = 2;
+
+/// One arena slot of per-task engine scratch (16 bytes + padding):
+/// retry/exec counters, the output-availability clock, and two flag
+/// bits (claimed-by-an-executor, stored-to-KVS).
+#[derive(Clone, Copy, Default)]
+pub struct TaskSlot {
+    /// Virtual time the task's output becomes readable.
+    pub avail_at: Time,
+    /// Completed executions (exactly-once gate asserts ≤ 1).
+    pub executed: u32,
+    /// Invocation attempts (retries included).
+    pub attempts: u32,
+    flags: u8,
+}
+
+impl TaskSlot {
+    /// Has some executor claimed this task (fan-out dedup)?
+    #[inline]
+    pub fn claimed(&self) -> bool {
+        self.flags & CLAIMED != 0
+    }
+
+    #[inline]
+    pub fn set_claimed(&mut self) {
+        self.flags |= CLAIMED;
+    }
+
+    /// Was the task's output written to the KVS (vs handed over
+    /// locally via "becomes")?
+    #[inline]
+    pub fn stored(&self) -> bool {
+        self.flags & STORED != 0
+    }
+
+    #[inline]
+    pub fn set_stored(&mut self) {
+        self.flags |= STORED;
+    }
+}
+
+/// Per-task scratch arena: one `Vec<TaskSlot>` for the whole run.
+pub struct TaskScratch {
+    slots: Vec<TaskSlot>,
+}
+
+impl TaskScratch {
+    pub fn new(n_tasks: usize) -> TaskScratch {
+        TaskScratch {
+            slots: vec![TaskSlot::default(); n_tasks],
+        }
+    }
+
+    #[inline]
+    pub fn slot(&self, t: TaskId) -> &TaskSlot {
+        &self.slots[t as usize]
+    }
+
+    #[inline]
+    pub fn slot_mut(&mut self, t: TaskId) -> &mut TaskSlot {
+        &mut self.slots[t as usize]
+    }
+
+    /// Unpack the per-task execution counters (metrics assembly).
+    pub fn executed_vec(&self) -> Vec<u32> {
+        self.slots.iter().map(|s| s.executed).collect()
+    }
+
+    /// Unpack the per-task attempt counters (metrics assembly).
+    pub fn attempts_vec(&self) -> Vec<u32> {
+        self.slots.iter().map(|s| s.attempts).collect()
+    }
+}
+
+/// Remaining-parent counters over the CSR arrays.
+///
+/// `complete` walks `dag.children(t)` — one contiguous CSR slice — with
+/// a wrapping decrement and a flag OR per child; the only branch in the
+/// sweep is the enqueue of a newly-ready child, which is exactly the
+/// work that cannot be elided.
+pub struct ReadyCounters {
+    remaining: Vec<u32>,
+}
+
+impl ReadyCounters {
+    /// Counters initialized from the CSR indegrees.
+    pub fn new(dag: &Dag) -> ReadyCounters {
+        ReadyCounters {
+            remaining: (0..dag.len() as TaskId)
+                .map(|t| dag.indegree(t) as u32)
+                .collect(),
+        }
+    }
+
+    /// Remaining unfinished parents of `t`.
+    #[inline]
+    pub fn remaining(&self, t: TaskId) -> u32 {
+        self.remaining[t as usize]
+    }
+
+    /// Record `t` as complete: decrement every child's counter, invoke
+    /// `enqueue` for each child that just became ready. Returns whether
+    /// any child became ready.
+    #[inline]
+    pub fn complete(
+        &mut self,
+        dag: &Dag,
+        t: TaskId,
+        mut enqueue: impl FnMut(TaskId),
+    ) -> bool {
+        let mut newly = false;
+        for &c in dag.children(t) {
+            let left = self.remaining[c as usize].wrapping_sub(1);
+            self.remaining[c as usize] = left;
+            let ready = left == 0;
+            newly |= ready;
+            if ready {
+                enqueue(c);
+            }
+        }
+        newly
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{DagBuilder, OpKind};
+
+    #[test]
+    fn slot_flags_are_independent() {
+        let mut s = TaskScratch::new(3);
+        s.slot_mut(1).set_claimed();
+        assert!(s.slot(1).claimed());
+        assert!(!s.slot(1).stored());
+        s.slot_mut(1).set_stored();
+        assert!(s.slot(1).claimed() && s.slot(1).stored());
+        assert!(!s.slot(0).claimed() && !s.slot(2).stored());
+    }
+
+    #[test]
+    fn counter_vecs_unpack_per_task() {
+        let mut s = TaskScratch::new(3);
+        s.slot_mut(0).executed += 1;
+        s.slot_mut(2).attempts += 3;
+        assert_eq!(s.executed_vec(), vec![1, 0, 0]);
+        assert_eq!(s.attempts_vec(), vec![0, 0, 3]);
+    }
+
+    #[test]
+    fn ready_counters_sweep_a_diamond() {
+        // a → {b, c} → d
+        let mut b = DagBuilder::new("diamond");
+        let a = b.task("a", OpKind::Generic, 1.0, 8);
+        let x = b.task("b", OpKind::Generic, 1.0, 8);
+        let y = b.task("c", OpKind::Generic, 1.0, 8);
+        let z = b.task("d", OpKind::Generic, 1.0, 8);
+        b.edge(a, x).edge(a, y).edge(x, z).edge(y, z);
+        let dag = b.build().unwrap();
+
+        let mut ctr = ReadyCounters::new(&dag);
+        assert_eq!(ctr.remaining(z), 2);
+        let mut ready = Vec::new();
+        assert!(ctr.complete(&dag, a, |c| ready.push(c)));
+        assert_eq!(ready, vec![x, y]);
+        assert!(!ctr.complete(&dag, x, |c| ready.push(c)));
+        assert!(ctr.complete(&dag, y, |c| ready.push(c)));
+        assert_eq!(ready, vec![x, y, z]);
+    }
+}

@@ -1,0 +1,335 @@
+//! Differential calendar suite: the bucketed calendar queue must
+//! reproduce the binary heap's pop sequence *exactly* — same `(t, seq)`
+//! tuples in the same order — on every schedule shape that stresses its
+//! geometry (clustered, uniform, far-future overflow, same-timestamp
+//! bursts, adversarial pop/push interleavings), and `Sim<E>` built on
+//! either structure must report identical counters (`processed`,
+//! `peak_pending`, end time) and trip the event-budget watchdog at the
+//! identical point. Since `seq` is unique, `(t, seq)` is a total order,
+//! so any discrepancy here is a bucket-queue bug, not a tie-break
+//! ambiguity.
+
+use wukong::sim::{
+    BucketCalendar, Calendar, CalendarKind, Handler, HeapCalendar, Sim, Time,
+};
+use wukong::util::prop::check;
+use wukong::util::Rng;
+
+/// Drive the same `(t, seq)` pushes through both structures, then pop
+/// both dry, asserting the sequences match element-for-element.
+fn assert_same_drain(label: &str, pushes: &[Time]) {
+    let mut bucket: BucketCalendar<u64> = BucketCalendar::new(None);
+    let mut heap: HeapCalendar<u64> = HeapCalendar::new();
+    for (seq, &t) in pushes.iter().enumerate() {
+        bucket.push(t, seq as u64, seq as u64);
+        heap.push(t, seq as u64, seq as u64);
+    }
+    assert_eq!(bucket.len(), heap.len(), "{label}: len after pushes");
+    let mut popped = 0usize;
+    loop {
+        assert_eq!(
+            bucket.next_time(),
+            heap.next_time(),
+            "{label}: next_time after {popped} pops"
+        );
+        let (b, h) = (bucket.pop(), heap.pop());
+        match (b, h) {
+            (None, None) => break,
+            (Some(b), Some(h)) => {
+                assert_eq!(
+                    (b.t, b.seq, b.ev),
+                    (h.t, h.seq, h.ev),
+                    "{label}: pop #{popped} diverged"
+                );
+            }
+            (b, h) => panic!(
+                "{label}: pop #{popped}: bucket {:?} vs heap {:?}",
+                b.map(|e| (e.t, e.seq)),
+                h.map(|e| (e.t, e.seq))
+            ),
+        }
+        popped += 1;
+    }
+    assert_eq!(popped, pushes.len(), "{label}: drained count");
+    assert!(bucket.is_empty() && heap.is_empty());
+}
+
+#[test]
+fn clustered_schedules_pop_identically() {
+    // Tight clusters separated by gaps 6 orders of magnitude wider than
+    // the cluster span: every cluster past the first starts life in the
+    // overflow heap and crosses `advance_year`.
+    let mut rng = Rng::new(0xca1e);
+    let mut pushes = Vec::new();
+    for cluster in 0..20u64 {
+        let base = cluster * 1_000_000_000_000;
+        for _ in 0..200 {
+            pushes.push(base + rng.below(1_000));
+        }
+    }
+    assert_same_drain("clustered", &pushes);
+}
+
+#[test]
+fn uniform_schedules_pop_identically() {
+    let mut rng = Rng::new(0x0f1);
+    let pushes: Vec<Time> =
+        (0..5_000).map(|_| rng.below(10_000_000)).collect();
+    assert_same_drain("uniform", &pushes);
+}
+
+#[test]
+fn far_future_outliers_pop_identically() {
+    // A dense near-term backlog with a handful of events near the top
+    // of the time axis: the auto-width heuristic sees a huge span, and
+    // the outliers must sit in overflow without perturbing near-term
+    // order.
+    let mut rng = Rng::new(0xfa2);
+    let mut pushes: Vec<Time> = (0..3_000).map(|_| rng.below(50_000)).collect();
+    for _ in 0..7 {
+        pushes.push(u64::MAX / 2 + rng.below(1_000_000));
+    }
+    pushes.push(u64::MAX - 1);
+    assert_same_drain("far-future", &pushes);
+}
+
+#[test]
+fn same_timestamp_bursts_preserve_fifo() {
+    // The all-ties case: everything lands in one bucket and pop order
+    // must be pure insertion order on both structures.
+    let pushes = vec![777u64; 4_096];
+    assert_same_drain("burst", &pushes);
+    // Mixed: a burst inside a spread-out schedule.
+    let mut rng = Rng::new(0xb0b);
+    let mut mixed: Vec<Time> = (0..1_000).map(|_| rng.below(1_000)).collect();
+    mixed.extend(std::iter::repeat(500).take(2_048));
+    mixed.extend((0..1_000).map(|_| rng.below(1_000)));
+    assert_same_drain("burst-mixed", &mixed);
+}
+
+#[test]
+fn random_pop_push_interleavings_match() {
+    // Adversarial op streams over the *raw* structures, including
+    // pushes behind an already-advanced year window (legal on the raw
+    // calendar; `Sim::at` clamps so engines never do this). Checks
+    // every pop and every `next_time`/`len` observation, not just the
+    // final drain.
+    check(0x1eaf, 40, |rng| {
+        let mut bucket: BucketCalendar<u32> = BucketCalendar::new(None);
+        let mut heap: HeapCalendar<u32> = HeapCalendar::new();
+        let mut seq = 0u64;
+        let ops = 400 + rng.below(600);
+        for op in 0..ops {
+            if rng.below(100) < 60 || bucket.is_empty() {
+                // Push: usually near-term, sometimes far-future,
+                // sometimes behind everything pushed so far.
+                let t = match rng.below(10) {
+                    0..=6 => 1_000_000 + rng.below(100_000),
+                    7 => rng.below(1_000), // behind the window
+                    8 => u64::MAX / 4 + rng.below(1_000_000),
+                    _ => 1_000_000, // exact tie hot-spot
+                };
+                bucket.push(t, seq, seq as u32);
+                heap.push(t, seq, seq as u32);
+                seq += 1;
+            } else {
+                let (b, h) = (bucket.pop(), heap.pop());
+                assert_eq!(
+                    b.as_ref().map(|e| (e.t, e.seq, e.ev)),
+                    h.as_ref().map(|e| (e.t, e.seq, e.ev)),
+                    "op #{op} diverged"
+                );
+            }
+            assert_eq!(bucket.len(), heap.len(), "len after op #{op}");
+            assert_eq!(
+                bucket.next_time(),
+                heap.next_time(),
+                "next_time after op #{op}"
+            );
+        }
+        // Drain whatever is left in lock-step.
+        while let Some(h) = heap.pop() {
+            let b = bucket.pop().expect("bucket drained early");
+            assert_eq!((b.t, b.seq, b.ev), (h.t, h.seq, h.ev));
+        }
+        assert!(bucket.pop().is_none());
+    });
+}
+
+#[test]
+fn pinned_width_extremes_match_heap() {
+    // Degenerate geometries — 1 µs buckets under a wide spread (every
+    // event beyond the first window is overflow) and near-max-width
+    // buckets (everything collapses into bucket 0) — still reproduce
+    // the reference order.
+    let mut rng = Rng::new(0x31d);
+    let pushes: Vec<Time> =
+        (0..2_000).map(|_| rng.below(100_000_000)).collect();
+    for width in [1, u64::MAX / 2] {
+        let mut bucket: BucketCalendar<u64> =
+            BucketCalendar::new(Some(width));
+        let mut heap: HeapCalendar<u64> = HeapCalendar::new();
+        for (seq, &t) in pushes.iter().enumerate() {
+            bucket.push(t, seq as u64, seq as u64);
+            heap.push(t, seq as u64, seq as u64);
+        }
+        loop {
+            let (b, h) = (bucket.pop(), heap.pop());
+            assert_eq!(
+                b.as_ref().map(|e| (e.t, e.seq)),
+                h.as_ref().map(|e| (e.t, e.seq)),
+                "width {width}"
+            );
+            if h.is_none() {
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sim-level parity: the full event loop (dynamic scheduling included)
+// over both calendar kinds.
+// ---------------------------------------------------------------------
+
+enum Ev {
+    /// Record `(now, tag)`.
+    Log(u64),
+    /// Schedule `n` `Log` events `dt, dt+1, ...` ticks out (in-run
+    /// pushes that race the cursor and trigger mid-run re-plans).
+    Spawn { dt: Time, n: u64 },
+}
+
+#[derive(Default)]
+struct Recorder {
+    log: Vec<(Time, u64)>,
+}
+
+impl Handler for Recorder {
+    type Ev = Ev;
+
+    fn handle(&mut self, sim: &mut Sim<Ev>, ev: Ev) {
+        match ev {
+            Ev::Log(tag) => self.log.push((sim.now(), tag)),
+            Ev::Spawn { dt, n } => {
+                for k in 0..n {
+                    sim.after(dt + k, Ev::Log(1_000_000 + k));
+                }
+            }
+        }
+    }
+}
+
+/// Seed both sims with an identical schedule mixing static far-apart
+/// events, same-time bursts, and dynamic spawners.
+fn seed_schedule(sim: &mut Sim<Ev>, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for i in 0..300u64 {
+        sim.at(rng.below(1_000_000), Ev::Log(i));
+    }
+    for i in 0..50u64 {
+        sim.at(123_456, Ev::Log(10_000 + i)); // burst
+    }
+    for _ in 0..20 {
+        let dt = 1 + rng.below(10_000);
+        sim.at(rng.below(500_000), Ev::Spawn { dt, n: 25 });
+    }
+    sim.at(900_000_000_000, Ev::Log(42)); // far-future outlier
+}
+
+fn sims() -> (Sim<Ev>, Sim<Ev>) {
+    (
+        Sim::with_calendar(CalendarKind::Bucket, 0),
+        Sim::with_calendar(CalendarKind::Heap, 0),
+    )
+}
+
+#[test]
+fn sim_runs_byte_identically_on_both_calendars() {
+    for seed in [1u64, 7, 99] {
+        let (mut bucket, mut heap) = sims();
+        let (mut wb, mut wh) = (Recorder::default(), Recorder::default());
+        seed_schedule(&mut bucket, seed);
+        seed_schedule(&mut heap, seed);
+        let (eb, eh) = (bucket.run(&mut wb), heap.run(&mut wh));
+        assert_eq!(eb, eh, "end time (seed {seed})");
+        assert_eq!(wb.log, wh.log, "event trace (seed {seed})");
+        assert_eq!(bucket.processed(), heap.processed());
+        assert_eq!(bucket.peak_pending(), heap.peak_pending());
+        assert_eq!(bucket.pending(), 0);
+        assert_eq!(heap.pending(), 0);
+    }
+}
+
+#[test]
+fn sim_run_until_parity_across_calendars() {
+    let (mut bucket, mut heap) = sims();
+    let (mut wb, mut wh) = (Recorder::default(), Recorder::default());
+    seed_schedule(&mut bucket, 5);
+    seed_schedule(&mut heap, 5);
+    // Step both through a staircase of deadlines; state must agree at
+    // every step, including pending backlog and the clamped `now`.
+    for deadline in [1_000, 250_000, 250_000, 7_777_777, u64::MAX] {
+        let (nb, nh) = (
+            bucket.run_until(&mut wb, deadline),
+            heap.run_until(&mut wh, deadline),
+        );
+        assert_eq!(nb, nh, "now at deadline {deadline}");
+        assert_eq!(wb.log, wh.log, "trace at deadline {deadline}");
+        assert_eq!(bucket.pending(), heap.pending());
+        assert_eq!(bucket.processed(), heap.processed());
+        assert_eq!(bucket.peak_pending(), heap.peak_pending());
+    }
+    assert_eq!(bucket.pending(), 0, "u64::MAX deadline drains everything");
+}
+
+#[test]
+fn event_budget_watchdog_trips_identically() {
+    // The livelock watchdog must fire after the same number of events
+    // with the same message on both structures — verify's fault
+    // reporting depends on that equivalence.
+    let budget = 100u64;
+    let mut msgs = Vec::new();
+    for kind in [CalendarKind::Bucket, CalendarKind::Heap] {
+        let mut sim: Sim<Ev> = Sim::with_calendar(kind, 0);
+        sim.set_event_budget(budget);
+        seed_schedule(&mut sim, 11);
+        let mut w = Recorder::default();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                sim.run(&mut w);
+            },
+        ))
+        .expect_err("budget must trip: the schedule exceeds 100 events");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("sim event budget exceeded"), "{msg}");
+        msgs.push((msg, w.log));
+    }
+    assert_eq!(msgs[0], msgs[1], "same message, same partial trace");
+}
+
+#[test]
+fn peak_pending_is_calendar_independent() {
+    // `peak_pending` feeds BENCH_*.json; it must not depend on which
+    // structure backs the calendar (it counts entries, not buckets).
+    check(0x9eaf, 20, |rng| {
+        let (mut bucket, mut heap) = sims();
+        let n = 50 + rng.below(500);
+        let burst_t = rng.below(1_000_000);
+        for i in 0..n {
+            let t = if rng.below(4) == 0 {
+                burst_t
+            } else {
+                rng.below(2_000_000)
+            };
+            bucket.at(t, Ev::Log(i));
+            heap.at(t, Ev::Log(i));
+        }
+        let (mut wb, mut wh) = (Recorder::default(), Recorder::default());
+        bucket.run(&mut wb);
+        heap.run(&mut wh);
+        assert_eq!(bucket.peak_pending(), heap.peak_pending());
+        assert_eq!(bucket.peak_pending(), n as usize);
+        assert_eq!(wb.log, wh.log);
+    });
+}

@@ -427,6 +427,124 @@ fn zero_rate_arrival_plans_are_invisible() {
 }
 
 #[test]
+fn bucket_and_heap_calendars_are_byte_identical_per_engine() {
+    use wukong::engine::select_engines;
+    use wukong::sim::CalendarKind;
+    // The tentpole determinism gate: swapping the priority structure
+    // under the calendar changes *nothing* observable — `(t, seq)` is a
+    // total order, so every engine's full report (event counts, byte
+    // meters, makespan, peak calendar depth) is byte-identical whether
+    // the bucket queue or the reference heap pops the events.
+    check(0xB0C4, 10, |rng| {
+        let dag = random_dag(rng);
+        let bucket = random_config(rng);
+        assert_eq!(bucket.sim.calendar, CalendarKind::Bucket, "default");
+        let mut heap = bucket.clone();
+        heap.sim.calendar = CalendarKind::Heap;
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            let a = engine.run(&dag, &bucket, seed);
+            let b = engine.run(&dag, &heap, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
+}
+
+#[test]
+fn calendar_swap_is_invisible_under_faults_and_crashes() {
+    use wukong::engine::select_engines;
+    use wukong::platform::faults::ShardCrashPlan;
+    use wukong::sim::CalendarKind;
+    // Same gate through the fault axis (retries re-enqueue events) and
+    // the durable-KVS crash axis (recovery stalls reshape the calendar
+    // mid-run): the heap and bucket runs must still agree bit-for-bit,
+    // recovery meters included.
+    check(0xB0C5, 8, |rng| {
+        let dag = random_dag(rng);
+        let mut bucket = random_config(rng);
+        bucket.faults = FaultPlan::with_retries(
+            rng.f64() * 0.5,
+            gen::usize_in(rng, 0, 3) as u32,
+        );
+        bucket.crashes = ShardCrashPlan::with_crashes(
+            rng.f64() * 0.5,
+            gen::usize_in(rng, 0, 4) as u32,
+        );
+        bucket.storage.wal_fsync_s = rng.f64() * 1e-3;
+        bucket.storage.snapshot_every_ops = gen::usize_in(rng, 0, 32) as u64;
+        let mut heap = bucket.clone();
+        heap.sim.calendar = CalendarKind::Heap;
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_faults {
+                continue;
+            }
+            let a = engine.run(&dag, &bucket, seed);
+            let b = engine.run(&dag, &heap, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
+}
+
+#[test]
+fn calendar_swap_is_invisible_to_the_serving_session() {
+    use wukong::serving::{run_serving, ArrivalPlan, FairnessPolicy};
+    use wukong::sim::CalendarKind;
+    // The serving session runs its own `Sim<ServeEv>` plus one inner
+    // engine sim per admitted job; both layers pick the structure up
+    // from `cfg.sim`, and the whole report — per-tenant rollups,
+    // latency percentiles, billing — must not move. Crossed with a
+    // thread-count change to pin both invariances at once.
+    check(0xB0C6, 6, |rng| {
+        let mut bucket = random_config(rng);
+        bucket.arrival =
+            ArrivalPlan::poisson(rng.f64() * 20.0 + 0.5, gen::usize_in(rng, 2, 8) as u64);
+        bucket.tenants.count = gen::usize_in(rng, 1, 4);
+        if rng.f64() < 0.5 {
+            bucket.tenants.policy = FairnessPolicy::WeightedFair;
+            bucket.tenants.weight_skew = rng.f64();
+        }
+        let mut heap = bucket.clone();
+        heap.sim.calendar = CalendarKind::Heap;
+        let seed = rng.next_u64();
+        let a = run_serving(&bucket, seed, 1);
+        let b = run_serving(&heap, seed, 1);
+        assert_eq!(a, b, "serving report moved with the calendar swap");
+        assert_eq!(a.render(), b.render());
+        let c = run_serving(&heap, seed, 4);
+        assert_eq!(a, c, "calendar x thread-count cross");
+    });
+}
+
+#[test]
+fn pinned_bucket_width_never_changes_any_engine_report() {
+    use wukong::engine::select_engines;
+    // `sim.bucket_width_us` is a geometry knob, not a semantics knob:
+    // any pinned width yields the same report as auto-sizing.
+    check(0xB0C7, 6, |rng| {
+        let dag = random_dag(rng);
+        let auto = random_config(rng);
+        let mut pinned = auto.clone();
+        pinned.sim.bucket_width_us = 1 + rng.below(1_000_000);
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            let a = engine.run(&dag, &auto, seed);
+            let b = engine.run(&dag, &pinned, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
+}
+
+#[test]
 fn makespan_at_least_critical_path() {
     check(0xC121, 30, |rng| {
         let dag = random_dag(rng);

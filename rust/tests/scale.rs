@@ -1,19 +1,23 @@
-//! Scale smoke tests (tier-1, artifact-free): a ~100k-task DAG completes
+//! Scale smoke tests (tier-1, artifact-free): large fan-outs complete
 //! exactly-once on Wukong and on a centralized baseline, and DES event
-//! counts grow linearly — not quadratically — with task count. This is
-//! the `cargo test`-runnable guard for the million-task regimes `wukong
-//! bench` sweeps (which are release-build only).
+//! counts grow linearly — not quadratically — up to the million-task
+//! regime `wukong bench` sweeps. Since PR 9 this is also the bucketed
+//! calendar queue's stress tier: a 1M-task fan-out is one giant
+//! same-window backlog (the overload-rebuild path), and the
+//! all-same-timestamp burst pins the worst case of every event landing
+//! in a single bucket.
 
 use wukong::baselines::run_numpywren_full;
 use wukong::config::Config;
 use wukong::coordinator::run_wukong;
+use wukong::sim::CalendarKind;
 use wukong::workloads::micro;
 
 fn scale_cfg() -> Config {
     let mut cfg = Config::default();
-    // Lift the Lambda cap so the 100k fan-out measures the engine, not
-    // admission-throttle modeling.
-    cfg.lambda.concurrency_limit = 200_000;
+    // Lift the Lambda cap so the fan-outs (up to 1M tasks) measure the
+    // engine, not admission-throttle modeling.
+    cfg.lambda.concurrency_limit = 2_000_000;
     cfg
 }
 
@@ -40,15 +44,19 @@ fn numpywren_100k_task_fanout_completes_exactly_once() {
 }
 
 #[test]
-fn wukong_sim_events_grow_linearly_with_task_count() {
+fn wukong_sim_events_grow_linearly_to_a_million_tasks() {
     // 4x the tasks must cost ~4x the events (linear); a quadratic hot
     // path (e.g. per-dispatch child-list clones feeding re-scans) would
-    // show ~16x. Allow 2x slack over linear for constant terms.
+    // show ~16x. Allow 2x slack over linear for constant terms. The
+    // large leg is the full bench-tier 1,000,000-task fan-out — the
+    // bucket calendar's overload-growth path runs for real here, and
+    // exactly-once is asserted inside the engine.
     let cfg = scale_cfg();
-    let small = run_wukong(&micro::serverless(25_000, 0), &cfg, 1);
-    let large = run_wukong(&micro::serverless(100_000, 0), &cfg, 1);
-    assert_eq!(small.metrics.tasks_executed, 25_000);
-    assert_eq!(large.metrics.tasks_executed, 100_000);
+    let small = run_wukong(&micro::serverless(250_000, 0), &cfg, 1);
+    let large = run_wukong(&micro::serverless(1_000_000, 0), &cfg, 1);
+    assert_eq!(small.metrics.tasks_executed, 250_000);
+    assert_eq!(large.metrics.tasks_executed, 1_000_000);
+    assert_eq!(large.metrics.executors_used, 1_000_000);
     let ratio = large.sim_events as f64 / small.sim_events as f64;
     assert!(
         ratio < 8.0,
@@ -57,6 +65,31 @@ fn wukong_sim_events_grow_linearly_with_task_count() {
         large.sim_events
     );
     assert!(ratio > 2.0, "suspiciously sublinear: {ratio:.2}x");
+}
+
+#[test]
+fn all_same_timestamp_burst_matches_the_heap_exactly() {
+    // Pathological calendar shape: zero out every latency source so all
+    // 50k invocations (and their successor events) collapse onto shared
+    // timestamps — on the bucket queue everything piles into one bucket
+    // per instant, the pure FIFO-tie regime. The run must complete
+    // exactly-once and be byte-identical to the reference heap.
+    let mut bucket = scale_cfg();
+    bucket.lambda.invoke_latency_s = 0.0;
+    bucket.lambda.invoke_jitter_sigma = 0.0;
+    bucket.compute.task_overhead_s = 0.0;
+    bucket.storage.op_latency_s = 0.0;
+    bucket.storage.mds_latency_s = 0.0;
+    let mut heap = bucket.clone();
+    heap.sim.calendar = CalendarKind::Heap;
+    let dag = micro::serverless(50_000, 0);
+    let b = run_wukong(&dag, &bucket, 1);
+    let h = run_wukong(&dag, &heap, 1);
+    assert_eq!(b.metrics.tasks_executed, 50_000);
+    assert!(b.metrics.per_task_exec.iter().all(|&c| c == 1));
+    assert_eq!(b.sim_events, h.sim_events, "event counts diverged");
+    assert_eq!(b.peak_pending, h.peak_pending, "calendar depth diverged");
+    assert_eq!(b.metrics, h.metrics, "burst run moved with the calendar");
 }
 
 #[test]
