@@ -15,9 +15,9 @@
 use std::collections::VecDeque;
 
 use crate::config::{Config, DaskConfig};
-use crate::dag::{Dag, TaskId};
+use crate::dag::{Dag, SpawnState, TaskId, TaskNode};
 use crate::metrics::{RunMetrics, TaskOutcome};
-use crate::platform::faults::{propagate_failures, FaultStream};
+use crate::platform::faults::FaultStream;
 use crate::sim::{
     secs, to_secs, FifoResource, Handler, MultiResource, ReadyCounters, Sim,
     Time,
@@ -70,8 +70,13 @@ struct World<'a> {
     fail_count: Vec<u32>,
     /// Live terminal outcomes; failures cascade in as budgets exhaust.
     outcome: Vec<TaskOutcome>,
-    /// Tasks resolved Failed so far; termination is `done + n_failed == n`.
+    /// Tasks resolved Failed so far; termination is `done + n_failed == total`.
     n_failed: u64,
+    /// Runtime-spawning state (`cfg.spawn`); staged ids pre-laid-out.
+    spawn: SpawnState,
+    /// Expanded task count (`spawn.total_len()`); every staged task
+    /// resolves (spawner completes → it runs; spawner fails → cascade).
+    total: u64,
 }
 
 impl Handler for World<'_> {
@@ -87,8 +92,17 @@ impl Handler for World<'_> {
 }
 
 impl World<'_> {
+    /// Task node, spawn-aware (staged ids resolve via the spawn state).
+    fn node(&self, t: TaskId) -> TaskNode {
+        if self.spawn.is_staged(t) {
+            self.spawn.node(t)
+        } else {
+            *self.dag.task(t)
+        }
+    }
+
     fn compute_time(&self, t: TaskId) -> Time {
-        let node = self.dag.task(t);
+        let node = self.node(t);
         match node.dur_override {
             Some(d) => d + secs(self.cfg.compute.task_overhead_s),
             None => secs(
@@ -99,14 +113,23 @@ impl World<'_> {
     }
 
     /// Bytes of task `t`'s inputs already resident on worker `wid`.
+    /// Spawned tasks enter the locality heuristic exactly like declared
+    /// ones: their single input is the spawner's output.
     fn local_bytes(&self, t: TaskId, wid: usize) -> u64 {
         let mut bytes = 0;
-        for &p in self.dag.parents(t) {
+        let pbuf;
+        let parents: &[TaskId] = if self.spawn.is_staged(t) {
+            pbuf = [self.spawn.parent_of(t)];
+            &pbuf
+        } else {
+            self.dag.parents(t)
+        };
+        for &p in parents {
             if self.workers[wid].holds[p as usize] {
-                bytes += self.dag.task(p).out_bytes;
+                bytes += self.node(p).out_bytes;
             }
         }
-        let node = self.dag.task(t);
+        let node = self.node(t);
         if node.input_bytes > 0 && self.input_loc[t as usize] == wid {
             bytes += node.input_bytes;
         }
@@ -156,21 +179,32 @@ fn exec_on_worker(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
         } else {
             w.metrics.failed_executors += 1;
             let dag = w.dag;
-            w.n_failed += propagate_failures(dag, &[t], &mut w.outcome);
-            if w.done + w.n_failed == dag.len() as u64 {
+            // Spawn-aware cascade: a failed task also dooms the staged
+            // subtree it would have spawned.
+            w.n_failed +=
+                w.spawn.propagate_failures(dag, &[t], &mut w.outcome);
+            if w.done + w.n_failed == w.total {
                 w.finish = Some(end);
             }
         }
         return;
     }
-    // Fetch missing inputs peer-to-peer (sequential transfers).
+    // Fetch missing inputs peer-to-peer (sequential transfers). Staged
+    // tasks fetch exactly one input — their spawner's output.
     let dag = w.dag;
     let mut cursor = sim.now();
-    for &p in dag.parents(t) {
+    let pbuf;
+    let parents: &[TaskId] = if w.spawn.is_staged(t) {
+        pbuf = [w.spawn.parent_of(t)];
+        &pbuf
+    } else {
+        dag.parents(t)
+    };
+    for &p in parents {
         if w.workers[wid].holds[p as usize] {
             continue;
         }
-        let bytes = dag.task(p).out_bytes;
+        let bytes = w.node(p).out_bytes;
         let src = w.loc[p as usize].expect("parent executed");
         let svc = secs(bytes as f64 / w.dcfg.worker_bw);
         let (_, src_end) = w.workers[src].nic.acquire(cursor, svc);
@@ -181,7 +215,7 @@ fn exec_on_worker(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
         w.workers[wid].holds[p as usize] = true;
     }
     // External partition: local by placement for leaves; remote otherwise.
-    let ext = dag.task(t).input_bytes;
+    let ext = w.node(t).input_bytes;
     if ext > 0 && w.input_loc[t as usize] != wid {
         let src = w.input_loc[t as usize];
         let svc = secs(ext as f64 / w.dcfg.worker_bw);
@@ -211,9 +245,20 @@ fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     let (_, end) = w.sched.acquire(sim.now(), secs(w.dcfg.effective_msg_s()));
     w.metrics.breakdown.publish_s += to_secs(end - sim.now());
     let dag = w.dag;
-    let (remaining, ready) = (&mut w.remaining, &mut w.ready);
-    let newly = remaining.complete(dag, t, |c| ready.push_back(c));
-    if w.done + w.n_failed == w.dag.len() as u64 {
+    let mut newly = false;
+    if !w.spawn.is_staged(t) {
+        let (remaining, ready) = (&mut w.remaining, &mut w.ready);
+        newly = remaining.complete(dag, t, |c| ready.push_back(c));
+    }
+    // Runtime spawning: spawned children enqueue after the base children
+    // — the sealed DAG's child order, so the ready queue matches a
+    // pre-expanded run exactly.
+    for c in w.spawn.spawned_children(t) {
+        w.remaining.mark_ready(c);
+        w.ready.push_back(c);
+        newly = true;
+    }
+    if w.done + w.n_failed == w.total {
         w.finish = Some(end);
     } else if newly {
         sim.at(end, Ev::Schedule);
@@ -227,14 +272,21 @@ pub fn run_dask_full(
     dcfg: &DaskConfig,
     seed: u64,
 ) -> BaselineReport {
-    let n = dag.len();
+    // Epoch open: freeze the spawn expansion and size per-task state
+    // (including per-worker hold bitmaps and the external-input
+    // placement, a pure id function) to the expanded count — exactly
+    // what a pre-expanded run allocates.
+    let spawn = SpawnState::for_run(dag, cfg.spawn, seed);
+    let n = spawn.total_len();
+    let mut remaining = ReadyCounters::new(dag);
+    remaining.grow_to(n, 1); // staged tasks: one parent (their spawner)
     let mut w = World {
         cfg,
         dcfg,
         dag,
         sched: FifoResource::new(),
         ready: dag.leaves().iter().copied().collect(),
-        remaining: ReadyCounters::new(dag),
+        remaining,
         executed: vec![0; n],
         loc: vec![None; n],
         input_loc: (0..n).map(|i| i % dcfg.n_workers).collect(),
@@ -250,14 +302,16 @@ pub fn run_dask_full(
         done: 0,
         finish: None,
         busy: crate::metrics::Timeline::default(),
-        // The seed feeds *only* the fault stream: fault-free Dask runs
-        // stay identical across seeds (the engine is otherwise
-        // deterministic by construction).
+        // The seed feeds only the fault and spawn streams: fault-free
+        // plan-free Dask runs stay identical across seeds (the engine is
+        // otherwise deterministic by construction).
         faults: FaultStream::for_run(cfg.faults, seed),
         attempts: vec![0; n],
         fail_count: vec![0; n],
         outcome: vec![TaskOutcome::Completed; n],
         n_failed: 0,
+        total: n as u64,
+        spawn,
     };
     let mut sim: Sim<Ev> = cfg.sim.build();
     sim.set_event_budget(cfg.event_budget);
@@ -402,5 +456,39 @@ mod tests {
         let m = run_dask(&dag, &cfg, &DaskConfig::workers_1000(), 7);
         assert_eq!(m.tasks_executed + m.failed_tasks, dag.len() as u64);
         assert!(m.per_task_attempts.iter().all(|&a| a <= 3));
+    }
+
+    #[test]
+    fn dynamic_spawning_matches_the_pre_expanded_dag() {
+        use crate::dag::{pre_expand, SpawnPlan};
+        let dag = micro::strong(24, 6, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.spawn = SpawnPlan::recursive(0.4, 3, 2);
+        let seed = 13;
+        let dy = run_dask_full(&dag, &cfg, &DaskConfig::workers_125(), seed);
+
+        let expanded = pre_expand(&dag, cfg.spawn, seed);
+        assert!(expanded.len() > dag.len(), "plan must actually expand");
+        let mut static_cfg = cfg;
+        static_cfg.spawn = SpawnPlan::default();
+        let st = run_dask_full(&expanded, &static_cfg, &DaskConfig::workers_125(), seed);
+
+        assert_eq!(dy.metrics, st.metrics);
+        assert_eq!(dy.sim_events, st.sim_events);
+        assert_eq!(dy.peak_pending, st.peak_pending);
+        assert_eq!(dy.metrics.tasks_executed, expanded.len() as u64);
+    }
+
+    #[test]
+    fn zero_rate_spawn_plan_is_bit_identical_to_plan_free() {
+        use crate::dag::SpawnPlan;
+        let dag = micro::strong(40, 8, secs(0.01));
+        let plain = run_dask_full(&dag, &Config::default(), &DaskConfig::workers_125(), 5);
+        let mut cfg = Config::default();
+        cfg.spawn = SpawnPlan::with_rate(0.0, 4);
+        let zero = run_dask_full(&dag, &cfg, &DaskConfig::workers_125(), 5);
+        assert_eq!(plain.metrics, zero.metrics);
+        assert_eq!(plain.sim_events, zero.sim_events);
+        assert_eq!(plain.peak_pending, zero.peak_pending);
     }
 }

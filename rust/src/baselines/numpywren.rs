@@ -15,9 +15,9 @@
 use std::collections::VecDeque;
 
 use crate::config::Config;
-use crate::dag::{Dag, TaskId, TaskNode};
+use crate::dag::{Dag, SpawnState, TaskId, TaskNode};
 use crate::metrics::{RunMetrics, TaskOutcome};
-use crate::platform::faults::{propagate_failures, FaultStream};
+use crate::platform::faults::FaultStream;
 use crate::platform::LambdaService;
 use crate::sim::{
     secs, to_secs, FifoResource, Handler, MultiResource, ReadyCounters, Sim,
@@ -71,8 +71,15 @@ struct World<'a> {
     /// Live terminal outcomes; failures cascade in as budgets exhaust.
     outcome: Vec<TaskOutcome>,
     /// Tasks resolved Failed so far (direct + cascaded); termination is
-    /// `done + n_failed == dag.len()` — failed jobs must still drain.
+    /// `done + n_failed == total` — failed jobs must still drain.
     n_failed: u64,
+    /// Runtime-spawning state (`cfg.spawn`); staged ids pre-laid-out.
+    spawn: SpawnState,
+    /// Expanded task count (`spawn.total_len()`): every staged task
+    /// eventually resolves — its spawner completes (it runs) or fails
+    /// (the cascade dooms it) — so termination counts against the full
+    /// expanded total, exactly like a pre-expanded run.
+    total: u64,
 }
 
 impl Handler for World<'_> {
@@ -99,8 +106,17 @@ impl World<'_> {
         end + secs(self.cfg.numpywren.queue_op_s)
     }
 
+    /// Task node, spawn-aware (staged ids resolve via the spawn state).
+    fn node(&self, t: TaskId) -> TaskNode {
+        if self.spawn.is_staged(t) {
+            self.spawn.node(t)
+        } else {
+            *self.dag.task(t)
+        }
+    }
+
     fn compute_time(&self, t: TaskId) -> Time {
-        let node = self.dag.task(t);
+        let node = self.node(t);
         match node.dur_override {
             Some(d) => d + secs(self.cfg.compute.task_overhead_s),
             None => secs(
@@ -113,7 +129,7 @@ impl World<'_> {
 
 /// Worker polls the queue for work.
 fn poll(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize) {
-    if w.done + w.n_failed == w.dag.len() as u64 {
+    if w.done + w.n_failed == w.total {
         retire(w, sim, wid);
         return;
     }
@@ -149,8 +165,10 @@ fn fail_attempt(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     } else {
         w.metrics.failed_executors += 1;
         let dag = w.dag;
-        w.n_failed += propagate_failures(dag, &[t], &mut w.outcome);
-        if w.done + w.n_failed == dag.len() as u64 {
+        // Spawn-aware cascade: a failed task also dooms the staged
+        // subtree it would have spawned (matching the pre-expanded run).
+        w.n_failed += w.spawn.propagate_failures(dag, &[t], &mut w.outcome);
+        if w.done + w.n_failed == w.total {
             w.finish = Some(t_op);
         }
     }
@@ -167,8 +185,17 @@ fn execute(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     let dag = w.dag;
     let mut cursor = sim.now();
     let net_bw = w.cfg.lambda.net_bw;
-    for &p in dag.parents(t) {
-        let bytes = dag.task(p).out_bytes;
+    // Staged tasks read exactly one input — their spawner's output —
+    // through a stack-local parent slice so the loop body is shared.
+    let pbuf;
+    let parents: &[TaskId] = if w.spawn.is_staged(t) {
+        pbuf = [w.spawn.parent_of(t)];
+        &pbuf
+    } else {
+        dag.parents(t)
+    };
+    for &p in parents {
+        let bytes = w.node(p).out_bytes;
         let shard_end = w.kvs.read(cursor, TaskNode::obj_key(p), bytes);
         let (_, nic_end) = w.workers[wid]
             .nic
@@ -179,7 +206,7 @@ fn execute(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
         w.metrics.breakdown.serde_s += to_secs(sd);
         cursor = end + sd;
     }
-    let ext = dag.task(t).input_bytes;
+    let ext = w.node(t).input_bytes;
     if ext > 0 {
         let shard_end = w.kvs.read(cursor, TaskNode::input_key(t), ext);
         let (_, nic_end) = w.workers[wid]
@@ -193,7 +220,7 @@ fn execute(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     w.metrics.breakdown.execute_s += to_secs(d);
     cursor += d;
     // Write the full output back (statelessness).
-    let out = dag.task(t).out_bytes;
+    let out = w.node(t).out_bytes;
     let shard_end = w.kvs.write(cursor, TaskNode::obj_key(t), out);
     let (_, nic_end) = w.workers[wid]
         .nic
@@ -213,9 +240,18 @@ fn complete(w: &mut World<'_>, sim: &mut Sim<Ev>, wid: usize, t: TaskId) {
     let t_op = w.queue_op(sim.now());
     w.metrics.breakdown.publish_s += to_secs(t_op - sim.now());
     let dag = w.dag;
-    let (remaining, queue) = (&mut w.remaining, &mut w.queue);
-    remaining.complete(dag, t, |c| queue.push_back(c));
-    if w.done + w.n_failed == w.dag.len() as u64 {
+    if !w.spawn.is_staged(t) {
+        let (remaining, queue) = (&mut w.remaining, &mut w.queue);
+        remaining.complete(dag, t, |c| queue.push_back(c));
+    }
+    // Runtime spawning: the completing task's spawned children enqueue
+    // after its base children — the sealed DAG's child order, so the
+    // queue contents match a pre-expanded run exactly.
+    for c in w.spawn.spawned_children(t) {
+        w.remaining.mark_ready(c);
+        w.queue.push_back(c);
+    }
+    if w.done + w.n_failed == w.total {
         w.finish = Some(t_op);
     }
     sim.at(t_op, Ev::Poll(wid));
@@ -255,13 +291,18 @@ pub fn run_numpywren_n(
     seed: u64,
 ) -> BaselineReport {
     let mut rng = Rng::new(seed);
-    let n = dag.len();
+    // Epoch open: freeze the spawn expansion and size per-task state to
+    // the expanded count (what a pre-expanded run would allocate).
+    let spawn = SpawnState::for_run(dag, cfg.spawn, seed);
+    let n = spawn.total_len();
+    let mut remaining = ReadyCounters::new(dag);
+    remaining.grow_to(n, 1); // staged tasks: one parent (their spawner)
     let mut w = World {
         dag,
         kvs: KvsModel::with_crashes(cfg.storage, cfg.crashes, seed),
         queue_srv: FifoResource::new(),
         queue: dag.leaves().iter().copied().collect(),
-        remaining: ReadyCounters::new(dag),
+        remaining,
         executed: vec![0; n],
         done: 0,
         workers: Vec::new(),
@@ -273,6 +314,8 @@ pub fn run_numpywren_n(
         fail_count: vec![0; n],
         outcome: vec![TaskOutcome::Completed; n],
         n_failed: 0,
+        total: n as u64,
+        spawn,
         cfg,
     };
     let mut sim: Sim<Ev> = cfg.sim.build();
@@ -464,6 +507,36 @@ mod tests {
             .per_task_outcome
             .iter()
             .all(|&o| o == TaskOutcome::Failed));
+    }
+
+    #[test]
+    fn dynamic_spawning_matches_the_pre_expanded_dag() {
+        use crate::dag::{pre_expand, SpawnPlan};
+        let dag = micro::strong(24, 6, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.numpywren.n_workers = 5;
+        cfg.spawn = SpawnPlan::recursive(0.4, 3, 2);
+        let dy = run_numpywren_full(&dag, &cfg, 13);
+        let expanded = pre_expand(&dag, cfg.spawn, 13);
+        let mut st_cfg = cfg.clone();
+        st_cfg.spawn = SpawnPlan::default();
+        let st = run_numpywren_full(&expanded, &st_cfg, 13);
+        assert_eq!(dy.metrics, st.metrics);
+        assert_eq!(dy.sim_events, st.sim_events);
+        assert_eq!(dy.peak_pending, st.peak_pending);
+        assert_eq!(dy.metrics.tasks_executed, expanded.len() as u64);
+    }
+
+    #[test]
+    fn zero_rate_spawn_plan_is_bit_identical_to_plan_free() {
+        use crate::dag::SpawnPlan;
+        let dag = micro::strong(40, 8, secs(0.01));
+        let base = run_numpywren_full(&dag, &Config::default(), 9);
+        let mut cfg = Config::default();
+        cfg.spawn = SpawnPlan::with_rate(0.0, 16);
+        let r = run_numpywren_full(&dag, &cfg, 9);
+        assert_eq!(base.metrics, r.metrics);
+        assert_eq!(base.sim_events, r.sim_events);
     }
 
     #[test]

@@ -75,4 +75,25 @@ mod tests {
         assert_eq!(m.tasks_executed, 10);
         assert!(m.executors_used >= 10);
     }
+
+    #[test]
+    fn spawning_passes_through_to_the_numpywren_substrate() {
+        use crate::dag::{pre_expand, SpawnPlan};
+        use crate::sim::secs;
+        let dag = micro::strong(18, 6, secs(0.01));
+        let mut cfg = Config::default();
+        cfg.spawn = SpawnPlan::recursive(0.5, 2, 2);
+        let seed = 9;
+        let dy = run_pywren_full(&dag, &cfg, 8, seed);
+
+        let expanded = pre_expand(&dag, cfg.spawn, seed);
+        assert!(expanded.len() > dag.len(), "plan must actually expand");
+        let mut static_cfg = cfg;
+        static_cfg.spawn = SpawnPlan::default();
+        let st = run_pywren_full(&expanded, &static_cfg, 8, seed);
+
+        assert_eq!(dy.metrics, st.metrics);
+        assert_eq!(dy.sim_events, st.sim_events);
+        assert_eq!(dy.metrics.tasks_executed, expanded.len() as u64);
+    }
 }

@@ -9,7 +9,10 @@
 //! simulated makespan. A fourth *job-stream* tier measures the
 //! multi-tenant serving layer (thousands of corpus DAG jobs multiplexed
 //! over one shared pool), adding jobs/sec and p99 job latency to the
-//! row. Results are written as `BENCH_<point>.json`; each PR
+//! row. A fifth *dynamic fan-out* tier (PR 10) measures the
+//! runtime-spawning hot path: a flat fan-out whose every task expands
+//! into a 21-task subtree mid-run, completion-checked against the
+//! statically pre-expanded task count. Results are written as `BENCH_<point>.json`; each PR
 //! appends a `BENCH_*.json` point so the perf trajectory is recorded and
 //! regressions are caught automatically by `wukong bench --diff
 //! BASELINE.json` (see [`diff`]), which fails on a >20% events/sec drop
@@ -29,7 +32,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::config::Config;
-use crate::dag::Dag;
+use crate::dag::{pre_expand, Dag, SpawnPlan};
 #[allow(unused_imports)]
 use crate::engine::Engine;
 use crate::engine::select_engines;
@@ -40,7 +43,7 @@ use crate::workloads::{micro, tsqr};
 /// The trajectory point this build records. Bump once per PR that
 /// re-baselines perf — the JSON `pr` field and the default output
 /// filename both derive from it.
-pub const TRAJECTORY_POINT: &str = "PR9";
+pub const TRAJECTORY_POINT: &str = "PR10";
 
 /// Default output path: `BENCH_<point>.json` at the invocation cwd.
 pub fn default_out_path() -> String {
@@ -200,6 +203,43 @@ pub fn run_bench(opts: &BenchOptions) -> Result<Vec<BenchRecord>, String> {
                 p99_job_latency_s: 0.0,
             });
         }
+    }
+    // Dynamic fan-out tier: the runtime-spawning hot path. A flat
+    // fan-out whose every base task expands at runtime into a 21-task
+    // subtree (certain recursive plan: p=1, fanout 4, depth 2), so the
+    // calendar and the per-task arrays grow mid-run instead of being
+    // fixed at admission. Completion is checked against the statically
+    // pre-expanded task count — the differential anchor, enforced even
+    // in the perf gate.
+    if let Some(engine) = engines.iter().find(|e| e.name() == "wukong") {
+        let base_tasks = if opts.quick { 2_500 } else { 50_000 };
+        let dag = micro::serverless(base_tasks, 0);
+        let plan = SpawnPlan::recursive(1.0, 4, 2);
+        let mut dcfg = bench_config();
+        dcfg.spawn = plan;
+        let expanded_len = pre_expand(&dag, plan, opts.seed).len();
+        let t0 = Instant::now();
+        let rep = engine.run(&dag, &dcfg, opts.seed);
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        if rep.metrics.tasks_executed as usize != expanded_len {
+            return Err(format!(
+                "bench [wukong dynfan]: {}/{expanded_len} tasks executed",
+                rep.metrics.tasks_executed
+            ));
+        }
+        let sim_events = rep.sim_events.unwrap_or(0);
+        records.push(BenchRecord {
+            engine: "wukong",
+            workload: "dynfan",
+            tasks: expanded_len,
+            wall_ms: wall_s * 1e3,
+            sim_events,
+            events_per_sec: sim_events as f64 / wall_s,
+            peak_pending: rep.peak_pending.unwrap_or(0),
+            makespan_s: rep.metrics.makespan_s,
+            jobs_per_sec: 0.0,
+            p99_job_latency_s: 0.0,
+        });
     }
     // Job-stream tier: a multi-tenant serving session multiplexing
     // thousands of corpus DAG jobs (the wukong sim engine inside) over
@@ -364,26 +404,31 @@ mod tests {
     #[test]
     fn quick_smoke_on_the_wukong_engine() {
         // A tiny end-to-end sweep: completion-checked runs over all three
-        // DAG families plus the multi-tenant jobstream tier (debug-build
-        // friendly sizes).
+        // DAG families plus the dynamic fan-out and multi-tenant
+        // jobstream tiers (debug-build friendly sizes).
         let recs = run_bench(&BenchOptions {
             quick: true,
             engines: vec!["wukong".into()],
             seed: 7,
         })
         .unwrap();
-        assert_eq!(recs.len(), 4);
+        assert_eq!(recs.len(), 5);
         for r in &recs {
             assert!(r.sim_events > 0, "{:?}", r);
             assert!(r.events_per_sec > 0.0);
             assert!(r.peak_pending > 0);
             assert!(r.tasks >= 64);
         }
+        let dy = &recs[3];
+        assert_eq!(dy.workload, "dynfan");
+        // 2,500 base tasks × the 21-task subtree (1 + 4 + 16) at p=1.
+        assert_eq!(dy.tasks, 2_500 * 21);
         let js = recs.last().unwrap();
         assert_eq!(js.workload, "jobstream");
         assert!(js.jobs_per_sec > 0.0);
         assert!(js.p99_job_latency_s > 0.0);
-        // The DAG-family rows never fill the jobstream-only columns.
-        assert!(recs[..3].iter().all(|r| r.jobs_per_sec == 0.0));
+        // The DAG-family and dynfan rows never fill the jobstream-only
+        // columns.
+        assert!(recs[..4].iter().all(|r| r.jobs_per_sec == 0.0));
     }
 }

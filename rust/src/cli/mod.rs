@@ -76,6 +76,7 @@ USAGE:
                                                        run one workload on the simulator
   wukong verify [--engine a,b,...] [--runs N] [--seed S] [--threads N]
                 [--large] [--verbose] [--faults] [--crashes] [--serving]
+                [--dynamic]
                                                        cross-engine differential conformance:
                                                        sweeps generated DAGs (incl. irregular
                                                        shapes) through every registered engine
@@ -100,7 +101,13 @@ USAGE:
                                                        conserves jobs (admitted = completed
                                                        xor failed), replays byte-identically,
                                                        and a zero-rate stream is a no-op;
-                                                       every run is capped by a
+                                                       --dynamic adds the runtime-spawning
+                                                       axis (spawn-plan matrix per engine):
+                                                       every dynamic expansion must be
+                                                       byte-identical to the statically
+                                                       pre-expanded equivalent DAG, and a
+                                                       zero-rate plan bit-identical to
+                                                       plan-free; every run is capped by a
                                                        sim event budget (livelock watchdog);
                                                        cases fan out across --threads workers
                                                        with case-ordered (byte-identical)
@@ -159,6 +166,8 @@ OPTIONS:
                     faults.max_retries under --set for single runs)
   --crashes         sweep the durable-KVS crash-recovery axis (verify)
   --serving         sweep the multi-tenant serving axis (verify)
+  --dynamic         sweep the dynamic-DAG runtime-spawning axis (verify;
+                    see spawn.* under --set for single runs)
   --verbose         per-case lines (verify; streamed live with
                     --threads 1, printed in case order otherwise)
 
@@ -167,6 +176,17 @@ CONFIG KEYS (selection; any key accepts --set):
                                           (p_fail must be in [0, 1])
   crashes.p_crash / crashes.max_crashes   per-op shard-crash plan
                                           (p_crash must be in [0, 1])
+  spawn.p_spawn                           per-task runtime-spawn probability
+                                          (must be in [0, 1]; 0 = static
+                                          DAG, a guaranteed bit-identical
+                                          no-op)
+  spawn.fanout                            children per expanding task
+                                          (must be in [1, 1024])
+  spawn.depth                             spawn recursion depth
+                                          (must be in [1, 8])
+  spawn.task_dur_s                        spawned-task duration (s; must be
+                                          non-negative; 0 = no-op subtasks)
+  spawn.out_bytes                         spawned-task output size (bytes)
   storage.wal_fsync_s                     synchronous WAL append cost (s)
   storage.snapshot_every_ops              snapshot cadence in WAL records
                                           (0 = never snapshot)

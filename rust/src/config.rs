@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::dag::SpawnPlan;
 use crate::platform::faults::{FaultPlan, ShardCrashPlan};
 use crate::serving::{ArrivalMode, ArrivalPlan, FairnessPolicy, TenantPlan};
 use crate::sim::{secs, CalendarKind, Sim, Time};
@@ -326,6 +327,11 @@ pub struct Config {
     /// dedicated salted stream, so the zero-rate default is
     /// bit-identical to having no plan at all.
     pub crashes: ShardCrashPlan,
+    /// Runtime task-spawning plan (dynamic DAGs): completing tasks may
+    /// emit subtask trees, appended through the delta-graph layer.
+    /// Draws come from a dedicated salted stream, so the zero-rate
+    /// default is bit-identical to having no plan at all.
+    pub spawn: SpawnPlan,
     /// Job-arrival plan for the multi-tenant serving layer (`wukong
     /// serve`). Single-DAG engine runs never consult it, and its draws
     /// come from a dedicated salted stream, so any value here leaves
@@ -357,6 +363,7 @@ impl Default for Config {
             compute: ComputeConfig::default(),
             faults: FaultPlan::default(),
             crashes: ShardCrashPlan::default(),
+            spawn: SpawnPlan::default(),
             arrival: ArrivalPlan::default(),
             tenants: TenantPlan::default(),
             sim: SimConfig::default(),
@@ -466,6 +473,29 @@ impl Config {
             "crashes.max_crashes" => {
                 self.crashes.max_crashes = f()? as u32
             }
+            "spawn.p_spawn" => self.spawn.p_spawn = prob(path, f()?)?,
+            "spawn.fanout" => {
+                let v = f()?;
+                if !(1.0..=1024.0).contains(&v) {
+                    return Err(format!(
+                        "{path}: fanout must be in [1, 1024], got {v}"
+                    ));
+                }
+                self.spawn.fanout = v as u32;
+            }
+            "spawn.depth" => {
+                let v = f()?;
+                if !(1.0..=8.0).contains(&v) {
+                    return Err(format!(
+                        "{path}: depth must be in [1, 8], got {v}"
+                    ));
+                }
+                self.spawn.depth = v as u32;
+            }
+            "spawn.task_dur_s" => {
+                self.spawn.task_dur_s = nonneg(path, f()?)?
+            }
+            "spawn.out_bytes" => self.spawn.out_bytes = f()? as u64,
             "arrival.mode" => {
                 self.arrival.mode = match value {
                     "poisson" => ArrivalMode::Poisson,
@@ -702,6 +732,52 @@ mod tests {
         // Boundary values are fine.
         c.set("faults.p_fail", "1").unwrap();
         c.set("crashes.p_crash", "0").unwrap();
+    }
+
+    #[test]
+    fn spawn_keys_work() {
+        let mut c = Config::default();
+        assert!(!c.spawn.is_live()); // dynamic expansion is opt-in
+        c.set("spawn.p_spawn", "0.25").unwrap();
+        c.set("spawn.fanout", "4").unwrap();
+        c.set("spawn.depth", "3").unwrap();
+        c.set("spawn.task_dur_s", "0.005").unwrap();
+        c.set("spawn.out_bytes", "65536").unwrap();
+        assert_eq!(c.spawn.p_spawn, 0.25);
+        assert_eq!(c.spawn.fanout, 4);
+        assert_eq!(c.spawn.depth, 3);
+        assert_eq!(c.spawn.task_dur_s, 0.005);
+        assert_eq!(c.spawn.out_bytes, 65_536);
+        assert!(c.spawn.is_live());
+    }
+
+    #[test]
+    fn bad_spawn_values_rejected_at_parse_time() {
+        let mut c = Config::default();
+        let err = c.set("spawn.p_spawn", "1.5").unwrap_err();
+        assert!(
+            err.contains("spawn.p_spawn") && err.contains("must be in [0, 1]"),
+            "{err}"
+        );
+        let err = c.set("spawn.fanout", "0").unwrap_err();
+        assert!(
+            err.contains("spawn.fanout") && err.contains("[1, 1024]"),
+            "{err}"
+        );
+        let err = c.set("spawn.fanout", "2000").unwrap_err();
+        assert!(err.contains("spawn.fanout"), "{err}");
+        let err = c.set("spawn.depth", "9").unwrap_err();
+        assert!(
+            err.contains("spawn.depth") && err.contains("[1, 8]"),
+            "{err}"
+        );
+        let err = c.set("spawn.task_dur_s", "-1").unwrap_err();
+        assert!(
+            err.contains("spawn.task_dur_s") && err.contains("non-negative"),
+            "{err}"
+        );
+        // Rejected overrides leave the config untouched.
+        assert_eq!(c.spawn, SpawnPlan::default());
     }
 
     #[test]

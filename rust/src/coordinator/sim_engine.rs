@@ -20,9 +20,9 @@
 use std::collections::{HashSet, VecDeque};
 
 use crate::config::Config;
-use crate::dag::{Dag, TaskId, TaskNode};
+use crate::dag::{Dag, SpawnState, TaskId, TaskNode};
 use crate::metrics::{RunMetrics, TaskOutcome};
-use crate::platform::faults::{propagate_failures, FaultPlan, FaultStream};
+use crate::platform::faults::{FaultPlan, FaultStream};
 use crate::platform::LambdaService;
 use crate::sim::{
     secs, to_secs, FifoResource, Handler, Sim, TaskScratch, Time,
@@ -102,6 +102,11 @@ struct World<'a> {
     /// Tasks whose own retry budget was exhausted (§3.6 failure report);
     /// everything downstream cascades to `Failed` at finalize.
     direct_failed: Vec<TaskId>,
+    /// Runtime-spawning state (`cfg.spawn`): which tasks emit child
+    /// subtasks on completion, with staged ids pre-laid-out so the run
+    /// is byte-identical to the pre-expanded static DAG. Inert plans
+    /// cost one branch per completion.
+    spawn: SpawnState,
 }
 
 impl Handler for World<'_> {
@@ -130,8 +135,14 @@ impl Handler for World<'_> {
 }
 
 impl World<'_> {
-    fn node(&self, t: TaskId) -> &TaskNode {
-        self.dag.task(t)
+    /// Task node, spawn-aware: staged (runtime-spawned) ids resolve
+    /// through the spawn state; base ids through the DAG.
+    fn node(&self, t: TaskId) -> TaskNode {
+        if self.spawn.is_staged(t) {
+            self.spawn.node(t)
+        } else {
+            *self.dag.task(t)
+        }
     }
 
     fn compute_time(&self, t: TaskId) -> Time {
@@ -240,14 +251,23 @@ fn process(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
 
     // Fetch phase: sequential reads of non-resident parent outputs.
     // (`dag` is an independent shared borrow: the CSR parent slice is
-    // iterated directly while the world mutates — no clone.)
+    // iterated directly while the world mutates — no clone.) Staged
+    // tasks have exactly one parent — their spawner — read through a
+    // stack-local slice so the loop body is shared.
     let dag = w.dag;
     let mut cursor = sim.now();
-    for &p in dag.parents(t) {
+    let pbuf;
+    let parents: &[TaskId] = if w.spawn.is_staged(t) {
+        pbuf = [w.spawn.parent_of(t)];
+        &pbuf
+    } else {
+        dag.parents(t)
+    };
+    for &p in parents {
         if w.execs[eid].cache.contains(&p) {
             continue;
         }
-        let bytes = dag.task(p).out_bytes;
+        let bytes = w.node(p).out_bytes;
         let floor = w.scratch.slot(p).avail_at;
         cursor = w.kvs_read(eid, cursor, TaskNode::obj_key(p), bytes, floor);
         let sd = w.serde_time(bytes);
@@ -255,8 +275,8 @@ fn process(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId) {
         cursor += sd;
         w.execs[eid].cache.insert(p);
     }
-    // External input partition (leaf tasks).
-    let ext = dag.task(t).input_bytes;
+    // External input partition (leaf tasks; staged tasks carry none).
+    let ext = w.node(t).input_bytes;
     if ext > 0 {
         cursor = w.kvs_read(eid, cursor, TaskNode::input_key(t), ext, 0);
         let sd = w.serde_time(ext);
@@ -277,10 +297,16 @@ fn finish_task(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
     w.metrics.tasks_executed += 1;
     w.execs[eid].cache.insert(t);
 
-    if w.dag.children(t).is_empty() {
+    // Runtime spawning: a completing task may emit child subtasks, which
+    // enter dispatch exactly as if declared up front (sealed-DAG child
+    // order is base children first, then staged — dispatch preserves it).
+    let spawned = w.spawn.spawned_children(t);
+    let childless = spawned.is_empty()
+        && (w.spawn.is_staged(t) || w.dag.children(t).is_empty());
+    if childless {
         publish_final(w, sim, eid, t);
     } else {
-        dispatch(w, sim, eid, t);
+        dispatch(w, sim, eid, t, &spawned);
     }
 }
 
@@ -299,10 +325,25 @@ fn publish_final(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
 
 /// Dynamic scheduling after task `t` (§3.3): becomes / invokes /
 /// clustering / delayed I/O, with fan-in ownership via MDS counters.
-fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
+/// `spawned` carries `t`'s runtime-spawned children; they flow through
+/// every branch after the base children, matching the sealed DAG's child
+/// order. Spawned children have in-degree 1 (their spawner), so they
+/// always take the fast claim path and never touch the MDS counters —
+/// in the dynamic run and in the pre-expanded one alike.
+fn dispatch(
+    w: &mut World<'_>,
+    sim: &mut Sim<Ev>,
+    eid: ExecId,
+    t: TaskId,
+    spawned: &[TaskId],
+) {
     let dag = w.dag;
-    let children = dag.children(t);
-    let out_bytes = dag.task(t).out_bytes;
+    let children: &[TaskId] = if w.spawn.is_staged(t) {
+        &[] // staged tasks have no base children
+    } else {
+        dag.children(t)
+    };
+    let out_bytes = w.node(t).out_bytes;
     let big = w.knobs.use_clustering && out_bytes > w.knobs.clustering_threshold;
     let mut cursor = sim.now();
 
@@ -314,11 +355,12 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
         // Clustering path: hold the large object; run every ready target
         // here; for unready fan-ins, the elected holder watches (delayed
         // I/O) while every other parent stores + increments immediately.
-        for &c in children {
+        for &c in children.iter().chain(spawned) {
             if w.scratch.slot(c).claimed() {
                 continue;
             }
-            let indeg = dag.indegree(c);
+            let indeg =
+                if w.spawn.is_staged(c) { 1 } else { dag.indegree(c) };
             if indeg <= 1 {
                 w.scratch.slot_mut(c).set_claimed();
                 ready.push(c);
@@ -368,11 +410,12 @@ fn dispatch(w: &mut World<'_>, sim: &mut Sim<Ev>, eid: ExecId, t: TaskId) {
         // inline. Consumers' reads are floored at our write completion
         // (`avail_at`), modeling the real system's blocking poll reads.
         let mut any_unready = false;
-        for &c in children {
+        for &c in children.iter().chain(spawned) {
             if w.scratch.slot(c).claimed() {
                 continue;
             }
-            let indeg = dag.indegree(c);
+            let indeg =
+                if w.spawn.is_staged(c) { 1 } else { dag.indegree(c) };
             if indeg <= 1 {
                 w.scratch.slot_mut(c).set_claimed();
                 ready.push(c);
@@ -561,8 +604,14 @@ pub fn run_wukong_faulty(
         fanout_delegation_threshold: cfg.wukong.fanout_delegation_threshold,
         arg_inline_max: cfg.storage.arg_inline_max,
     };
-    let n = dag.len();
-    let n_sinks = dag.sinks().len();
+    // Epoch open: freeze the run's spawn expansion (own salted stream —
+    // inert plans draw nothing) and size every per-task structure to the
+    // full expanded count, exactly what a pre-expanded run allocates.
+    let spawn = SpawnState::for_run(dag, cfg.spawn, seed);
+    let n = spawn.total_len();
+    let n_sinks = spawn.sinks_after(dag);
+    let mut scratch = TaskScratch::new(dag.len());
+    scratch.grow_to(n);
     let mut w = World {
         knobs,
         dag,
@@ -571,13 +620,14 @@ pub fn run_wukong_faulty(
         lambda: LambdaService::new(cfg.lambda, rng.fork(1)),
         pool: InvokerPool::new(cfg.wukong.n_invokers),
         execs: Vec::new(),
-        scratch: TaskScratch::new(n),
+        scratch,
         metrics: RunMetrics::default(),
         sinks_done: 0,
         n_sinks,
         finish: None,
         faults: FaultStream::for_run(faults, seed),
         direct_failed: Vec::new(),
+        spawn,
         cfg,
     };
     let mut sim: Sim<Ev> = cfg.sim.build();
@@ -607,7 +657,7 @@ pub fn run_wukong_faulty(
     // per_task_exec by `wukong verify --faults`).
     let mut outcome = vec![TaskOutcome::Completed; n];
     w.metrics.failed_tasks =
-        propagate_failures(dag, &w.direct_failed, &mut outcome);
+        w.spawn.propagate_failures(dag, &w.direct_failed, &mut outcome);
     w.metrics.per_task_attempts = w.scratch.attempts_vec();
     w.metrics.per_task_outcome = outcome;
     w.metrics.kvs = w.kvs.metrics;
@@ -817,6 +867,59 @@ mod tests {
         scrubbed.durability.replayed_ops = 0;
         scrubbed.durability.stall_s = 0.0;
         assert_eq!(base.metrics, scrubbed);
+    }
+
+    #[test]
+    fn spawned_subtasks_run_and_match_the_pre_expanded_dag() {
+        // p = 1, fanout 2, depth 2: every task emits 6 subtasks. The
+        // dynamic run must be byte-identical to executing the statically
+        // pre-expanded DAG under an inert plan.
+        let dag = diamond();
+        let mut cfg = Config::default();
+        cfg.spawn = crate::dag::SpawnPlan::recursive(1.0, 2, 2);
+        let dy = run_wukong(&dag, &cfg, 7);
+        assert_eq!(dy.metrics.tasks_executed, 4 + 4 * 6);
+        assert_eq!(dy.metrics.per_task_exec.len(), 28);
+        let expanded = crate::dag::pre_expand(&dag, cfg.spawn, 7);
+        let st = run_wukong(&expanded, &Config::default(), 7);
+        assert_eq!(dy.metrics, st.metrics);
+        assert_eq!(dy.sim_events, st.sim_events);
+        assert_eq!(dy.peak_pending, st.peak_pending);
+    }
+
+    #[test]
+    fn zero_rate_spawn_plan_is_bit_identical_to_plan_free() {
+        // The spawn stream's bit-identity guard (same regression class
+        // as the fault/crash streams): a zero-rate plan draws nothing.
+        let dag = diamond();
+        let base = run_wukong(&dag, &Config::default(), 7);
+        let mut cfg = Config::default();
+        cfg.spawn = crate::dag::SpawnPlan::with_rate(0.0, 8);
+        let r = run_wukong(&dag, &cfg, 7);
+        assert_eq!(base.metrics, r.metrics);
+        assert_eq!(base.sim_events, r.sim_events);
+        assert_eq!(base.peak_pending, r.peak_pending);
+    }
+
+    #[test]
+    fn failed_spawner_dooms_its_unspawned_subtree() {
+        // Every executor attempt fails: the diamond's leaf exhausts its
+        // budget, so all 4 base tasks AND all 24 staged tasks (which
+        // never spawn) must report Failed — matching the pre-expanded
+        // run's cascade.
+        let dag = diamond();
+        let mut cfg = Config::default();
+        cfg.spawn = crate::dag::SpawnPlan::recursive(1.0, 2, 2);
+        cfg.faults = FaultPlan::with_retries(1.0, 2);
+        let dy = run_wukong(&dag, &cfg, 5);
+        assert_eq!(dy.metrics.tasks_executed, 0);
+        assert_eq!(dy.metrics.failed_tasks, 28);
+        let expanded = crate::dag::pre_expand(&dag, cfg.spawn, 5);
+        let mut st_cfg = Config::default();
+        st_cfg.faults = cfg.faults;
+        let st = run_wukong(&expanded, &st_cfg, 5);
+        assert_eq!(dy.metrics, st.metrics);
+        assert_eq!(dy.sim_events, st.sim_events);
     }
 
     #[test]

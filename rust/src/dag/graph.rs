@@ -9,11 +9,14 @@
 //! `parents(t)`/`children(t)` are contiguous slices the engines iterate
 //! without cloning. Leaves and sinks are computed once at build time.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::fmt::Write as _;
 
 use super::task::{OpKind, TaskId, TaskNode};
 use crate::sim::Time;
+
+/// Sentinel for "no next sibling" in the delta's intrusive child lists.
+const NO_SIB: u32 = u32::MAX;
 
 /// A validated directed acyclic task graph (CSR adjacency layout).
 #[derive(Debug, Clone)]
@@ -168,6 +171,95 @@ impl Dag {
         best
     }
 
+    /// Merge an epoch's staged appends into a fresh flat CSR DAG — the
+    /// epoch *seal*. Steady-state traversal of the sealed DAG is exactly
+    /// as flat as a built-from-scratch one, and two determinism surfaces
+    /// are preserved byte-for-byte:
+    ///
+    /// - the base parent CSR is copied verbatim (engines' fetch loops
+    ///   follow per-node parent order, which a rebuild through
+    ///   `DagBuilder` could not recover — it is global edge-insertion
+    ///   order, not derivable from the graph shape);
+    /// - per-node child order is base children first, then staged
+    ///   children in staged-id order — the exact order dynamic dispatch
+    ///   discovers them in.
+    ///
+    /// Leaves are unchanged (every staged task has a parent); sinks are
+    /// recomputed. Acyclicity holds by construction: `DagDelta::push`
+    /// asserts every staged parent precedes its child, so ids remain a
+    /// topological order of the appended region.
+    pub fn sealed_with(&self, delta: &DagDelta) -> Dag {
+        assert_eq!(
+            delta.base_len(),
+            self.len(),
+            "delta was staged against a different base"
+        );
+        let n = self.len();
+        let total = n + delta.len();
+
+        let mut tasks = self.tasks.clone();
+        tasks.extend_from_slice(&delta.tasks);
+
+        let mut names = self.names.clone();
+        let mut name_off = self.name_off.clone();
+        for s in n..total {
+            let _ = write!(names, "sp{s}");
+            name_off.push(names.len() as u32);
+        }
+
+        // Parents: verbatim base CSR + one parent per staged task.
+        let mut parents = self.parents.clone();
+        let mut parent_off = self.parent_off.clone();
+        for &p in &delta.parents {
+            parents.push(p);
+            parent_off.push(parents.len() as u32);
+        }
+
+        // Children: counting sort over base + staged edges.
+        let mut child_off = vec![0u32; total + 1];
+        for t in 0..n {
+            child_off[t + 1] = self.outdegree(t as TaskId) as u32;
+        }
+        for &p in &delta.parents {
+            child_off[p as usize + 1] += 1;
+        }
+        for i in 0..total {
+            child_off[i + 1] += child_off[i];
+        }
+        let mut children = vec![0 as TaskId; child_off[total] as usize];
+        let mut ccur = vec![0u32; total];
+        for t in 0..n {
+            let s = self.children(t as TaskId);
+            let at = child_off[t] as usize;
+            children[at..at + s.len()].copy_from_slice(s);
+            ccur[t] = (at + s.len()) as u32;
+        }
+        for t in n..total {
+            ccur[t] = child_off[t];
+        }
+        for (i, &p) in delta.parents.iter().enumerate() {
+            children[ccur[p as usize] as usize] = (n + i) as TaskId;
+            ccur[p as usize] += 1;
+        }
+
+        let sinks: Vec<TaskId> = (0..total as TaskId)
+            .filter(|&t| child_off[t as usize] == child_off[t as usize + 1])
+            .collect();
+
+        Dag {
+            name: self.name.clone(),
+            tasks,
+            parents,
+            parent_off,
+            children,
+            child_off,
+            names,
+            name_off,
+            leaves: self.leaves.clone(),
+            sinks,
+        }
+    }
+
     /// Graphviz DOT rendering (debugging / docs).
     pub fn to_dot(&self) -> String {
         let mut s = String::new();
@@ -182,6 +274,130 @@ impl Dag {
         }
         s.push_str("}\n");
         s
+    }
+}
+
+/// An append-only staged-task layer over an epoch-frozen [`Dag`]: the
+/// base CSR stays immutable while runtime-spawned tasks accumulate in the
+/// delta, which answers the same O(1) degree / parent / child queries for
+/// the staged region. At epoch seal, [`Dag::sealed_with`] merges the
+/// delta into a fresh flat CSR so steady-state traversal never pays a
+/// two-level lookup.
+///
+/// Staged tasks have exactly one parent (their spawner — base or an
+/// earlier staged task); per-parent staged children are kept in push
+/// order via an intrusive linked list (O(1) append, no per-parent `Vec`).
+#[derive(Debug, Clone)]
+pub struct DagDelta {
+    base_len: u32,
+    tasks: Vec<TaskNode>,
+    /// Sole parent of each staged task, parallel to `tasks`.
+    parents: Vec<TaskId>,
+    /// Per parent: (first, last, count) of its staged children, in
+    /// staged-index space.
+    child_link: HashMap<TaskId, (u32, u32, u32)>,
+    /// Next staged sibling under the same parent (`NO_SIB` = end).
+    next_sib: Vec<u32>,
+}
+
+impl DagDelta {
+    /// An empty delta staged against `base`.
+    pub fn new(base: &Dag) -> DagDelta {
+        DagDelta {
+            base_len: base.len() as u32,
+            tasks: Vec::new(),
+            parents: Vec::new(),
+            child_link: HashMap::new(),
+            next_sib: Vec::new(),
+        }
+    }
+
+    /// Append a staged task under `parent`; returns its (global) id.
+    /// Parents must precede children, so ids stay a topological order.
+    pub fn push(&mut self, parent: TaskId, node: TaskNode) -> TaskId {
+        let idx = self.tasks.len() as u32;
+        let id = self.base_len + idx;
+        assert!(parent < id, "staged parent must precede its child");
+        self.tasks.push(node);
+        self.parents.push(parent);
+        self.next_sib.push(NO_SIB);
+        match self.child_link.get_mut(&parent) {
+            Some(link) => {
+                self.next_sib[link.1 as usize] = idx;
+                link.1 = idx;
+                link.2 += 1;
+            }
+            None => {
+                self.child_link.insert(parent, (idx, idx, 1));
+            }
+        }
+        id
+    }
+
+    /// Number of staged tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Length of the base this delta is staged against.
+    pub fn base_len(&self) -> usize {
+        self.base_len as usize
+    }
+
+    /// Base + staged task count.
+    pub fn total_len(&self) -> usize {
+        self.base_len as usize + self.tasks.len()
+    }
+
+    /// The staged task's node (`t` must be a staged id).
+    pub fn node(&self, t: TaskId) -> &TaskNode {
+        &self.tasks[(t - self.base_len) as usize]
+    }
+
+    /// The staged task's sole parent.
+    pub fn parent_of(&self, t: TaskId) -> TaskId {
+        self.parents[(t - self.base_len) as usize]
+    }
+
+    /// In-degree contributed by the delta: 1 for staged ids, 0 for base.
+    pub fn indegree(&self, t: TaskId) -> usize {
+        usize::from(t >= self.base_len)
+    }
+
+    /// Out-degree contributed by the delta (staged children of `t`).
+    pub fn outdegree(&self, t: TaskId) -> usize {
+        self.child_link.get(&t).map_or(0, |&(_, _, c)| c as usize)
+    }
+
+    /// Staged children of `t` (base or staged), in push order.
+    pub fn children_of(&self, t: TaskId) -> StagedChildren<'_> {
+        StagedChildren {
+            delta: self,
+            cur: self.child_link.get(&t).map_or(NO_SIB, |&(f, _, _)| f),
+        }
+    }
+}
+
+/// Iterator over a task's staged children (see [`DagDelta::children_of`]).
+pub struct StagedChildren<'a> {
+    delta: &'a DagDelta,
+    cur: u32,
+}
+
+impl Iterator for StagedChildren<'_> {
+    type Item = TaskId;
+
+    fn next(&mut self) -> Option<TaskId> {
+        if self.cur == NO_SIB {
+            return None;
+        }
+        let idx = self.cur;
+        self.cur = self.delta.next_sib[idx as usize];
+        Some(self.delta.base_len + idx)
     }
 }
 
@@ -437,5 +653,89 @@ mod tests {
         let dot = d.to_dot();
         assert_eq!(dot.matches("->").count(), 4);
         assert!(dot.contains("label=\"a\""));
+    }
+
+    fn node(out_bytes: u64) -> TaskNode {
+        TaskNode {
+            op: OpKind::Noop,
+            flops: 0.0,
+            out_bytes,
+            input_bytes: 0,
+            dur_override: None,
+        }
+    }
+
+    #[test]
+    fn delta_answers_degree_parent_child_queries() {
+        let base = diamond();
+        let mut delta = DagDelta::new(&base);
+        let s0 = delta.push(1, node(8)); // staged under base task 1
+        let s1 = delta.push(1, node(8));
+        let s2 = delta.push(s0, node(8)); // staged under a staged task
+        assert_eq!((s0, s1, s2), (4, 5, 6));
+        assert_eq!(delta.len(), 3);
+        assert_eq!(delta.total_len(), 7);
+        assert_eq!(delta.parent_of(s0), 1);
+        assert_eq!(delta.parent_of(s2), s0);
+        assert_eq!(delta.indegree(1), 0); // base ids gain no delta parents
+        assert_eq!(delta.indegree(s0), 1);
+        assert_eq!(delta.outdegree(1), 2);
+        assert_eq!(delta.outdegree(s0), 1);
+        assert_eq!(delta.outdegree(3), 0);
+        assert_eq!(delta.children_of(1).collect::<Vec<_>>(), vec![s0, s1]);
+        assert_eq!(delta.children_of(s0).collect::<Vec<_>>(), vec![s2]);
+        assert_eq!(delta.children_of(s2).count(), 0);
+    }
+
+    #[test]
+    fn seal_merges_base_first_then_staged_in_id_order() {
+        let base = diamond();
+        let mut delta = DagDelta::new(&base);
+        let s0 = delta.push(1, node(8));
+        let s1 = delta.push(1, node(8));
+        let s2 = delta.push(s0, node(8));
+        let sealed = base.sealed_with(&delta);
+        assert_eq!(sealed.len(), 7);
+        assert_eq!(sealed.n_edges(), base.n_edges() + 3);
+        // Base parent CSR verbatim; staged tasks get their single parent.
+        for t in 0..base.len() as TaskId {
+            assert_eq!(sealed.parents(t), base.parents(t));
+        }
+        assert_eq!(sealed.parents(s0), &[1]);
+        assert_eq!(sealed.parents(s2), &[s0]);
+        // Child order: base children first, then staged in id order.
+        assert_eq!(sealed.children(1), &[3, s0, s1]);
+        assert_eq!(sealed.children(s0), &[s2]);
+        // Leaves unchanged; sinks recomputed over the merged graph.
+        assert_eq!(sealed.leaves(), base.leaves());
+        assert_eq!(sealed.sinks(), &[3, s1, s2]);
+        // Names: base names intact, staged tasks named by id.
+        assert_eq!(sealed.task_name(0), "a");
+        assert_eq!(sealed.task_name(s0), "sp4");
+        assert_eq!(sealed.task_name(s2), "sp6");
+        // The merged graph is still a valid topology.
+        assert_eq!(sealed.topo_order().len(), 7);
+    }
+
+    #[test]
+    fn sealing_an_empty_delta_reproduces_the_base() {
+        let base = diamond();
+        let sealed = base.sealed_with(&DagDelta::new(&base));
+        assert_eq!(sealed.len(), base.len());
+        assert_eq!(sealed.leaves(), base.leaves());
+        assert_eq!(sealed.sinks(), base.sinks());
+        for t in 0..base.len() as TaskId {
+            assert_eq!(sealed.children(t), base.children(t));
+            assert_eq!(sealed.parents(t), base.parents(t));
+            assert_eq!(sealed.task_name(t), base.task_name(t));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "staged parent must precede its child")]
+    fn delta_rejects_forward_parents() {
+        let base = diamond();
+        let mut delta = DagDelta::new(&base);
+        delta.push(9, node(8)); // parent id beyond the staged id
     }
 }

@@ -6,7 +6,9 @@
 //! plus the real engine) execute it.
 
 pub mod graph;
+pub mod spawn;
 pub mod task;
 
-pub use graph::{Dag, DagBuilder};
+pub use graph::{Dag, DagBuilder, DagDelta};
+pub use spawn::{pre_expand, SpawnPlan, SpawnState, SPAWN_STREAM_SALT};
 pub use task::{OpKind, TaskId, TaskNode};

@@ -1,0 +1,515 @@
+//! Runtime task spawning (dynamic DAGs): a `SpawnPlan` drawn from its own
+//! salted RNG stream decides — per base task, at run start — whether that
+//! task emits a recursive subtree of child tasks when it completes.
+//!
+//! Determinism contract (the differential gate in `tests/dynamic.rs`):
+//! the expansion is a pure function of `(base dag, plan, seed)` — never of
+//! completion order — so running a plan *dynamically* must be
+//! byte-identical to running the statically pre-expanded DAG
+//! ([`pre_expand`]). Two properties make that hold:
+//!
+//! 1. **Own stream.** Expansion decisions come from
+//!    `Rng::new(seed ^ SPAWN_STREAM_SALT)` (the `FaultStream` /
+//!    `CrashStream` pattern), drawn once per base task in task-id order at
+//!    [`SpawnState::for_run`]. Zero-rate plans draw nothing, so plan-free
+//!    and zero-rate runs are bit-identical.
+//! 2. **DFS id pre-layout.** Spawned tasks get ids assigned up front: the
+//!    expanding base task `b` (in id order) owns a contiguous block of
+//!    staged ids laid out in preorder DFS, so every id-indexed per-task
+//!    vector (`per_task_exec`, outcomes, MDS/KVS key spaces) matches the
+//!    pre-expanded DAG exactly, regardless of when tasks actually spawn.
+//!
+//! Spawned tasks recurse deterministically: a staged task at depth `d`
+//! spawns `fanout` children iff `d < depth` — no further random draws, so
+//! a single f64 per base task fully determines the expansion.
+
+use crate::dag::graph::{Dag, DagDelta};
+use crate::dag::{OpKind, TaskId, TaskNode};
+use crate::metrics::TaskOutcome;
+use crate::platform::faults;
+use crate::sim::secs;
+use crate::util::Rng;
+
+/// Seed salt for the spawn-decision stream (disjoint by construction from
+/// `FAULT_STREAM_SALT` / `CRASH_STREAM_SALT` / the arrival stream).
+pub const SPAWN_STREAM_SALT: u64 = 0x5BA3_9D0C_7E21_AF58;
+
+/// A runtime-spawning plan: with probability `p_spawn`, a completing base
+/// task emits `fanout` children, recursively to `depth` levels (so an
+/// expanding task contributes `fanout + fanout² + … + fanout^depth`
+/// subtasks). The default plan is inert (`p_spawn = 0`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpawnPlan {
+    /// Per-base-task probability of expanding. `0.0` disables spawning
+    /// and draws nothing from the RNG stream.
+    pub p_spawn: f64,
+    /// Children per expanding task (validated to `1..=1024` by `--set`).
+    pub fanout: u32,
+    /// Recursion depth (validated to `1..=8` by `--set`).
+    pub depth: u32,
+    /// Fixed duration of each spawned task, seconds.
+    pub task_dur_s: f64,
+    /// Output object size of each spawned task.
+    pub out_bytes: u64,
+}
+
+impl Default for SpawnPlan {
+    fn default() -> Self {
+        SpawnPlan {
+            p_spawn: 0.0,
+            fanout: 2,
+            depth: 1,
+            task_dur_s: 0.0,
+            out_bytes: 0,
+        }
+    }
+}
+
+impl SpawnPlan {
+    /// A single-level plan spawning `fanout` children with rate `p`.
+    pub fn with_rate(p_spawn: f64, fanout: u32) -> SpawnPlan {
+        SpawnPlan {
+            p_spawn,
+            fanout,
+            ..SpawnPlan::default()
+        }
+    }
+
+    /// A recursive plan: rate `p`, `fanout` children, `depth` levels.
+    pub fn recursive(p_spawn: f64, fanout: u32, depth: u32) -> SpawnPlan {
+        SpawnPlan {
+            p_spawn,
+            fanout,
+            depth,
+            ..SpawnPlan::default()
+        }
+    }
+
+    /// Can this plan ever spawn anything?
+    pub fn is_live(&self) -> bool {
+        self.p_spawn > 0.0 && self.fanout >= 1 && self.depth >= 1
+    }
+
+    /// The `TaskNode` every spawned task carries.
+    fn node(&self) -> TaskNode {
+        TaskNode {
+            op: if self.task_dur_s > 0.0 {
+                OpKind::Sleep
+            } else {
+                OpKind::Noop
+            },
+            flops: 0.0,
+            out_bytes: self.out_bytes,
+            input_bytes: 0,
+            dur_override: Some(secs(self.task_dur_s)),
+        }
+    }
+}
+
+/// The frozen expansion of one run: which base tasks expand, and the DFS
+/// id layout of every staged (to-be-spawned) task. Built once at run
+/// start; engines query it with O(1)/O(fanout) calls on the hot path.
+pub struct SpawnState {
+    plan: SpawnPlan,
+    base_len: usize,
+    total: usize,
+    /// Per base task: does it expand? Empty when the plan is inert.
+    expands: Vec<bool>,
+    /// Per base task: first staged id of its subtree (valid iff expands).
+    block_start: Vec<u32>,
+    /// `stride[d]` = size of the subtree rooted at a staged task of depth
+    /// `d` including itself; `stride[depth] = 1`. Index 0 unused.
+    stride: Vec<u64>,
+    /// Per staged task (indexed by `id - base_len`): its spawner.
+    stage_parent: Vec<TaskId>,
+    /// Per staged task: its depth in the spawned subtree (1..=depth).
+    stage_depth: Vec<u8>,
+}
+
+impl SpawnState {
+    /// Draw the run's expansion decisions: one `f64` per base task, in
+    /// task-id order, from the salted spawn stream. Inert plans draw
+    /// nothing (bit-identity with plan-free runs).
+    pub fn for_run(dag: &Dag, plan: SpawnPlan, seed: u64) -> SpawnState {
+        let base_len = dag.len();
+        if !plan.is_live() {
+            return SpawnState {
+                plan,
+                base_len,
+                total: base_len,
+                expands: Vec::new(),
+                block_start: Vec::new(),
+                stride: Vec::new(),
+                stage_parent: Vec::new(),
+                stage_depth: Vec::new(),
+            };
+        }
+        let mut rng = Rng::new(seed ^ SPAWN_STREAM_SALT);
+        let expands: Vec<bool> =
+            (0..base_len).map(|_| rng.f64() < plan.p_spawn).collect();
+
+        // stride[d]: staged subtree size rooted at depth d (incl. root).
+        let depth = plan.depth as usize;
+        let f = plan.fanout as u64;
+        let mut stride = vec![0u64; depth + 1];
+        stride[depth] = 1;
+        for d in (1..depth).rev() {
+            stride[d] = 1 + f
+                .checked_mul(stride[d + 1])
+                .expect("spawn plan overflows task-id space");
+        }
+        let per_root = f
+            .checked_mul(stride[1])
+            .expect("spawn plan overflows task-id space");
+
+        let staged: u64 =
+            expands.iter().filter(|&&e| e).count() as u64 * per_root;
+        let total = base_len as u64 + staged;
+        assert!(
+            total <= u32::MAX as u64,
+            "spawn plan expands past the u32 task-id space ({total} tasks)"
+        );
+
+        let mut st = SpawnState {
+            plan,
+            base_len,
+            total: total as usize,
+            expands,
+            block_start: vec![0; base_len],
+            stride,
+            stage_parent: vec![0; staged as usize],
+            stage_depth: vec![0; staged as usize],
+        };
+        let mut next = base_len as u32;
+        for b in 0..base_len {
+            if !st.expands[b] {
+                continue;
+            }
+            st.block_start[b] = next;
+            st.fill(b as TaskId, 1, next);
+            next += per_root as u32;
+        }
+        st
+    }
+
+    /// Preorder-DFS layout: children of `parent` at depth `d` occupy
+    /// `first + i*stride[d]`, each immediately followed by its subtree.
+    fn fill(&mut self, parent: TaskId, d: usize, first: u32) {
+        let f = self.plan.fanout;
+        for i in 0..f {
+            let id = first + (i as u64 * self.stride[d]) as u32;
+            self.stage_parent[id as usize - self.base_len] = parent;
+            self.stage_depth[id as usize - self.base_len] = d as u8;
+            if d < self.plan.depth as usize {
+                self.fill(id, d + 1, id + 1);
+            }
+        }
+    }
+
+    pub fn plan(&self) -> SpawnPlan {
+        self.plan
+    }
+
+    /// Does this run ever spawn? (Live plan; expansion may still be empty
+    /// if no base task drew below `p_spawn` — queries stay correct.)
+    pub fn is_live(&self) -> bool {
+        self.plan.is_live()
+    }
+
+    pub fn base_len(&self) -> usize {
+        self.base_len
+    }
+
+    /// Base + staged task count: the length every per-task structure is
+    /// sized to at run start (epoch-granularity growth — staged ids are
+    /// pre-laid-out, so sizing once at the epoch open is exact).
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    pub fn staged_len(&self) -> usize {
+        self.total - self.base_len
+    }
+
+    /// Is `t` a staged (runtime-spawned) task?
+    pub fn is_staged(&self, t: TaskId) -> bool {
+        (t as usize) >= self.base_len
+    }
+
+    /// The spawner of staged task `t` (its sole parent).
+    pub fn parent_of(&self, t: TaskId) -> TaskId {
+        self.stage_parent[t as usize - self.base_len]
+    }
+
+    /// The `TaskNode` of staged task `t` (all staged tasks share the
+    /// plan's shape).
+    pub fn node(&self, _t: TaskId) -> TaskNode {
+        self.plan.node()
+    }
+
+    /// Children spawned when `t` completes. Empty for non-expanding base
+    /// tasks, terminal-depth staged tasks, and inert plans (no alloc).
+    pub fn spawned_children(&self, t: TaskId) -> Vec<TaskId> {
+        if self.expands.is_empty() {
+            return Vec::new();
+        }
+        let f = self.plan.fanout as usize;
+        if (t as usize) < self.base_len {
+            if !self.expands[t as usize] {
+                return Vec::new();
+            }
+            let s = self.block_start[t as usize];
+            (0..f).map(|i| s + (i as u64 * self.stride[1]) as u32).collect()
+        } else {
+            let d = self.stage_depth[t as usize - self.base_len] as usize;
+            if d >= self.plan.depth as usize {
+                return Vec::new();
+            }
+            let first = t + 1;
+            (0..f)
+                .map(|i| first + (i as u64 * self.stride[d + 1]) as u32)
+                .collect()
+        }
+    }
+
+    /// The contiguous staged block that can never run once `t` fails:
+    /// `t`'s entire staged subtree (empty for non-expanding tasks).
+    fn staged_block_of(&self, t: TaskId) -> (u32, u64) {
+        if self.expands.is_empty() {
+            return (0, 0);
+        }
+        if (t as usize) < self.base_len {
+            if !self.expands[t as usize] {
+                return (0, 0);
+            }
+            let per_root = self.plan.fanout as u64 * self.stride[1];
+            (self.block_start[t as usize], per_root)
+        } else {
+            let d = self.stage_depth[t as usize - self.base_len] as usize;
+            (t + 1, self.stride[d] - 1)
+        }
+    }
+
+    /// Sink count of the expanded DAG: base sinks that don't expand, plus
+    /// `fanout^depth` terminal staged tasks per expanding base task.
+    /// Matches `pre_expand(..).sinks().len()` exactly (unit-tested).
+    pub fn sinks_after(&self, dag: &Dag) -> usize {
+        if self.expands.is_empty() {
+            return dag.sinks().len();
+        }
+        let still_sinks = dag
+            .sinks()
+            .iter()
+            .filter(|&&s| !self.expands[s as usize])
+            .count();
+        let expanding = self.expands.iter().filter(|&&e| e).count();
+        let terminals = (self.plan.fanout as u64)
+            .checked_pow(self.plan.depth)
+            .expect("spawn plan overflows sink count") as usize;
+        still_sinks + expanding * terminals
+    }
+
+    /// Spawn-aware failure cascade: like
+    /// [`faults::propagate_failures`], but a failed task additionally
+    /// dooms its staged subtree (which can never spawn). Equals the plain
+    /// cascade over the pre-expanded DAG (the differential suite's
+    /// outcome check). Idempotent; returns only newly-failed counts.
+    pub fn propagate_failures(
+        &self,
+        dag: &Dag,
+        direct: &[TaskId],
+        outcome: &mut [TaskOutcome],
+    ) -> u64 {
+        if !self.is_live() {
+            return faults::propagate_failures(dag, direct, outcome);
+        }
+        let mut newly = 0u64;
+        let mut stack: Vec<TaskId> = direct.to_vec();
+        while let Some(t) = stack.pop() {
+            if outcome[t as usize] == TaskOutcome::Failed {
+                continue;
+            }
+            outcome[t as usize] = TaskOutcome::Failed;
+            newly += 1;
+            let (start, count) = self.staged_block_of(t);
+            for s in start as u64..start as u64 + count {
+                let o = &mut outcome[s as usize];
+                if *o != TaskOutcome::Failed {
+                    *o = TaskOutcome::Failed;
+                    newly += 1;
+                }
+            }
+            if (t as usize) < self.base_len {
+                for &c in dag.children(t) {
+                    if outcome[c as usize] != TaskOutcome::Failed {
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+        newly
+    }
+
+    /// Materialize the expansion as a staged-append delta over `dag`
+    /// (pushed in id order, so per-parent child order matches dynamic
+    /// dispatch order exactly).
+    pub fn delta(&self, dag: &Dag) -> DagDelta {
+        let mut delta = DagDelta::new(dag);
+        for s in self.base_len..self.total {
+            let id = delta.push(self.parent_of(s as TaskId), self.plan.node());
+            debug_assert_eq!(id as usize, s);
+        }
+        delta
+    }
+}
+
+/// The statically pre-expanded equivalent of running `plan` dynamically
+/// on `dag` with `seed`: the differential suite's reference DAG.
+pub fn pre_expand(dag: &Dag, plan: SpawnPlan, seed: u64) -> Dag {
+    let spawn = SpawnState::for_run(dag, plan, seed);
+    dag.sealed_with(&spawn.delta(dag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DagBuilder;
+
+    fn diamond() -> Dag {
+        let mut b = DagBuilder::new("d");
+        let a = b.task("a", OpKind::Generic, 1e6, 100);
+        let x = b.task("x", OpKind::Generic, 1e6, 100);
+        let y = b.task("y", OpKind::Generic, 1e6, 100);
+        let d = b.task("d", OpKind::Generic, 1e6, 100);
+        b.edge(a, x).edge(a, y).edge(x, d).edge(y, d);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn inert_plans_draw_nothing_and_stage_nothing() {
+        let dag = diamond();
+        let st = SpawnState::for_run(&dag, SpawnPlan::default(), 7);
+        assert!(!st.is_live());
+        assert_eq!(st.total_len(), dag.len());
+        assert_eq!(st.staged_len(), 0);
+        assert_eq!(st.sinks_after(&dag), dag.sinks().len());
+        for t in 0..dag.len() as TaskId {
+            assert!(st.spawned_children(t).is_empty());
+        }
+    }
+
+    #[test]
+    fn expansion_is_a_pure_function_of_plan_and_seed() {
+        let dag = diamond();
+        let plan = SpawnPlan::recursive(0.7, 2, 2);
+        let a = SpawnState::for_run(&dag, plan, 11);
+        let b = SpawnState::for_run(&dag, plan, 11);
+        assert_eq!(a.total_len(), b.total_len());
+        for t in 0..a.total_len() as TaskId {
+            assert_eq!(a.spawned_children(t), b.spawned_children(t));
+        }
+        // A different seed draws a (generally) different expansion.
+        let c = SpawnState::for_run(&dag, SpawnPlan::recursive(0.5, 2, 2), 1);
+        let d = SpawnState::for_run(&dag, SpawnPlan::recursive(0.5, 2, 2), 2);
+        assert!(
+            (0..dag.len()).any(|t| {
+                c.spawned_children(t as TaskId)
+                    != d.spawned_children(t as TaskId)
+            }) || c.staged_len() == d.staged_len()
+        );
+    }
+
+    #[test]
+    fn dfs_layout_is_contiguous_per_expanding_task() {
+        let dag = diamond();
+        // p = 1: every base task expands, fanout 2, depth 2 → each base
+        // task owns 2 + 4 = 6 staged ids.
+        let st = SpawnState::for_run(&dag, SpawnPlan::recursive(1.0, 2, 2), 3);
+        assert_eq!(st.staged_len(), 4 * 6);
+        assert_eq!(st.total_len(), 4 + 24);
+        for b in 0..4u32 {
+            let kids = st.spawned_children(b);
+            assert_eq!(kids.len(), 2);
+            let block0 = 4 + b * 6;
+            assert_eq!(kids, vec![block0, block0 + 3]);
+            for &k in &kids {
+                assert_eq!(st.parent_of(k), b);
+                let gk = st.spawned_children(k);
+                assert_eq!(gk, vec![k + 1, k + 2]);
+                for &g in &gk {
+                    assert_eq!(st.parent_of(g), k);
+                    assert!(st.spawned_children(g).is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sinks_after_matches_the_pre_expanded_dag() {
+        let dag = diamond();
+        for (p, f, d, seed) in
+            [(1.0, 2, 2, 3u64), (0.5, 3, 1, 9), (0.25, 1, 4, 5), (0.0, 2, 2, 1)]
+        {
+            let plan = SpawnPlan::recursive(p, f, d);
+            let st = SpawnState::for_run(&dag, plan, seed);
+            let expanded = pre_expand(&dag, plan, seed);
+            assert_eq!(st.total_len(), expanded.len());
+            assert_eq!(st.sinks_after(&dag), expanded.sinks().len());
+        }
+    }
+
+    #[test]
+    fn pre_expanded_dag_wires_staged_parents_and_child_order() {
+        let dag = diamond();
+        let plan = SpawnPlan::recursive(1.0, 2, 2);
+        let st = SpawnState::for_run(&dag, plan, 3);
+        let exp = pre_expand(&dag, plan, 3);
+        assert_eq!(exp.len(), st.total_len());
+        // Base structure is untouched: same parents, leaves, per-node
+        // parent order.
+        for t in 0..dag.len() as TaskId {
+            assert_eq!(exp.parents(t), dag.parents(t));
+        }
+        assert_eq!(exp.leaves(), dag.leaves());
+        // Sealed children = base children first, then staged in id order.
+        for t in 0..dag.len() as TaskId {
+            let mut want: Vec<TaskId> = dag.children(t).to_vec();
+            want.extend(st.spawned_children(t));
+            assert_eq!(exp.children(t), &want[..]);
+        }
+        // Staged tasks: single parent = spawner; children per layout.
+        for s in dag.len() as TaskId..exp.len() as TaskId {
+            assert_eq!(exp.parents(s), &[st.parent_of(s)][..]);
+            assert_eq!(exp.children(s), &st.spawned_children(s)[..]);
+            assert_eq!(exp.task(s).out_bytes, plan.out_bytes);
+        }
+    }
+
+    #[test]
+    fn failure_cascade_matches_the_pre_expanded_cascade() {
+        let dag = diamond();
+        let plan = SpawnPlan::recursive(1.0, 2, 2);
+        let st = SpawnState::for_run(&dag, plan, 3);
+        let exp = pre_expand(&dag, plan, 3);
+        for direct in [vec![0u32], vec![1], vec![3], vec![4], vec![1, 2]] {
+            let mut dy = vec![TaskOutcome::Completed; st.total_len()];
+            let mut pre = vec![TaskOutcome::Completed; exp.len()];
+            let n_dy = st.propagate_failures(&dag, &direct, &mut dy);
+            let n_pre = faults::propagate_failures(&exp, &direct, &mut pre);
+            assert_eq!(n_dy, n_pre, "cascade count for {direct:?}");
+            assert_eq!(dy, pre, "cascade set for {direct:?}");
+        }
+    }
+
+    #[test]
+    fn zero_rate_plan_equals_plan_free_expansion() {
+        let dag = diamond();
+        let exp = pre_expand(&dag, SpawnPlan::default(), 42);
+        assert_eq!(exp.len(), dag.len());
+        assert_eq!(exp.sinks(), dag.sinks());
+        for t in 0..dag.len() as TaskId {
+            assert_eq!(exp.children(t), dag.children(t));
+            assert_eq!(exp.parents(t), dag.parents(t));
+        }
+    }
+}

@@ -51,6 +51,10 @@ pub struct EngineCaps {
     /// `wukong verify --faults` only sweeps engines that set this. All
     /// sim-path engines do; the wall-clock real engines do not.
     pub supports_faults: bool,
+    /// Consumes `Config::spawn` (dynamic DAGs): the dynamic axis of
+    /// `wukong verify --dynamic` only sweeps engines that set this. All
+    /// sim-path engines do; the wall-clock real engines do not.
+    pub supports_spawning: bool,
 }
 
 impl Default for EngineCaps {
@@ -61,6 +65,7 @@ impl Default for EngineCaps {
             serverless: true,
             meters_kvs: true,
             supports_faults: true,
+            supports_spawning: true,
         }
     }
 }
@@ -115,6 +120,7 @@ impl Engine for SimWukong {
             serverless: true,
             meters_kvs: true,
             supports_faults: true,
+            supports_spawning: true,
         }
     }
 
@@ -222,6 +228,7 @@ impl Engine for SimDask {
             // the metered KVS; its kvs counters stay 0.
             meters_kvs: false,
             supports_faults: true,
+            supports_spawning: true,
         }
     }
 
@@ -294,6 +301,7 @@ impl Engine for RealWukongEngine {
             serverless: true,
             meters_kvs: true,
             supports_faults: false,
+            supports_spawning: false,
         }
     }
 
@@ -338,8 +346,9 @@ impl Engine for RealNumpywrenEngine {
 
     fn caps(&self) -> EngineCaps {
         EngineCaps {
-            // Wall-clock engine: no fault injection.
+            // Wall-clock engine: no fault injection, no runtime spawning.
             supports_faults: false,
+            supports_spawning: false,
             ..EngineCaps::default()
         }
     }
@@ -469,6 +478,42 @@ mod tests {
     fn every_sim_engine_supports_faults() {
         for e in sim_registry() {
             assert!(e.caps().supports_faults, "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn every_sim_engine_supports_spawning() {
+        for e in sim_registry() {
+            assert!(e.caps().supports_spawning, "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn every_sim_engine_expands_spawn_plans_like_the_static_dag() {
+        // The trait-level differential gate: a live plan run dynamically
+        // must be byte-identical to the statically pre-expanded DAG run
+        // plan-free — on every registered sim engine.
+        use crate::dag::{pre_expand, SpawnPlan};
+        let dag = diamond();
+        let mut cfg = Config::default();
+        cfg.spawn = SpawnPlan::recursive(1.0, 2, 2);
+        let seed = 17;
+        let expanded = pre_expand(&dag, cfg.spawn, seed);
+        assert_eq!(expanded.len(), dag.len() + dag.len() * 6);
+        let mut static_cfg = cfg.clone();
+        static_cfg.spawn = SpawnPlan::default();
+        for e in sim_registry() {
+            let dy = e.run(&dag, &cfg, seed);
+            let st = e.run(&expanded, &static_cfg, seed);
+            assert_eq!(dy.metrics, st.metrics, "{}", e.name());
+            assert_eq!(dy.sim_events, st.sim_events, "{}", e.name());
+            assert_eq!(dy.peak_pending, st.peak_pending, "{}", e.name());
+            assert_eq!(
+                dy.metrics.tasks_executed,
+                expanded.len() as u64,
+                "{}",
+                e.name()
+            );
         }
     }
 

@@ -181,6 +181,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             opts.faults = args.flag("faults");
             opts.crashes = args.flag("crashes");
             opts.serving = args.flag("serving");
+            opts.dynamic = args.flag("dynamic");
             let summary = run_verify(&opts)?;
             let mut t = util::table::Table::new(vec!["metric", "value"]);
             t.row(vec!["engines".into(), summary.engines.join(" ")]);
@@ -195,7 +196,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
             if summary.ok() {
                 println!(
                     "conformance OK: exactly-once, completion, determinism \
-                     and locality ordering hold on every case{}{}{}",
+                     and locality ordering hold on every case{}{}{}{}",
                     if opts.faults {
                         ", incl. the §3.6 fault axis (retry bounds, \
                          completed-xor-failed totality, fault-free \
@@ -214,6 +215,13 @@ fn run(argv: Vec<String>) -> Result<(), String> {
                         ", incl. the multi-tenant serving axis (job \
                          conservation, byte-identical replays, zero-rate \
                          streams are no-ops)"
+                    } else {
+                        ""
+                    },
+                    if opts.dynamic {
+                        ", incl. the dynamic-DAG axis (runtime expansion \
+                         byte-identical to the pre-expanded DAG, \
+                         zero-rate plans bit-identical to plan-free)"
                     } else {
                         ""
                     }

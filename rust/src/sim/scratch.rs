@@ -87,6 +87,25 @@ impl TaskScratch {
     pub fn attempts_vec(&self) -> Vec<u32> {
         self.slots.iter().map(|s| s.attempts).collect()
     }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Grow the arena to `n` slots (appended-epoch tasks). Growth is
+    /// epoch-granular: dynamic runs size the arena to the full expanded
+    /// task count when the epoch opens (`SpawnState::total_len`), which
+    /// is exactly the size a statically pre-expanded run allocates — the
+    /// differential gate depends on that equality. Never shrinks.
+    pub fn grow_to(&mut self, n: usize) {
+        if n > self.slots.len() {
+            self.slots.resize(n, TaskSlot::default());
+        }
+    }
 }
 
 /// Remaining-parent counters over the CSR arrays.
@@ -113,6 +132,32 @@ impl ReadyCounters {
     #[inline]
     pub fn remaining(&self, t: TaskId) -> u32 {
         self.remaining[t as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.remaining.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining.is_empty()
+    }
+
+    /// Grow to `n` counters for appended-epoch tasks, each initialized
+    /// to `indegree`. Runtime-spawned tasks have exactly one parent
+    /// (their spawner), so dynamic runs grow with `indegree = 1` — the
+    /// value `ReadyCounters::new` would compute over the pre-expanded
+    /// DAG. Never shrinks.
+    pub fn grow_to(&mut self, n: usize, indegree: u32) {
+        if n > self.remaining.len() {
+            self.remaining.resize(n, indegree);
+        }
+    }
+
+    /// Force `t`'s counter to zero (a spawned child enqueued directly by
+    /// its completing spawner).
+    #[inline]
+    pub fn mark_ready(&mut self, t: TaskId) {
+        self.remaining[t as usize] = 0;
     }
 
     /// Record `t` as complete: decrement every child's counter, invoke
@@ -162,6 +207,38 @@ mod tests {
         s.slot_mut(2).attempts += 3;
         assert_eq!(s.executed_vec(), vec![1, 0, 0]);
         assert_eq!(s.attempts_vec(), vec![0, 0, 3]);
+    }
+
+    #[test]
+    fn scratch_grows_by_epoch_and_keeps_existing_slots() {
+        let mut s = TaskScratch::new(2);
+        s.slot_mut(1).executed = 1;
+        s.slot_mut(1).set_claimed();
+        s.grow_to(5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.slot(1).executed, 1);
+        assert!(s.slot(1).claimed());
+        assert_eq!(s.slot(4).executed, 0);
+        assert!(!s.slot(4).claimed());
+        s.grow_to(3); // never shrinks
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.executed_vec(), vec![0, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn ready_counters_grow_with_unit_indegree() {
+        let mut b = DagBuilder::new("pair");
+        let a = b.task("a", OpKind::Generic, 1.0, 8);
+        let x = b.task("b", OpKind::Generic, 1.0, 8);
+        b.edge(a, x);
+        let dag = b.build().unwrap();
+        let mut ctr = ReadyCounters::new(&dag);
+        ctr.grow_to(4, 1);
+        assert_eq!(ctr.len(), 4);
+        assert_eq!(ctr.remaining(2), 1);
+        ctr.mark_ready(3);
+        assert_eq!(ctr.remaining(3), 0);
+        assert_eq!(ctr.remaining(x), 1); // base counters untouched
     }
 
     #[test]

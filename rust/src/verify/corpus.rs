@@ -3,13 +3,16 @@
 //! (cf. the irregular/elastic workloads of arXiv:2206.15321).
 //!
 //! Shapes:
-//!  * layered     — random forward-edge layer graphs (the classic case);
-//!  * skewed      — one wide fan-out root with chains of skewed depth
-//!                  hanging off a subset of children, joined by a sink;
-//!  * diamonds    — stacked fork/join diamonds of varying width;
-//!  * chain       — a long dependency chain (single static schedule);
-//!  * multi-sink  — several independent sinks (every sink must publish);
-//!  * wide fan-in — many parents into one child (MDS counter stress).
+//!  * layered      — random forward-edge layer graphs (the classic case);
+//!  * skewed       — one wide fan-out root with chains of skewed depth
+//!                   hanging off a subset of children, joined by a sink;
+//!  * diamonds     — stacked fork/join diamonds of varying width;
+//!  * chain        — a long dependency chain (single static schedule);
+//!  * multi-sink   — several independent sinks (every sink must publish);
+//!  * wide fan-in  — many parents into one child (MDS counter stress);
+//!  * fork-join    — recursive divide-and-conquer trees (the static analog
+//!                   of a runtime fork, `workloads::dynamic`);
+//!  * branch-bound — pruned search trees joined by one incumbent sink.
 //!
 //! Output sizes deliberately straddle every policy threshold: zero-byte
 //! edges, tiny objects, sizes just below/above the 256 KB inline-argument
@@ -19,11 +22,14 @@
 //! reproduces its DAG exactly (the harness prints seeds on failure).
 
 use crate::config::{Config, StorageConfig};
-use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+use crate::dag::{Dag, DagBuilder, OpKind, SpawnPlan, TaskId};
 use crate::platform::faults::{FaultPlan, ShardCrashPlan};
 use crate::serving::ArrivalPlan;
 use crate::util::prop::gen;
 use crate::util::Rng;
+use crate::workloads::dynamic::{
+    branch_and_bound, fork_join, BranchBoundParams, ForkJoinParams,
+};
 
 /// Corpus size tier. `Standard` draws the same DAGs (same RNG stream)
 /// the harness always used; `Large` widens every shape's primary
@@ -272,6 +278,55 @@ pub fn wide_fanin_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
     b.build().expect("fan-in corpus DAG is acyclic by construction")
 }
 
+/// Recursive fork-join (divide-and-conquer) tree — the irregular,
+/// recursion-shaped graph runtime spawning produces, pre-expanded.
+pub fn fork_join_tree(rng: &mut Rng) -> Dag {
+    fork_join_tree_sized(rng, CorpusSize::Standard)
+}
+
+/// [`fork_join_tree`] with a size tier.
+pub fn fork_join_tree_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (fanout, depth) = match size {
+        // N(F,D) ∈ [10, 53] standard, [161, 426] large (closed form in
+        // `workloads::dynamic`): large minimum > 2× standard maximum.
+        CorpusSize::Standard => {
+            (gen::usize_in(rng, 2, 3), gen::usize_in(rng, 2, 3))
+        }
+        CorpusSize::Large => (gen::usize_in(rng, 3, 4), 4),
+    };
+    fork_join(ForkJoinParams {
+        fanout,
+        depth,
+        flops: rng.below(1_000_000) as f64 + 1.0,
+        out_bytes: *gen::choose(rng, SIZES),
+    })
+}
+
+/// Branch-and-bound search tree with random pruning, joined by one
+/// incumbent sink (wide irregular fan-in over pruned leaves).
+pub fn branch_bound_tree(rng: &mut Rng) -> Dag {
+    branch_bound_tree_sized(rng, CorpusSize::Standard)
+}
+
+/// [`branch_bound_tree`] with a size tier.
+pub fn branch_bound_tree_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
+    let (branches, depth, keep_levels, p_prune) = match size {
+        // [16, 32] tasks standard; [122, 1366] large — the large floor
+        // (1+3+9+27 kept + 81 all-pruned + sink) > 2× the standard cap.
+        CorpusSize::Standard => (2, gen::usize_in(rng, 3, 4), 2, 0.35),
+        CorpusSize::Large => (gen::usize_in(rng, 3, 4), 5, 3, 0.5),
+    };
+    branch_and_bound(BranchBoundParams {
+        branches,
+        depth,
+        keep_levels,
+        p_prune,
+        flops: rng.below(1_000_000) as f64 + 1.0,
+        out_bytes: *gen::choose(rng, SIZES),
+        seed: rng.next_u64(),
+    })
+}
+
 /// Draw one DAG from the whole corpus, shape chosen by the seed.
 pub fn random_dag(rng: &mut Rng) -> Dag {
     random_dag_sized(rng, CorpusSize::Standard)
@@ -279,13 +334,15 @@ pub fn random_dag(rng: &mut Rng) -> Dag {
 
 /// Draw one DAG from the whole corpus at the given size tier.
 pub fn random_dag_sized(rng: &mut Rng, size: CorpusSize) -> Dag {
-    match rng.below(6) {
+    match rng.below(8) {
         0 => layered_sized(rng, size),
         1 => skewed_fanout_sized(rng, size),
         2 => diamond_stack_sized(rng, size),
         3 => long_chain_sized(rng, size),
         4 => multi_sink_sized(rng, size),
-        _ => wide_fanin_sized(rng, size),
+        5 => wide_fanin_sized(rng, size),
+        6 => fork_join_tree_sized(rng, size),
+        _ => branch_bound_tree_sized(rng, size),
     }
 }
 
@@ -320,6 +377,59 @@ pub fn crash_matrix() -> Vec<ShardCrashPlan> {
         ShardCrashPlan::with_crashes(0.05, 4),
         ShardCrashPlan::with_crashes(0.5, 4),
         ShardCrashPlan::with_crashes(0.5, 1),
+    ]
+}
+
+/// The spawn-plan matrix swept by `wukong verify --dynamic`: sparse
+/// single-child spawns, recursive depth-3 expansion, wide one-level
+/// bursts (straddling the 256 KB inline limit), guaranteed expansion at
+/// every task including sinks (zero-cost subtasks — pure structure), and
+/// the zero-rate regression plan (must be bit-identical to no plan at
+/// all). Plans are fixed — not drawn from the case RNG — so the
+/// harness's engine-run accounting is pinnable.
+pub fn spawn_matrix() -> Vec<(&'static str, SpawnPlan)> {
+    vec![
+        (
+            "single",
+            SpawnPlan {
+                p_spawn: 0.08,
+                fanout: 1,
+                depth: 1,
+                task_dur_s: 0.005,
+                out_bytes: 64 * 1024,
+            },
+        ),
+        (
+            "recursive",
+            SpawnPlan {
+                p_spawn: 0.3,
+                fanout: 2,
+                depth: 3,
+                task_dur_s: 0.002,
+                out_bytes: 8 * 1024,
+            },
+        ),
+        (
+            "burst",
+            SpawnPlan {
+                p_spawn: 0.15,
+                fanout: 8,
+                depth: 1,
+                task_dur_s: 0.001,
+                out_bytes: 300 * 1024,
+            },
+        ),
+        (
+            "at-sink",
+            SpawnPlan {
+                p_spawn: 1.0,
+                fanout: 2,
+                depth: 2,
+                task_dur_s: 0.0,
+                out_bytes: 0,
+            },
+        ),
+        ("zero-rate", SpawnPlan::default()),
     ]
 }
 
@@ -382,13 +492,15 @@ mod tests {
     #[test]
     fn every_shape_builds_and_is_nonempty() {
         check(0xC0121, 60, |rng| {
-            let shapes: [fn(&mut Rng) -> Dag; 6] = [
+            let shapes: [fn(&mut Rng) -> Dag; 8] = [
                 layered,
                 skewed_fanout,
                 diamond_stack,
                 long_chain,
                 multi_sink,
                 wide_fanin,
+                fork_join_tree,
+                branch_bound_tree,
             ];
             for f in shapes {
                 let d = f(rng);
@@ -436,13 +548,15 @@ mod tests {
 
     #[test]
     fn large_tier_scales_every_shape_up() {
-        let shapes: [fn(&mut Rng, CorpusSize) -> Dag; 6] = [
+        let shapes: [fn(&mut Rng, CorpusSize) -> Dag; 8] = [
             layered_sized,
             skewed_fanout_sized,
             diamond_stack_sized,
             long_chain_sized,
             multi_sink_sized,
             wide_fanin_sized,
+            fork_join_tree_sized,
+            branch_bound_tree_sized,
         ];
         for (i, f) in shapes.iter().enumerate() {
             let small = f(&mut Rng::new(31 + i as u64), CorpusSize::Standard);
@@ -463,8 +577,8 @@ mod tests {
 
     #[test]
     fn standard_tier_is_the_default_corpus() {
-        // `random_dag` must keep drawing the exact DAGs the replay seeds
-        // printed by older sweeps refer to.
+        // `random_dag` and the Standard tier must stay the same stream:
+        // a replay seed printed by a sweep reproduces its DAG exactly.
         let mut a = Rng::new(0x5EED);
         let mut b = Rng::new(0x5EED);
         for _ in 0..10 {
@@ -524,6 +638,27 @@ mod tests {
         assert_eq!(costed.storage.n_shards, base.storage.n_shards);
         assert_eq!(costed.storage.shard_bw, base.storage.shard_bw);
         assert_eq!(costed.wukong.use_clustering, base.wukong.use_clustering);
+    }
+
+    #[test]
+    fn spawn_matrix_pins_one_zero_rate_and_four_live_plans() {
+        let m = spawn_matrix();
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.iter().filter(|(_, p)| !p.is_live()).count(), 1);
+        let (name, zero) = m.last().unwrap();
+        assert_eq!(*name, "zero-rate");
+        assert_eq!(*zero, SpawnPlan::default());
+        // The live plans stay within the `--set` validation envelope.
+        for (name, p) in &m {
+            assert!((0.0..=1.0).contains(&p.p_spawn), "{name}");
+            assert!((1..=1024).contains(&p.fanout), "{name}");
+            assert!((1..=8).contains(&p.depth), "{name}");
+            assert!(p.task_dur_s >= 0.0, "{name}");
+        }
+        // One plan expands everywhere (spawn-at-sink coverage), one
+        // straddles the 256 KB inline-argument limit.
+        assert!(m.iter().any(|(_, p)| p.p_spawn == 1.0));
+        assert!(m.iter().any(|(_, p)| p.out_bytes == 300 * 1024));
     }
 
     #[test]

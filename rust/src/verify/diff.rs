@@ -16,6 +16,9 @@
 //!   never exceed `1 + max_retries`, completed tasks executed
 //!   effectively-once, and `p_fail = 0` runs are bit-identical to the
 //!   fault-free baseline;
+//! * **dynamic equivalence** — a run expanding a spawn plan at runtime
+//!   is byte-identical to the statically pre-expanded equivalent DAG run
+//!   plan-free (metrics, event counts, calendar high-water mark);
 //! * **crash recovery** — a run with mid-run shard crashes is
 //!   byte-identical to the uninterrupted run in every data-plane metric
 //!   (task outcomes, KVS/WAL byte meters, event counts, makespan); only
@@ -260,6 +263,53 @@ pub fn check_fault_free_baseline(
             "[{}] fault-free-baseline: p_fail=0 metrics differ from the \
              fault-free run",
             rep.engine
+        ));
+    }
+    Ok(())
+}
+
+/// The dynamic-DAG differential gate: a run that expands a spawn plan
+/// *at runtime* must be byte-identical — metrics, DES event counts,
+/// calendar high-water mark — to running the statically pre-expanded
+/// equivalent DAG ([`crate::dag::pre_expand`]) plan-free. Runtime
+/// spawning is an implementation detail of *when* tasks enter the
+/// graph, never of what the execution does.
+pub fn check_dynamic_equivalence(
+    dynamic: &EngineReport,
+    static_rep: &EngineReport,
+) -> Result<(), String> {
+    if dynamic.sim_events != static_rep.sim_events {
+        return Err(format!(
+            "[{}] dynamic-equivalence: dynamic event count {:?} != \
+             pre-expanded {:?}",
+            dynamic.engine, dynamic.sim_events, static_rep.sim_events
+        ));
+    }
+    if dynamic.peak_pending != static_rep.peak_pending {
+        return Err(format!(
+            "[{}] dynamic-equivalence: dynamic peak pending {:?} != \
+             pre-expanded {:?}",
+            dynamic.engine, dynamic.peak_pending, static_rep.peak_pending
+        ));
+    }
+    if dynamic.metrics != static_rep.metrics {
+        let a = &dynamic.metrics;
+        let b = &static_rep.metrics;
+        let what = if a.makespan_s != b.makespan_s {
+            format!("makespan {} vs {}", a.makespan_s, b.makespan_s)
+        } else if a.kvs != b.kvs {
+            format!("kvs {:?} vs {:?}", a.kvs, b.kvs)
+        } else if a.per_task_exec != b.per_task_exec {
+            "per-task execution counts".to_string()
+        } else if a.per_task_outcome != b.per_task_outcome {
+            "per-task outcomes".to_string()
+        } else {
+            "metrics structs differ".to_string()
+        };
+        return Err(format!(
+            "[{}] dynamic-equivalence: diverged from the pre-expanded \
+             run: {what}",
+            dynamic.engine
         ));
     }
     Ok(())
@@ -520,6 +570,31 @@ mod tests {
             check_crash_recovery(&reference, &clean, zero, &crashed.storage)
                 .unwrap_err();
         assert!(err.contains("p_crash=0"), "{err}");
+    }
+
+    #[test]
+    fn dynamic_equivalence_gate_accepts_and_rejects() {
+        use crate::dag::{pre_expand, SpawnPlan};
+        let dag = chain2();
+        let mut cfg = Config::default();
+        cfg.spawn = SpawnPlan::recursive(1.0, 2, 2);
+        let dy = SimWukong.run(&dag, &cfg, 3);
+        let expanded = pre_expand(&dag, cfg.spawn, 3);
+        let st = SimWukong.run(&expanded, &Config::default(), 3);
+        check_dynamic_equivalence(&dy, &st).unwrap();
+        check_completion(&expanded, &dy).unwrap();
+        check_exactly_once(&expanded, &dy).unwrap();
+
+        let mut drifted = st.clone();
+        drifted.metrics.makespan_s += 1.0;
+        let err = check_dynamic_equivalence(&dy, &drifted).unwrap_err();
+        assert!(err.contains("dynamic-equivalence"), "{err}");
+        assert!(err.contains("makespan"), "{err}");
+
+        let mut fewer_events = st.clone();
+        fewer_events.sim_events = fewer_events.sim_events.map(|e| e + 1);
+        let err = check_dynamic_equivalence(&dy, &fewer_events).unwrap_err();
+        assert!(err.contains("event count"), "{err}");
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //! matrix and asserts the invariants in [`diff`]: exactly-once
 //! execution, completion, per-seed determinism, and the paper's locality
 //! ordering (Wukong KVS bytes ≤ stateless KVS bytes on every DAG).
-//! Opt-in axes layer on top: `--faults` sweeps the §3.6 retry matrix and
+//! Opt-in axes layer on top: `--faults` sweeps the §3.6 retry matrix,
 //! `--crashes` sweeps durable-KVS shard-crash plans against the
-//! byte-identical recovery gate ([`diff::check_crash_recovery`]). Every
+//! byte-identical recovery gate ([`diff::check_crash_recovery`]), and
+//! `--dynamic` sweeps runtime spawn plans against the dynamic-vs-
+//! pre-expanded differential gate ([`diff::check_dynamic_equivalence`]).
+//! Every
 //! engine run is capped by a sim event budget (watchdog), so a
 //! livelocked engine aborts and reports instead of hanging the sweep.
 //!
@@ -70,6 +73,12 @@ pub struct VerifyOptions {
     /// byte-identically; the zero-rate plan must be a no-op. Opt-in,
     /// like `faults`.
     pub serving: bool,
+    /// Sweep the dynamic-DAG axis (`corpus::spawn_matrix`): every live
+    /// spawn plan runs dynamically, replays deterministically, and must
+    /// be byte-identical to the statically pre-expanded equivalent DAG
+    /// ([`diff::check_dynamic_equivalence`]); the zero-rate plan must be
+    /// bit-identical to the plan-free reference. Opt-in, like `faults`.
+    pub dynamic: bool,
 }
 
 impl Default for VerifyOptions {
@@ -84,6 +93,7 @@ impl Default for VerifyOptions {
             faults: false,
             crashes: false,
             serving: false,
+            dynamic: false,
         }
     }
 }
@@ -410,6 +420,106 @@ fn run_case(opts: &VerifyOptions, case: u64) -> CaseResult {
                 }
             }
         }
+
+        // Opt-in dynamic-DAG axis: one plan-free reference anchors the
+        // zero-rate bit-identity check; every live spawn plan runs
+        // dynamically (plus a determinism replay) and must be
+        // byte-identical to the statically pre-expanded equivalent DAG
+        // run plan-free — the whole tentpole contract in one gate. The
+        // classic invariants (completion, exactly-once, fault contract)
+        // are checked against the *expanded* task set.
+        if opts.dynamic && engine.caps().supports_spawning {
+            engine_runs += 1;
+            let reference =
+                match run_guarded(engine.as_ref(), &dag, &base, run_seed) {
+                    Ok(r) => Some(r),
+                    Err(v) => {
+                        violations.push(format!("{v} (spawn reference)"));
+                        None
+                    }
+                };
+            for (name, plan) in corpus::spawn_matrix() {
+                let label = format!(
+                    "spawn {name} p={} f={} d={}",
+                    plan.p_spawn, plan.fanout, plan.depth
+                );
+                let mut cfg = base.clone();
+                cfg.spawn = plan;
+                if !plan.is_live() {
+                    // Zero-rate plan: one run, bit-identical to the
+                    // plan-free reference (draws nothing from the spawn
+                    // stream).
+                    engine_runs += 1;
+                    match run_guarded(engine.as_ref(), &dag, &cfg, run_seed)
+                    {
+                        Ok(rep) => {
+                            if let Some(reference) = &reference {
+                                if let Err(v) =
+                                    diff::check_fault_free_baseline(
+                                        reference, &rep,
+                                    )
+                                {
+                                    violations
+                                        .push(format!("{v} ({label})"));
+                                }
+                            }
+                        }
+                        Err(v) => {
+                            violations.push(format!("{v} ({label})"))
+                        }
+                    }
+                    continue;
+                }
+                engine_runs += 1;
+                let rep =
+                    match run_guarded(engine.as_ref(), &dag, &cfg, run_seed) {
+                        Ok(r) => r,
+                        Err(v) => {
+                            violations.push(format!("{v} ({label})"));
+                            continue;
+                        }
+                    };
+                engine_runs += 1; // determinism re-run
+                let rerun =
+                    match run_guarded(engine.as_ref(), &dag, &cfg, run_seed) {
+                        Ok(r) => r,
+                        Err(v) => {
+                            violations
+                                .push(format!("{v} ({label}, rerun)"));
+                            continue;
+                        }
+                    };
+                // The statically pre-expanded equivalent: same seed, no
+                // spawn plan (`base` carries the inert default).
+                let expanded = crate::dag::pre_expand(&dag, plan, run_seed);
+                engine_runs += 1;
+                let static_rep = match run_guarded(
+                    engine.as_ref(),
+                    &expanded,
+                    &base,
+                    run_seed,
+                ) {
+                    Ok(r) => r,
+                    Err(v) => {
+                        violations
+                            .push(format!("{v} ({label}, pre-expanded)"));
+                        continue;
+                    }
+                };
+
+                for check in [
+                    diff::check_determinism(&rep, &rerun),
+                    diff::check_dynamic_equivalence(&rep, &static_rep),
+                    diff::check_completion(&expanded, &rep),
+                    diff::check_exactly_once(&expanded, &rep),
+                    diff::check_fault_contract(&expanded, &rep, base.faults),
+                ] {
+                    if let Err(v) = check {
+                        violations.push(format!("{v} ({label})"));
+                    }
+                }
+            }
+        }
     }
 
     // Opt-in multi-tenant serving axis. Runs once per case — the
@@ -682,6 +792,44 @@ mod tests {
             s.engine_runs,
             2 * (16 + 8 + 5 * (1 + 8 * 2) + 5 * (2 * (1 + 4 * 2)))
         );
+    }
+
+    #[test]
+    fn dynamic_sweep_is_clean_and_counts_the_spawn_axis() {
+        let s = run_verify(&VerifyOptions {
+            runs: 2,
+            seed: 13,
+            dynamic: true,
+            ..VerifyOptions::default()
+        })
+        .unwrap();
+        assert_eq!(s.cases, 2);
+        assert!(s.violations.is_empty(), "{:#?}", s.violations);
+        // Base matrix (16 + 8) plus, per sim engine, 1 plan-free
+        // reference + 4 live spawn plans × (dynamic + determinism
+        // re-run + static pre-expanded) + 1 zero-rate run.
+        assert_eq!(s.engine_runs, 2 * (16 + 8 + 5 * (1 + 4 * 3 + 1)));
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree_under_dynamic() {
+        let base = VerifyOptions {
+            runs: 2,
+            seed: 47,
+            dynamic: true,
+            ..VerifyOptions::default()
+        };
+        let seq = run_verify(&VerifyOptions {
+            threads: 1,
+            ..base.clone()
+        })
+        .unwrap();
+        let par = run_verify(&VerifyOptions {
+            threads: 4,
+            ..base
+        })
+        .unwrap();
+        assert_eq!(seq, par);
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Irregular, recursion-shaped workload DAGs — the static analogs of the
+//! runtime-spawning workloads dynamic DAG engines face (recursive
+//! fork-join divide-and-conquer, branch-and-bound search with pruning).
+//!
+//! Like every other generator these are pure functions from parameters to
+//! a [`Dag`]; `branch_and_bound` additionally takes a `seed` because its
+//! pruning pattern is random *by definition* (the search tree's shape
+//! depends on the instance), drawn from its own `Rng` so the same params
+//! reproduce the same tree. The conformance corpus wraps both
+//! (`verify::corpus`), and `tests/dynamic.rs` uses them as base graphs
+//! under live spawn plans.
+
+use crate::dag::{Dag, DagBuilder, OpKind, TaskId};
+use crate::util::Rng;
+
+/// Recursive fork-join parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ForkJoinParams {
+    /// Children forked per internal node.
+    pub fanout: usize,
+    /// Recursion depth (`0` = a single leaf task).
+    pub depth: usize,
+    /// Work per task.
+    pub flops: f64,
+    /// Output size per task.
+    pub out_bytes: u64,
+}
+
+/// Divide-and-conquer fork-join: each internal node forks `fanout`
+/// subproblems and a mirrored join combines their results, recursively to
+/// `depth` levels. Node count is `N(d) = 2 + fanout·N(d+1)`, `N(depth) = 1`
+/// — e.g. fanout 2 × depth 2 → 10 tasks, fanout 3 × depth 3 → 53.
+pub fn fork_join(p: ForkJoinParams) -> Dag {
+    assert!(p.fanout >= 1);
+    let mut b = DagBuilder::new(&format!("forkjoin_f{}d{}", p.fanout, p.depth));
+    fn subtree(
+        b: &mut DagBuilder,
+        p: &ForkJoinParams,
+        d: usize,
+        path: &str,
+    ) -> (TaskId, TaskId) {
+        if d == p.depth {
+            let leaf = b.task(
+                format!("fj{path}_leaf"),
+                OpKind::Generic,
+                p.flops,
+                p.out_bytes,
+            );
+            return (leaf, leaf);
+        }
+        let fork = b.task(
+            format!("fj{path}_fork"),
+            OpKind::Generic,
+            p.flops,
+            p.out_bytes,
+        );
+        let join = b.task(
+            format!("fj{path}_join"),
+            OpKind::Generic,
+            p.flops,
+            p.out_bytes,
+        );
+        for i in 0..p.fanout {
+            let (top, bottom) = subtree(b, p, d + 1, &format!("{path}_{i}"));
+            b.edge(fork, top);
+            b.edge(bottom, join);
+        }
+        (fork, join)
+    }
+    subtree(&mut b, &p, 0, "");
+    b.build().expect("fork-join DAG is acyclic by construction")
+}
+
+/// Branch-and-bound parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BranchBoundParams {
+    /// Children expanded per surviving node.
+    pub branches: usize,
+    /// Maximum search depth.
+    pub depth: usize,
+    /// Levels expanded unconditionally before pruning starts (bounds the
+    /// minimum tree size).
+    pub keep_levels: usize,
+    /// Probability a node past `keep_levels` is pruned (becomes a leaf).
+    pub p_prune: f64,
+    /// Work per node.
+    pub flops: f64,
+    /// Output size per node.
+    pub out_bytes: u64,
+    /// Seed for the pruning pattern (same params + seed ⇒ same tree).
+    pub seed: u64,
+}
+
+/// Branch-and-bound search tree: a root expands `branches` children per
+/// level; past `keep_levels`, each node is pruned with `p_prune` (the
+/// bound cut). Every leaf — pruned or full-depth — feeds one final
+/// "best" sink (the incumbent reduction), so the DAG has a single sink
+/// and its completion requires the whole pruned frontier.
+pub fn branch_and_bound(p: BranchBoundParams) -> Dag {
+    assert!(p.branches >= 1 && p.depth >= 1);
+    let mut rng = Rng::new(p.seed);
+    let mut b = DagBuilder::new(&format!("bnb_b{}d{}", p.branches, p.depth));
+    let root = b.task("bb_root", OpKind::Generic, p.flops, p.out_bytes);
+    let mut frontier = vec![root];
+    let mut tails: Vec<TaskId> = Vec::new();
+    for level in 1..=p.depth {
+        let mut next = Vec::with_capacity(frontier.len() * p.branches);
+        for (i, &parent) in frontier.iter().enumerate() {
+            for j in 0..p.branches {
+                let t = b.task(
+                    format!("bb_l{level}_{i}_{j}"),
+                    OpKind::Generic,
+                    p.flops,
+                    p.out_bytes,
+                );
+                b.edge(parent, t);
+                let pruned = level >= p.depth
+                    || (level > p.keep_levels && rng.f64() < p.p_prune);
+                if pruned {
+                    tails.push(t);
+                } else {
+                    next.push(t);
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    tails.extend(frontier);
+    let best = b.task("bb_best", OpKind::Generic, p.flops, p.out_bytes);
+    for &t in &tails {
+        b.edge(t, best);
+    }
+    b.build().expect("branch-and-bound DAG is acyclic by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fork_join_matches_the_closed_form() {
+        // N(d) = 2 + F·N(d+1), N(depth) = 1
+        for (fanout, depth, expect) in
+            [(2, 2, 10), (3, 3, 53), (3, 4, 161), (4, 4, 426)]
+        {
+            let d = fork_join(ForkJoinParams {
+                fanout,
+                depth,
+                flops: 1.0,
+                out_bytes: 64,
+            });
+            assert_eq!(d.len(), expect, "F={fanout} D={depth}");
+            assert_eq!(d.leaves().len(), 1, "one fork root");
+            assert_eq!(d.sinks().len(), 1, "one join sink");
+            assert_eq!(d.topo_order().len(), d.len());
+        }
+    }
+
+    #[test]
+    fn fork_join_depth_zero_is_one_task() {
+        let d = fork_join(ForkJoinParams {
+            fanout: 3,
+            depth: 0,
+            flops: 1.0,
+            out_bytes: 8,
+        });
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn branch_and_bound_bounds_hold() {
+        // keep_levels full expansion gives the floor; no-prune gives the
+        // ceiling (full tree + sink).
+        let p = BranchBoundParams {
+            branches: 2,
+            depth: 4,
+            keep_levels: 2,
+            p_prune: 0.35,
+            flops: 1.0,
+            out_bytes: 64,
+            seed: 11,
+        };
+        let d = branch_and_bound(p);
+        // floor: 1 + 2 + 4 (kept levels) + sink; ceiling: full binary
+        // tree to depth 4 + sink.
+        assert!(d.len() >= 8, "{}", d.len());
+        assert!(d.len() <= 32, "{}", d.len());
+        assert_eq!(d.sinks().len(), 1);
+        assert_eq!(d.leaves().len(), 1);
+        assert_eq!(d.topo_order().len(), d.len());
+    }
+
+    #[test]
+    fn branch_and_bound_is_deterministic_per_seed() {
+        let p = BranchBoundParams {
+            branches: 3,
+            depth: 5,
+            keep_levels: 2,
+            p_prune: 0.5,
+            flops: 1.0,
+            out_bytes: 64,
+            seed: 7,
+        };
+        let a = branch_and_bound(p);
+        let b = branch_and_bound(p);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.n_edges(), b.n_edges());
+        let c = branch_and_bound(BranchBoundParams { seed: 8, ..p });
+        // a different seed prunes differently (overwhelmingly likely)
+        assert!(a.len() != c.len() || a.n_edges() != c.n_edges());
+    }
+
+    #[test]
+    fn pruning_probability_one_stops_at_keep_levels() {
+        let d = branch_and_bound(BranchBoundParams {
+            branches: 2,
+            depth: 6,
+            keep_levels: 2,
+            p_prune: 1.0,
+            flops: 1.0,
+            out_bytes: 8,
+            seed: 3,
+        });
+        // 1 + 2 + 4 kept, level 3 fully expanded then all pruned, + sink
+        assert_eq!(d.len(), 1 + 2 + 4 + 8 + 1);
+    }
+}

@@ -6,6 +6,7 @@
 //! the same graph drives Wukong, numpywren and Dask engines (the paper's
 //! "exact same input DAG" methodology).
 
+pub mod dynamic;
 pub mod gemm;
 pub mod micro;
 pub mod svc;

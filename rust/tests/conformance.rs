@@ -120,6 +120,57 @@ fn serving_matrix_runs_clean() {
     );
 }
 
+/// The dynamic-DAG axis (`wukong verify --dynamic`): on top of the base
+/// matrix, every spawn-capable engine sweeps `corpus::spawn_matrix()`.
+/// Each live plan runs dynamically (plus a determinism replay) and is
+/// gated byte-for-byte against the statically pre-expanded equivalent
+/// DAG run plan-free; completion/exactly-once/fault-contract are checked
+/// against the *expanded* task set; the zero-rate plan must be
+/// bit-identical to the plan-free reference.
+#[test]
+fn dynamic_matrix_runs_clean() {
+    let summary = run_verify(&VerifyOptions {
+        runs: 4,
+        seed: 7,
+        dynamic: true,
+        ..VerifyOptions::default()
+    })
+    .expect("default options are valid");
+    assert_eq!(summary.cases, 4);
+    assert!(
+        summary.violations.is_empty(),
+        "dynamic-axis violations:\n{}",
+        summary.violations.join("\n")
+    );
+    // base 24 + 5 engines × (1 plan-free reference + 4 live plans ×
+    // (dynamic + rerun + pre-expanded) + 1 zero-rate run)
+    assert_eq!(summary.engine_runs, 4 * (24 + 5 * 14));
+}
+
+/// Satellite: the dynamic-axis sweep stays byte-identical to
+/// `--threads 1` (spawn expansion is a pure function of the run seed —
+/// no cross-case leakage through worker reuse).
+#[test]
+fn dynamic_sweep_is_thread_count_invariant() {
+    let base = VerifyOptions {
+        runs: 3,
+        seed: 53,
+        dynamic: true,
+        ..VerifyOptions::default()
+    };
+    let seq = run_verify(&VerifyOptions {
+        threads: 1,
+        ..base.clone()
+    })
+    .unwrap();
+    let par = run_verify(&VerifyOptions {
+        threads: 3,
+        ..base
+    })
+    .unwrap();
+    assert_eq!(seq, par);
+}
+
 /// Satellite: the serving-axis sweep stays byte-identical to
 /// `--threads 1` (arrival streams are per-session state salted off the
 /// run seed — no cross-case leakage through worker reuse).

@@ -1,0 +1,229 @@
+//! Dynamic-DAG differential suite: runtime task spawning behind the
+//! delta-graph layer, gated against static pre-expansion.
+//!
+//! The correctness anchor for the whole subsystem is a single sentence:
+//! running a DAG with a live `SpawnPlan` must be **byte-identical**
+//! (metrics, event counts, peak calendar depth) to running the
+//! statically pre-expanded equivalent DAG with no plan at all. These
+//! tests sweep that anchor across every spawn-capable engine, the
+//! pinned `corpus::spawn_matrix()`, random corpus DAGs, and the new
+//! irregular workload generators — then pin the `verify --dynamic`
+//! wiring end-to-end.
+
+use wukong::dag::{pre_expand, SpawnPlan, SpawnState};
+use wukong::engine::select_engines;
+use wukong::util::prop::{check, gen};
+use wukong::verify::corpus::{self, random_config, random_dag};
+use wukong::verify::{run_verify, VerifyOptions};
+use wukong::workloads::dynamic::{
+    branch_and_bound, fork_join, BranchBoundParams, ForkJoinParams,
+};
+
+/// The headline differential: for every live plan in the pinned spawn
+/// matrix, every spawn-capable engine's dynamic run over a random
+/// corpus DAG is byte-identical to the plan-free run over
+/// `pre_expand(dag, plan, seed)`.
+#[test]
+fn spawn_matrix_is_byte_identical_to_pre_expansion_on_every_engine() {
+    check(0xD7A6, 6, |rng| {
+        let dag = random_dag(rng);
+        let base = random_config(rng);
+        let seed = rng.next_u64();
+        for (name, plan) in corpus::spawn_matrix() {
+            if !plan.is_live() {
+                continue;
+            }
+            let mut cfg = base.clone();
+            cfg.spawn = plan;
+            let expanded = pre_expand(&dag, plan, seed);
+            for engine in select_engines(&[]).unwrap() {
+                if !engine.caps().supports_spawning {
+                    continue;
+                }
+                let dy = engine.run(&dag, &cfg, seed);
+                let st = engine.run(&expanded, &base, seed);
+                let ename = engine.name();
+                assert_eq!(dy.sim_events, st.sim_events, "[{ename}/{name}]");
+                assert_eq!(dy.peak_pending, st.peak_pending, "[{ename}/{name}]");
+                assert_eq!(dy.metrics, st.metrics, "[{ename}/{name}]");
+                assert_eq!(
+                    dy.metrics.tasks_executed as usize,
+                    expanded.len(),
+                    "[{ename}/{name}] dynamic run must complete the expanded set"
+                );
+            }
+        }
+    });
+}
+
+/// Zero-rate plans draw nothing from the salted spawn stream, so
+/// enabling the knob leaves every engine's report bit-identical to a
+/// plan-free run — the static-workload regression guard.
+#[test]
+fn zero_rate_spawn_plans_are_invisible_on_every_engine() {
+    check(0xD7A7, 8, |rng| {
+        let dag = random_dag(rng);
+        let base = random_config(rng);
+        let mut planned = base.clone();
+        planned.spawn =
+            SpawnPlan::with_rate(0.0, gen::usize_in(rng, 1, 16) as u32);
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_spawning {
+                continue;
+            }
+            let a = engine.run(&dag, &base, seed);
+            let b = engine.run(&dag, &planned, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
+}
+
+/// Dynamic expansion is deterministic per `(dag, plan, seed)`: the
+/// same seed replays the identical report, and `pre_expand` itself is
+/// a pure function — two calls yield structurally identical DAGs.
+#[test]
+fn dynamic_expansion_is_a_pure_function_of_the_seed() {
+    check(0xD7A8, 8, |rng| {
+        let dag = random_dag(rng);
+        let mut cfg = random_config(rng);
+        let plan = SpawnPlan::recursive(
+            rng.f64() * 0.6 + 0.1,
+            gen::usize_in(rng, 1, 4) as u32,
+            gen::usize_in(rng, 1, 3) as u32,
+        );
+        cfg.spawn = plan;
+        let seed = rng.next_u64();
+        let a = pre_expand(&dag, plan, seed);
+        let b = pre_expand(&dag, plan, seed);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.leaves(), b.leaves());
+        assert_eq!(a.sinks(), b.sinks());
+        for t in 0..a.len() as u32 {
+            assert_eq!(a.parents(t), b.parents(t), "task {t}");
+            assert_eq!(a.children(t), b.children(t), "task {t}");
+            assert_eq!(a.task_name(t), b.task_name(t), "task {t}");
+        }
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_spawning {
+                continue;
+            }
+            let x = engine.run(&dag, &cfg, seed);
+            let y = engine.run(&dag, &cfg, seed);
+            let name = engine.name();
+            assert_eq!(x.sim_events, y.sim_events, "[{name}]");
+            assert_eq!(x.metrics, y.metrics, "[{name}]");
+        }
+    });
+}
+
+/// Structural audit of the sealed view that engines and downstream
+/// consumers cache: staged tasks have exactly their spawning parent,
+/// parent ids precede child ids, the leaf set is the base leaf set
+/// verbatim (spawned tasks always have a parent), and the staged block
+/// layout agrees with `SpawnState`'s accounting.
+#[test]
+fn pre_expanded_dags_pass_the_structural_audit() {
+    check(0xD7A9, 10, |rng| {
+        let dag = random_dag(rng);
+        let plan = SpawnPlan::recursive(
+            rng.f64(),
+            gen::usize_in(rng, 1, 5) as u32,
+            gen::usize_in(rng, 1, 3) as u32,
+        );
+        let seed = rng.next_u64();
+        let spawn = SpawnState::for_run(&dag, plan, seed);
+        let expanded = pre_expand(&dag, plan, seed);
+        assert_eq!(expanded.len(), spawn.total_len());
+        assert_eq!(expanded.leaves(), dag.leaves());
+        assert_eq!(expanded.sinks().len(), spawn.sinks_after(&dag));
+        for t in 0..dag.len() as u32 {
+            assert_eq!(expanded.parents(t), dag.parents(t), "base task {t}");
+        }
+        for t in dag.len() as u32..expanded.len() as u32 {
+            assert!(spawn.is_staged(t));
+            let p = spawn.parent_of(t);
+            assert_eq!(expanded.parents(t), &[p], "staged task {t}");
+            assert!(p < t, "staged task {t} must follow its parent {p}");
+            assert_eq!(expanded.indegree(t), 1);
+            assert!(expanded.task_name(t).starts_with("sp"), "staged name");
+        }
+    });
+}
+
+/// The irregular workload generators are first-class base graphs for
+/// spawning: a recursive fork-join tree and a branch-and-bound search
+/// both expand dynamically into exactly the pre-expanded equivalent.
+#[test]
+fn irregular_workloads_expand_identically() {
+    let fj = fork_join(ForkJoinParams {
+        fanout: 3,
+        depth: 3,
+        flops: 2.0e6,
+        out_bytes: 32 * 1024,
+    });
+    let bb = branch_and_bound(BranchBoundParams {
+        branches: 3,
+        depth: 4,
+        keep_levels: 2,
+        p_prune: 0.4,
+        flops: 1.0e6,
+        out_bytes: 16 * 1024,
+        seed: 0xB0B,
+    });
+    let base = wukong::config::Config::default();
+    for dag in [&fj, &bb] {
+        for (name, plan) in corpus::spawn_matrix() {
+            let mut cfg = base.clone();
+            cfg.spawn = plan;
+            let seed = 0xFEED ^ dag.len() as u64;
+            let expanded = pre_expand(dag, plan, seed);
+            for engine in select_engines(&[]).unwrap() {
+                if !engine.caps().supports_spawning {
+                    continue;
+                }
+                let dy = engine.run(dag, &cfg, seed);
+                let st = engine.run(&expanded, &base, seed);
+                let ename = engine.name();
+                assert_eq!(dy.sim_events, st.sim_events, "[{ename}/{name}]");
+                assert_eq!(dy.metrics, st.metrics, "[{ename}/{name}]");
+            }
+        }
+    }
+}
+
+/// End-to-end wiring: `--dynamic` adds exactly the spawn axis on top
+/// of the base matrix — 5 spawn-capable engines × (1 reference + 4
+/// live plans × (dynamic + rerun + pre-expanded) + 1 zero-rate run)
+/// per case — and the sweep comes back clean.
+#[test]
+fn verify_dynamic_flag_gates_exactly_the_spawn_axis() {
+    let plain = run_verify(&VerifyOptions {
+        runs: 2,
+        seed: 31,
+        ..VerifyOptions::default()
+    })
+    .unwrap();
+    let dynamic = run_verify(&VerifyOptions {
+        runs: 2,
+        seed: 31,
+        dynamic: true,
+        ..VerifyOptions::default()
+    })
+    .unwrap();
+    assert!(plain.violations.is_empty());
+    assert!(
+        dynamic.violations.is_empty(),
+        "dynamic-axis violations:\n{}",
+        dynamic.violations.join("\n")
+    );
+    assert_eq!(plain.engine_runs, 2 * 24);
+    assert_eq!(
+        dynamic.engine_runs - plain.engine_runs,
+        2 * 5 * (1 + 4 * 3 + 1),
+        "--dynamic must add exactly the spawn axis"
+    );
+}

@@ -343,6 +343,101 @@ fn zero_rate_crash_plans_are_invisible() {
 }
 
 #[test]
+fn zero_rate_spawn_plans_are_invisible_across_axes() {
+    use wukong::dag::SpawnPlan;
+    use wukong::engine::select_engines;
+    use wukong::platform::faults::ShardCrashPlan;
+    // The dynamic-DAG regression guard, crossed with the fault and
+    // crash axes: a p_spawn=0 plan draws nothing from the salted spawn
+    // stream, so enabling the knob (any fanout) leaves every
+    // spawn-capable engine's report bit-identical — even while retries
+    // and shard recoveries are reshaping the calendar.
+    check(0x5B01, 8, |rng| {
+        let dag = random_dag(rng);
+        let mut base = random_config(rng);
+        base.faults = FaultPlan::with_retries(
+            rng.f64() * 0.4,
+            gen::usize_in(rng, 0, 3) as u32,
+        );
+        base.crashes = ShardCrashPlan::with_crashes(
+            rng.f64() * 0.5,
+            gen::usize_in(rng, 0, 4) as u32,
+        );
+        let mut planned = base.clone();
+        planned.spawn =
+            SpawnPlan::with_rate(0.0, gen::usize_in(rng, 1, 8) as u32);
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_spawning || !engine.caps().supports_faults
+            {
+                continue;
+            }
+            let a = engine.run(&dag, &base, seed);
+            let b = engine.run(&dag, &planned, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
+}
+
+#[test]
+fn dynamic_outcomes_partition_the_expanded_task_set() {
+    use wukong::dag::{pre_expand, SpawnPlan};
+    use wukong::engine::select_engines;
+    // Totality under runtime spawning: the per-task meters are sized to
+    // the *expanded* task set (the staged ids are first-class tasks),
+    // and completed ⊕ failed partitions it exactly — a fault cascade
+    // that kills a spawning parent must report its staged block too,
+    // never silently drop it.
+    check(0x5B02, 8, |rng| {
+        let dag = random_dag(rng);
+        let mut cfg = random_config(rng);
+        let plan = SpawnPlan::recursive(
+            rng.f64() * 0.8 + 0.1,
+            gen::usize_in(rng, 1, 4) as u32,
+            gen::usize_in(rng, 1, 2) as u32,
+        );
+        cfg.spawn = plan;
+        cfg.faults = FaultPlan::with_retries(
+            rng.f64() * 0.4,
+            gen::usize_in(rng, 0, 2) as u32,
+        );
+        let seed = rng.next_u64();
+        let expanded = pre_expand(&dag, plan, seed);
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_spawning || !engine.caps().supports_faults
+            {
+                continue;
+            }
+            let m = engine.run(&dag, &cfg, seed).metrics;
+            let name = engine.name();
+            assert_eq!(m.per_task_attempts.len(), expanded.len(), "[{name}]");
+            assert_eq!(m.per_task_outcome.len(), expanded.len(), "[{name}]");
+            assert_eq!(m.per_task_exec.len(), expanded.len(), "[{name}]");
+            assert_eq!(
+                m.tasks_executed + m.failed_tasks,
+                expanded.len() as u64,
+                "[{name}] completed + failed must cover the expanded set"
+            );
+            for t in 0..expanded.len() {
+                match m.per_task_outcome[t] {
+                    wukong::metrics::TaskOutcome::Completed => assert_eq!(
+                        m.per_task_exec[t], 1,
+                        "[{name}] task {t}: effectively-once violated"
+                    ),
+                    wukong::metrics::TaskOutcome::Failed => assert_eq!(
+                        m.per_task_exec[t], 0,
+                        "[{name}] task {t}: failed yet executed"
+                    ),
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn serving_conserves_jobs_over_random_arrival_plans() {
     use wukong::serving::{run_serving, ArrivalPlan, FairnessPolicy};
     // Multi-tenant job conservation: under random Poisson/trace streams,
@@ -480,6 +575,40 @@ fn calendar_swap_is_invisible_under_faults_and_crashes() {
         let seed = rng.next_u64();
         for engine in select_engines(&[]).unwrap() {
             if !engine.caps().supports_faults {
+                continue;
+            }
+            let a = engine.run(&dag, &bucket, seed);
+            let b = engine.run(&dag, &heap, seed);
+            let name = engine.name();
+            assert_eq!(a.sim_events, b.sim_events, "[{name}]");
+            assert_eq!(a.peak_pending, b.peak_pending, "[{name}]");
+            assert_eq!(a.metrics, b.metrics, "[{name}]");
+        }
+    });
+}
+
+#[test]
+fn calendar_swap_is_invisible_under_spawning() {
+    use wukong::dag::SpawnPlan;
+    use wukong::engine::select_engines;
+    use wukong::sim::CalendarKind;
+    // Same determinism gate through the dynamic-DAG axis: runtime
+    // spawning enqueues fresh events mid-run (the calendar grows with
+    // the task set), and the heap and bucket structures must still
+    // agree bit-for-bit on the expanded execution.
+    check(0xB0C8, 8, |rng| {
+        let dag = random_dag(rng);
+        let mut bucket = random_config(rng);
+        bucket.spawn = SpawnPlan::recursive(
+            rng.f64() * 0.5 + 0.2,
+            gen::usize_in(rng, 1, 4) as u32,
+            gen::usize_in(rng, 1, 3) as u32,
+        );
+        let mut heap = bucket.clone();
+        heap.sim.calendar = CalendarKind::Heap;
+        let seed = rng.next_u64();
+        for engine in select_engines(&[]).unwrap() {
+            if !engine.caps().supports_spawning {
                 continue;
             }
             let a = engine.run(&dag, &bucket, seed);

@@ -5,7 +5,9 @@
 //! calendar queue's stress tier: a 1M-task fan-out is one giant
 //! same-window backlog (the overload-rebuild path), and the
 //! all-same-timestamp burst pins the worst case of every event landing
-//! in a single bucket.
+//! in a single bucket. Since PR 10 it is also the dynamic-DAG stress
+//! tier: a certain recursive spawn plan expands a 50k fan-out into a
+//! million runtime-spawned tasks under the same linear-event guard.
 
 use wukong::baselines::run_numpywren_full;
 use wukong::config::Config;
@@ -90,6 +92,38 @@ fn all_same_timestamp_burst_matches_the_heap_exactly() {
     assert_eq!(b.sim_events, h.sim_events, "event counts diverged");
     assert_eq!(b.peak_pending, h.peak_pending, "calendar depth diverged");
     assert_eq!(b.metrics, h.metrics, "burst run moved with the calendar");
+}
+
+#[test]
+fn runtime_spawning_to_a_million_tasks_stays_linear() {
+    use wukong::dag::{pre_expand, SpawnPlan};
+    // The dynamic-DAG stress tier: a certain recursive plan (p=1,
+    // fanout 4, depth 2) expands every base task into a 21-task subtree
+    // (1 + 4 + 16), so the large leg takes a 50k fan-out to 1,050,000
+    // runtime-spawned tasks. The expansion must keep the linear-event
+    // guard — spawning enqueues each staged task exactly once, never
+    // re-scans — and complete exactly the pre-expanded task count.
+    let mut cfg = scale_cfg();
+    let plan = SpawnPlan::recursive(1.0, 4, 2);
+    cfg.spawn = plan;
+    let small_dag = micro::serverless(12_500, 0);
+    let large_dag = micro::serverless(50_000, 0);
+    assert_eq!(pre_expand(&small_dag, plan, 1).len(), 262_500);
+    assert_eq!(pre_expand(&large_dag, plan, 1).len(), 1_050_000);
+    let small = run_wukong(&small_dag, &cfg, 1);
+    let large = run_wukong(&large_dag, &cfg, 1);
+    assert_eq!(small.metrics.tasks_executed, 262_500);
+    assert_eq!(large.metrics.tasks_executed, 1_050_000);
+    assert_eq!(large.metrics.per_task_exec.len(), 1_050_000);
+    assert!(large.metrics.per_task_exec.iter().all(|&c| c == 1));
+    let ratio = large.sim_events as f64 / small.sim_events as f64;
+    assert!(
+        ratio < 8.0,
+        "spawned events grew superlinearly: {} -> {} ({ratio:.2}x for 4x tasks)",
+        small.sim_events,
+        large.sim_events
+    );
+    assert!(ratio > 2.0, "suspiciously sublinear: {ratio:.2}x");
 }
 
 #[test]
